@@ -1,0 +1,21 @@
+"""Fig. 13: training-time acceleration (query sampling + cluster grouping)."""
+import time
+
+from . import common as C
+from repro.core.build import build_wisk
+
+
+def run():
+    rows = []
+    ds = C.dataset()
+    wl = C.workload("fs", C.DEFAULT_N, C.DEFAULT_M, "MIX", 0.0005, 5, 114)
+    test = C.workload("fs", C.DEFAULT_N, 24, "MIX", 0.0005, 5, 15)
+    for ratio in (0.1, 0.3, 1.0):
+        cfg = C.small_build_config(accelerated=ratio < 1.0, sample_ratio=ratio, cluster_ratio=0.2)
+        t0 = time.perf_counter()
+        art = build_wisk(ds, wl, cfg)
+        build_s = time.perf_counter() - t0
+        us, st = C.time_queries(art.index, ds, test)
+        rows.append(C.row(f"fig13/sample{ratio}", us,
+                          f"build_s={build_s:.1f};cost={st.total_cost:.0f}"))
+    return rows

@@ -1,0 +1,19 @@
+"""Fig. 21: action mask effect on DQN convergence + reward."""
+import numpy as np
+
+from . import common as C
+from repro.core.dqn import DQNConfig
+from repro.core.packing import PackingConfig, pack_one_level
+
+
+def run():
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 2, (14, 12)).astype(bool)
+    rows = []
+    for tag, mask in (("mask", True), ("no-mask", False)):
+        cfg = PackingConfig(epochs=10, action_mask=mask, dqn=DQNConfig())
+        res = pack_one_level(labels, cfg, seed=0)
+        final_loss = float(np.mean(res.losses[-10:])) if res.losses else float("nan")
+        rows.append(C.row(f"fig21/{tag}", 0.0,
+                          f"sum_reward={res.sum_rewards:.2f};final_loss={final_loss:.3f};n_upper={res.n_upper}"))
+    return rows

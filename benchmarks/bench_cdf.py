@@ -1,0 +1,19 @@
+"""Fig. 19: CDF model choice (gauss-only vs NN-only vs mixed)."""
+import time
+
+from . import common as C
+from repro.core.build import build_wisk
+
+
+def run():
+    rows = []
+    ds = C.dataset()
+    wl = C.workload("fs", C.DEFAULT_N, C.DEFAULT_M, "MIX", 0.0005, 5, 117)
+    test = C.workload("fs", C.DEFAULT_N, 24, "MIX", 0.0005, 5, 18)
+    for mode, force in (("mixed", None), ("gauss-only", "gauss"), ("nn-only", "nn")):
+        t0 = time.perf_counter()
+        art = build_wisk(ds, wl, C.small_build_config(cdf_force_class=force))
+        build_s = time.perf_counter() - t0
+        us, st = C.time_queries(art.index, ds, test)
+        rows.append(C.row(f"fig19/{mode}", us, f"build_s={build_s:.1f};cost={st.total_cost:.0f}"))
+    return rows

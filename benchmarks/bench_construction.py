@@ -1,0 +1,31 @@
+"""Table 4: index construction time (incl. Accelerated WISK)."""
+import time
+
+from . import common as C
+from repro.core.build import build_wisk
+from repro.baselines.conventional import build_grid_index, build_str_rtree
+from repro.baselines.learned import build_floodt, build_lsti
+
+
+def run():
+    rows = []
+    ds = C.dataset()
+    wl = C.workload("fs", C.DEFAULT_N, C.DEFAULT_M, "MIX", 0.0005, 5, 113)
+
+    t0 = time.perf_counter()
+    art = build_wisk(ds, wl, C.small_build_config())
+    rows.append(C.row("table4/wisk", (time.perf_counter() - t0) * 1e6,
+                      f"phase_times={ {k: round(v, 2) for k, v in art.timings.items()} }"))
+    t0 = time.perf_counter()
+    art_a = build_wisk(ds, wl, C.small_build_config(accelerated=True))
+    rows.append(C.row("table4/wisk-accelerated", (time.perf_counter() - t0) * 1e6, ""))
+    for name, fn in (
+        ("grid", lambda: build_grid_index(ds, 8)),
+        ("str-rtree", lambda: build_str_rtree(ds)),
+        ("flood-t", lambda: build_floodt(ds, wl)),
+        ("lsti", lambda: build_lsti(ds)),
+    ):
+        t0 = time.perf_counter()
+        fn()
+        rows.append(C.row(f"table4/{name}", (time.perf_counter() - t0) * 1e6, ""))
+    return rows

@@ -1,0 +1,27 @@
+"""Fig. 8: query time vs query distribution (UNI/LAP/GAU/MIX)."""
+from . import common as C
+from repro.baselines.conventional import build_grid_index, build_str_rtree
+from repro.baselines.learned import build_floodt, build_lsti, build_tfi, tfi_query
+
+
+def run():
+    rows = []
+    ds = C.dataset()
+    for dist in ("UNI", "LAP", "GAU", "MIX"):
+        test = C.workload("fs", C.DEFAULT_N, 24, dist, 0.0005, 5, 7)
+        art = C.wisk_index(dist=dist)
+        us, st = C.time_queries(art.index, ds, test)
+        rows.append(C.row(f"fig8/{dist}/wisk", us, f"cost={st.total_cost:.0f}"))
+        for name, idx in (
+            ("grid", build_grid_index(ds, 8)),
+            ("str-rtree", build_str_rtree(ds)),
+            ("flood-t", build_floodt(ds, C.workload("fs", C.DEFAULT_N, C.DEFAULT_M, dist, 0.0005, 5, 107))),
+            ("lsti", build_lsti(ds)),
+        ):
+            us, st = C.time_queries(idx, ds, test)
+            rows.append(C.row(f"fig8/{dist}/{name}", us, f"cost={st.total_cost:.0f}"))
+        import time
+        tfi = build_tfi(ds)
+        t0 = time.perf_counter(); st = tfi_query(tfi, ds, test); dt = time.perf_counter() - t0
+        rows.append(C.row(f"fig8/{dist}/tfi", dt / test.m * 1e6, f"cost={st.total_cost:.0f}"))
+    return rows

@@ -1,0 +1,49 @@
+"""Figs. 14/15: dynamic workload shift + data insertion with retraining."""
+import numpy as np
+
+from . import common as C
+from repro.core.build import build_wisk
+from repro.core.query import execute_serial
+from repro.core.types import GeoTextDataset
+
+
+def run():
+    rows = []
+    ds = C.dataset()
+    # Fig 14: workload shifts UNI -> LAP; retrain recovers
+    art = C.wisk_index(dist="UNI")
+    lap_test = C.workload("fs", C.DEFAULT_N, 24, "LAP", 0.0005, 5, 21)
+    us_stale, st_stale = C.time_queries(art.index, ds, lap_test)
+    lap_train = C.workload("fs", C.DEFAULT_N, C.DEFAULT_M, "LAP", 0.0005, 5, 121)
+    art2 = build_wisk(ds, lap_train, C.small_build_config())
+    us_re, st_re = C.time_queries(art2.index, ds, lap_test)
+    rows.append(C.row("fig14/stale-layout", us_stale, f"cost={st_stale.total_cost:.0f}"))
+    rows.append(C.row("fig14/retrained", us_re, f"cost={st_re.total_cost:.0f}"))
+    # Fig 15: insertion without/with retrain
+    rng = np.random.default_rng(0)
+    extra_ids = rng.choice(ds.n, 800)
+    jitter = rng.normal(0, 0.01, (800, 2)).astype(np.float32)
+    new_locs = np.clip(ds.locs[extra_ids] + jitter, 0, 1)
+    grown = GeoTextDataset.from_ids(
+        np.concatenate([ds.locs, new_locs]),
+        np.concatenate([ds.kw_ids, ds.kw_ids[extra_ids]]),
+        ds.vocab_size,
+    )
+    # naive insertion: objects assigned to nearest existing cluster (stale layout)
+    test = C.workload("fs", C.DEFAULT_N, 24, "MIX", 0.0005, 5, 22)
+    from repro.core.types import ClusterSet
+    from repro.core.index import assemble_index
+
+    cl = art.partition.clusters
+    cx = (cl.mbrs[:, 0] + cl.mbrs[:, 2]) / 2
+    cy = (cl.mbrs[:, 1] + cl.mbrs[:, 3]) / 2
+    d2 = (new_locs[:, 0:1] - cx[None]) ** 2 + (new_locs[:, 1:2] - cy[None]) ** 2
+    assign = np.concatenate([cl.assign, d2.argmin(1).astype(np.int32)])
+    stale = assemble_index(grown, ClusterSet.from_assignment(grown, assign))
+    us_n, st_n = C.time_queries(stale, grown, test)
+    rows.append(C.row("fig15/insert-no-retrain", us_n, f"cost={st_n.total_cost:.0f}"))
+    train = C.workload("fs", C.DEFAULT_N, C.DEFAULT_M, "MIX", 0.0005, 5, 122)
+    art3 = build_wisk(grown, train, C.small_build_config())
+    us_r, st_r = C.time_queries(art3.index, grown, test)
+    rows.append(C.row("fig15/insert-retrained", us_r, f"cost={st_r.total_cost:.0f}"))
+    return rows

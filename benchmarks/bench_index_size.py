@@ -1,0 +1,20 @@
+"""Table 3: index structure sizes."""
+from . import common as C
+from repro.baselines.conventional import build_grid_index, build_str_rtree
+from repro.baselines.learned import build_floodt, build_lsti, build_tfi
+
+
+def run():
+    rows = []
+    ds = C.dataset()
+    art = C.wisk_index()
+    rows.append(C.row("table3/wisk", 0.0, f"bytes={art.index.nbytes()}"))
+    for name, idx in (
+        ("grid", build_grid_index(ds, 8)),
+        ("str-rtree", build_str_rtree(ds)),
+        ("flood-t", build_floodt(ds, C.workload("fs", C.DEFAULT_N, C.DEFAULT_M, "MIX", 0.0005, 5, 112))),
+        ("lsti", build_lsti(ds)),
+    ):
+        rows.append(C.row(f"table3/{name}", 0.0, f"bytes={idx.nbytes()}"))
+    rows.append(C.row("table3/tfi", 0.0, f"bytes={build_tfi(ds).nbytes()}"))
+    return rows

@@ -1,0 +1,16 @@
+"""Fig. 20: effect of frequent-itemset mining vs #query keywords."""
+from . import common as C
+from repro.core.build import build_wisk
+
+
+def run():
+    rows = []
+    ds = C.dataset()
+    for nkw in (1, 3, 5):
+        wl = C.workload("fs", C.DEFAULT_N, C.DEFAULT_M, "MIX", 0.0005, nkw, 119)
+        test = C.workload("fs", C.DEFAULT_N, 24, "MIX", 0.0005, nkw, 20)
+        for tag, use in (("fi", True), ("no-fi", False)):
+            art = build_wisk(ds, wl, C.small_build_config(use_itemsets=use))
+            us, st = C.time_queries(art.index, ds, test)
+            rows.append(C.row(f"fig20/k{nkw}/{tag}", us, f"cost={st.total_cost:.0f}"))
+    return rows

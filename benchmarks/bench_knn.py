@@ -1,0 +1,35 @@
+"""Fig. 23 (appendix): Boolean kNN query support."""
+import time
+
+import numpy as np
+
+from . import common as C
+from repro.core.query import knn_query
+
+
+def run():
+    rows = []
+    ds = C.dataset()
+    art = C.wisk_index()
+    rng = np.random.default_rng(0)
+    test = C.workload("fs", C.DEFAULT_N, 16, "MIX", 0.0005, 5, 23)
+    for k in (5, 15, 30):
+        t0 = time.perf_counter()
+        for qi in range(test.m):
+            point = np.array([
+                (test.rects[qi, 0] + test.rects[qi, 2]) / 2,
+                (test.rects[qi, 1] + test.rects[qi, 3]) / 2,
+            ])
+            knn_query(art.index, ds, point, test.kw_bitmap[qi], k)
+        dt = (time.perf_counter() - t0) / test.m * 1e6
+        rows.append(C.row(f"fig23/k{k}/wisk", dt, ""))
+        # brute force reference
+        t0 = time.perf_counter()
+        for qi in range(test.m):
+            match = np.any(ds.kw_bitmap & test.kw_bitmap[qi][None], axis=1)
+            d2 = ((ds.locs - ds.locs[qi % ds.n]) ** 2).sum(1)
+            d2[~match] = np.inf
+            np.argsort(d2)[:k]
+        dt = (time.perf_counter() - t0) / test.m * 1e6
+        rows.append(C.row(f"fig23/k{k}/bruteforce", dt, ""))
+    return rows

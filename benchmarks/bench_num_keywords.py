@@ -1,0 +1,21 @@
+"""Fig. 10: query time vs number of query keywords."""
+from . import common as C
+from repro.baselines.conventional import build_grid_index
+from repro.baselines.learned import build_floodt
+
+
+def run():
+    rows = []
+    ds = C.dataset()
+    for nkw in (1, 3, 5, 7):
+        test = C.workload("fs", C.DEFAULT_N, 24, "MIX", 0.0005, nkw, 9)
+        art = C.wisk_index(nkw=nkw)
+        us, st = C.time_queries(art.index, ds, test)
+        rows.append(C.row(f"fig10/k{nkw}/wisk", us, f"cost={st.total_cost:.0f}"))
+        for name, idx in (
+            ("grid", build_grid_index(ds, 8)),
+            ("flood-t", build_floodt(ds, C.workload("fs", C.DEFAULT_N, C.DEFAULT_M, "MIX", 0.0005, nkw, 109))),
+        ):
+            us, st = C.time_queries(idx, ds, test)
+            rows.append(C.row(f"fig10/k{nkw}/{name}", us, f"cost={st.total_cost:.0f}"))
+    return rows

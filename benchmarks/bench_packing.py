@@ -1,0 +1,28 @@
+"""Figs. 16/17/18: processing-time split, packing method, hierarchy effect."""
+from . import common as C
+from repro.baselines.conventional import build_cdir_over_clusters
+from repro.core.index import flat_index
+from repro.core.query import execute_serial
+
+
+def run():
+    rows = []
+    ds = C.dataset()
+    test = C.workload("fs", C.DEFAULT_N, 24, "MIX", 0.0005, 5, 16)
+    art = C.wisk_index()
+    st = execute_serial(art.index, ds, test)
+    # Fig 16: leaf (verification) vs non-leaf (filtering) cost split
+    leaf_cost = float(st.verified.sum())
+    filt_cost = 0.1 * float(st.nodes_accessed.sum())
+    rows.append(C.row("fig16/leaf-vs-filter", 0.0,
+                      f"verify={leaf_cost:.0f};filter={filt_cost:.0f};leaf_share={leaf_cost/(leaf_cost+filt_cost):.2f}"))
+    # Fig 17: RL packing vs CDIR-style packing over the SAME bottom clusters
+    cdir = build_cdir_over_clusters(ds, art.partition.clusters)
+    st_c = execute_serial(cdir, ds, test)
+    rows.append(C.row("fig17/rl-packing", 0.0, f"nodes={st.nodes_accessed.sum()}"))
+    rows.append(C.row("fig17/cdir-packing", 0.0, f"nodes={st_c.nodes_accessed.sum()}"))
+    # Fig 18: flat vs hierarchical
+    st_f = execute_serial(flat_index(ds, art.partition.clusters), ds, test)
+    rows.append(C.row("fig18/flat", 0.0, f"nodes={st_f.nodes_accessed.sum()}"))
+    rows.append(C.row("fig18/hierarchy", 0.0, f"nodes={st.nodes_accessed.sum()}"))
+    return rows

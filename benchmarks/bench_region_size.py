@@ -1,0 +1,21 @@
+"""Fig. 9: query time vs query region size (fraction of space)."""
+from . import common as C
+from repro.baselines.conventional import build_grid_index
+from repro.baselines.learned import build_floodt
+
+
+def run():
+    rows = []
+    ds = C.dataset()
+    for region in (0.00005, 0.0005, 0.005):
+        test = C.workload("fs", C.DEFAULT_N, 24, "MIX", region, 5, 8)
+        art = C.wisk_index(region=region)
+        us, st = C.time_queries(art.index, ds, test)
+        rows.append(C.row(f"fig9/{region}/wisk", us, f"cost={st.total_cost:.0f}"))
+        for name, idx in (
+            ("grid", build_grid_index(ds, 8)),
+            ("flood-t", build_floodt(ds, C.workload("fs", C.DEFAULT_N, C.DEFAULT_M, "MIX", region, 5, 108))),
+        ):
+            us, st = C.time_queries(idx, ds, test)
+            rows.append(C.row(f"fig9/{region}/{name}", us, f"cost={st.total_cost:.0f}"))
+    return rows

@@ -1,0 +1,20 @@
+"""Fig. 12: robustness to query-distribution drift (train UNI, test drift)."""
+from . import common as C
+from repro.baselines.learned import build_floodt
+
+
+def run():
+    rows = []
+    ds = C.dataset()
+    art = C.wisk_index(dist="UNI")
+    floodt = build_floodt(ds, C.workload("fs", C.DEFAULT_N, C.DEFAULT_M, "UNI", 0.0005, 5, 111))
+    for ratio in (0.2, 0.6, 1.0):
+        m_lap = int(24 * ratio)
+        lap = C.workload("fs", C.DEFAULT_N, max(m_lap, 1), "LAP", 0.0005, 5, 12)
+        uni = C.workload("fs", C.DEFAULT_N, max(24 - m_lap, 1), "UNI", 0.0005, 5, 13)
+        test = lap.concat(uni) if m_lap < 24 else lap
+        us, st = C.time_queries(art.index, ds, test)
+        rows.append(C.row(f"fig12/lap{ratio}/wisk", us, f"cost={st.total_cost:.0f}"))
+        us, st = C.time_queries(floodt, ds, test)
+        rows.append(C.row(f"fig12/lap{ratio}/flood-t", us, f"cost={st.total_cost:.0f}"))
+    return rows

@@ -1,0 +1,19 @@
+"""Dry-run roofline summary (EXPERIMENTS.md section Roofline)."""
+from pathlib import Path
+
+from . import common as C
+
+
+def run():
+    rows = []
+    d = Path("experiments/dryrun")
+    if not d.exists():
+        return [C.row("roofline/missing", 0.0, "run launch/dryrun first")]
+    from repro.roofline.analysis import load_rows
+
+    for r in load_rows(str(d)):
+        rows.append(C.row(
+            f"roofline/{r.arch}/{r.shape}", 0.0,
+            f"compute_ms={r.compute_s*1e3:.2f};memory_ms={r.memory_s*1e3:.2f};"
+            f"collective_ms={r.collective_s*1e3:.2f};bound={r.bottleneck};useful={r.useful_ratio:.2f}"))
+    return rows

@@ -1,0 +1,18 @@
+"""Fig. 11: query time vs dataset size (OSM-like scaling)."""
+from . import common as C
+from repro.baselines.learned import build_floodt, build_lsti
+
+
+def run():
+    rows = []
+    for n in (2000, 8000, 24000):
+        ds = C.dataset("fs", n)
+        test = C.workload("fs", n, 24, "MIX", 0.0005, 5, 10)
+        art = C.wisk_index(n=n)
+        us, st = C.time_queries(art.index, ds, test)
+        rows.append(C.row(f"fig11/n{n}/wisk", us, f"cost={st.total_cost:.0f}"))
+        us, st = C.time_queries(build_floodt(ds, C.workload("fs", n, C.DEFAULT_M, "MIX", 0.0005, 5, 110)), ds, test)
+        rows.append(C.row(f"fig11/n{n}/flood-t", us, f"cost={st.total_cost:.0f}"))
+        us, st = C.time_queries(build_lsti(ds), ds, test)
+        rows.append(C.row(f"fig11/n{n}/lsti", us, f"cost={st.total_cost:.0f}"))
+    return rows

@@ -1,0 +1,24 @@
+"""WISK TPU-path serving throughput (batched kernels vs serial host)."""
+import time
+
+import jax.numpy as jnp
+
+from . import common as C
+from repro.serve.engine import BatchedWisk, retrieve_workload
+
+
+def run():
+    rows = []
+    ds = C.dataset()
+    art = C.wisk_index()
+    test = C.workload("fs", C.DEFAULT_N, 48, "MIX", 0.0005, 5, 24)
+    bw = BatchedWisk.build(art.index, ds)
+    out = retrieve_workload(bw, test, max_leaves=art.partition.clusters.k)  # warm + correctness
+    t0 = time.perf_counter()
+    for _ in range(3):
+        out = retrieve_workload(bw, test, max_leaves=art.partition.clusters.k)
+    dt = (time.perf_counter() - t0) / 3 / test.m * 1e6
+    rows.append(C.row("serving/batched-kernels", dt, f"overflow={int(out['overflow'].sum())}"))
+    us, st = C.time_queries(art.index, ds, test)
+    rows.append(C.row("serving/serial-host", us, f"cost={st.total_cost:.0f}"))
+    return rows

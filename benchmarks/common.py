@@ -1,0 +1,73 @@
+"""Shared benchmark context: cached datasets, workloads, and index builds.
+
+Benchmark scale is laptop-sized (single CPU core): datasets of a few
+thousand objects, workloads of tens of queries. Relative orderings (the
+paper's claims) are what we measure; EXPERIMENTS.md maps each benchmark to
+its paper table/figure.
+"""
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core.build import BuildConfig, build_wisk
+from repro.core.dqn import DQNConfig
+from repro.core.packing import PackingConfig
+from repro.core.partition import PartitionConfig
+from repro.core.query import execute_serial
+from repro.data.synth import make_dataset
+from repro.data.workloads import make_workload
+
+DEFAULT_N = 4000
+DEFAULT_M = 48
+
+
+@lru_cache(maxsize=8)
+def dataset(profile: str = "fs", n: int = DEFAULT_N, seed: int = 0):
+    return make_dataset(profile, n=n, seed=seed)
+
+
+@lru_cache(maxsize=32)
+def workload(profile: str, n: int, m: int, dist: str, region: float, nkw: int, seed: int):
+    ds = dataset(profile, n)
+    return make_workload(ds, m=m, dist=dist, region_frac=region, n_keywords=nkw, seed=seed)
+
+
+def small_build_config(**over) -> BuildConfig:
+    cfg = BuildConfig(
+        partition=PartitionConfig(max_clusters=32, n_steps=50, n_restarts=2),
+        packing=PackingConfig(epochs=4, max_label_queries=16, dqn=DQNConfig()),
+        cdf_train_steps=80,
+    )
+    for k, v in over.items():
+        setattr(cfg, k, v)
+    return cfg
+
+
+_WISK_CACHE: Dict[tuple, object] = {}
+
+
+def wisk_index(profile="fs", n=DEFAULT_N, dist="MIX", region=0.0005, nkw=5, seed=0, **cfg_over):
+    key = (profile, n, dist, region, nkw, seed, tuple(sorted(cfg_over.items())))
+    if key not in _WISK_CACHE:
+        ds = dataset(profile, n)
+        wl = workload(profile, n, DEFAULT_M, dist, region, nkw, seed + 100)
+        _WISK_CACHE[key] = build_wisk(ds, wl, small_build_config(**cfg_over))
+    return _WISK_CACHE[key]
+
+
+def time_queries(index, ds, wl, reps: int = 3) -> Tuple[float, object]:
+    """Mean per-query serial wall time (us) + stats."""
+    st = execute_serial(index, ds, wl)  # warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        st = execute_serial(index, ds, wl)
+    dt = (time.perf_counter() - t0) / reps
+    return dt / wl.m * 1e6, st
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.2f},{derived}"

@@ -1,0 +1,55 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. ``--only fig8`` filters.
+"""
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    "bench_distribution",   # Fig 8
+    "bench_region_size",    # Fig 9
+    "bench_num_keywords",   # Fig 10
+    "bench_scalability",    # Fig 11
+    "bench_robustness",     # Fig 12
+    "bench_index_size",     # Table 3
+    "bench_construction",   # Table 4
+    "bench_accel",          # Fig 13
+    "bench_dynamic",        # Figs 14/15
+    "bench_packing",        # Figs 16/17/18
+    "bench_cdf",            # Fig 19
+    "bench_itemsets",       # Fig 20
+    "bench_action_mask",    # Fig 21
+    "bench_knn",            # Fig 23 (appendix)
+    "bench_serving",        # TPU-path serving (DESIGN.md section 3)
+    "bench_roofline",       # EXPERIMENTS.md roofline summary
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter on module name")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{mod_name}")
+            for row in mod.run():
+                print(row, flush=True)
+            print(f"# {mod_name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures += 1
+            print(f"# {mod_name} FAILED", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

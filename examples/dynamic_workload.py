@@ -1,0 +1,30 @@
+"""Paper section 7.5 scenario: query distribution shifts, WISK retrains and
+recovers (Fig. 14 at laptop scale).
+
+    PYTHONPATH=src python examples/dynamic_workload.py
+"""
+from repro.core.build import BuildConfig, build_wisk
+from repro.core.partition import PartitionConfig
+from repro.core.query import execute_serial
+from repro.data.synth import make_dataset
+from repro.data.workloads import make_workload
+
+
+def main():
+    ds = make_dataset("fs", n=4000, seed=0)
+    cfgs = BuildConfig(partition=PartitionConfig(max_clusters=32, n_steps=50))
+    uni = make_workload(ds, m=64, dist="UNI", seed=1)
+    art = build_wisk(ds, uni, cfgs)
+    print("trained on UNI workload")
+    for dist in ("UNI", "LAP"):
+        test = make_workload(ds, m=32, dist=dist, seed=5)
+        st = execute_serial(art.index, ds, test)
+        print(f"  test {dist}: cost {st.total_cost:.0f}")
+    lap = make_workload(ds, m=64, dist="LAP", seed=2)
+    art2 = build_wisk(ds, lap, cfgs)
+    st = execute_serial(art2.index, ds, make_workload(ds, m=32, dist="LAP", seed=5))
+    print(f"after retraining on LAP: cost {st.total_cost:.0f} (recovered)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""The paper's own config: WISK index serving. ``serve_step`` is the batched
+SKR query pipeline (filter + verify) over a sharded index; see
+launch/dryrun.py for the production-mesh lowering."""
+import dataclasses
+
+
+@dataclasses.dataclass
+class WiskServeConfig:
+    name: str = "wisk"
+    n_queries: int = 4096       # global query batch
+    n_nodes: int = 65536        # index nodes at the filtered level
+    vocab: int = 4096           # keyword vocabulary (bitmap words = vocab/32)
+    candidate_cap: int = 4096   # per-query verification capacity
+    levels: int = 3
+
+
+def config() -> WiskServeConfig:
+    return WiskServeConfig()

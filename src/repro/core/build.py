@@ -1,0 +1,137 @@
+"""WISK construction (paper Alg. 1): end-to-end orchestration.
+
+Step 1: mine frequent itemsets, fit the CDF bank, learn the bottom clusters
+        with SGD split learning (Alg. 2).
+Step 2: label bottom clusters with (sampled) training queries and pack them
+        level by level with the DQN (Alg. 3).
+
+``accelerated=True`` enables the §6 accelerations: stratified query sampling
+(default 30%) and spectral-clustering grouping of bottom clusters (default
+20% ratio), matching the "Accelerated WISK" row of Table 4.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from .cdf import CDFBank, build_cdf_bank
+from .index import assemble_index
+from .itemsets import expand_queries, mine_frequent_itemsets
+from .packing import HierarchyResult, PackingConfig, build_hierarchy
+from .partition import PartitionConfig, PartitionResult, generate_bottom_clusters
+from .types import GeoTextDataset, Workload, WiskIndex, rects_intersect
+
+
+@dataclasses.dataclass
+class BuildConfig:
+    partition: PartitionConfig = dataclasses.field(default_factory=PartitionConfig)
+    packing: PackingConfig = dataclasses.field(default_factory=PackingConfig)
+    use_itemsets: bool = True
+    itemset_min_support: float = 1e-5  # paper §7.6.3: 0.01 per-mille
+    itemset_max_size: int = 3
+    cdf_force_class: Optional[str] = None  # None | "gauss" | "nn" (Fig. 19 ablation)
+    cdf_high_thresh: float = 0.001
+    cdf_low_thresh: float = 0.00001
+    cdf_train_steps: int = 300
+    accelerated: bool = False
+    sample_ratio: float = 0.3  # query sampling for training (Fig. 13a)
+    cluster_ratio: float = 0.2  # spectral grouping ratio (Fig. 13b)
+    build_hierarchy: bool = True
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class BuildArtifacts:
+    index: WiskIndex
+    bank: CDFBank
+    partition: PartitionResult
+    hierarchy: Optional[HierarchyResult]
+    timings: Dict[str, float]
+
+
+def cluster_query_labels(index_or_clusters, workload: Workload) -> np.ndarray:
+    """(K, m) bool: cluster intersects query rect AND shares a keyword."""
+    clusters = index_or_clusters
+    inter = rects_intersect(clusters.mbrs[:, None, :], workload.rects[None, :, :])
+    kw = np.any(
+        clusters.bitmaps[:, None, :] & workload.kw_bitmap[None, :, :] != 0, axis=-1
+    )
+    return inter & kw
+
+
+def build_wisk(
+    dataset: GeoTextDataset,
+    workload: Workload,
+    config: Optional[BuildConfig] = None,
+) -> BuildArtifacts:
+    cfg = config or BuildConfig()
+    rng = np.random.default_rng(cfg.seed)
+    timings: Dict[str, float] = {}
+
+    train_wl = workload
+    if cfg.accelerated and workload.m > 8:
+        from ..data.workloads import stratified_sample
+
+        idx = stratified_sample(workload, cfg.sample_ratio, seed=cfg.seed)
+        train_wl = workload.subset(idx)
+
+    t0 = time.perf_counter()
+    itemsets, members = ([], [])
+    if cfg.use_itemsets:
+        itemsets, members = mine_frequent_itemsets(
+            dataset, min_support=cfg.itemset_min_support, max_size=cfg.itemset_max_size
+        )
+    timings["itemset_mining"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    bank = build_cdf_bank(
+        dataset,
+        itemsets=itemsets,
+        itemset_members=members,
+        high_thresh=cfg.cdf_high_thresh,
+        low_thresh=cfg.cdf_low_thresh,
+        n_steps=cfg.cdf_train_steps,
+        seed=cfg.seed,
+        force_class=cfg.cdf_force_class,
+    )
+    timings["cdf_training"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    q_entries, q_signs = expand_queries(
+        train_wl, itemsets, dataset.vocab_size, use_itemsets=cfg.use_itemsets
+    )
+    part = generate_bottom_clusters(dataset, train_wl, bank, q_entries, q_signs, cfg.partition)
+    timings["partitioning"] = time.perf_counter() - t0
+
+    hierarchy = None
+    if cfg.build_hierarchy and part.clusters.k > cfg.packing.min_nodes:
+        t0 = time.perf_counter()
+        # label clusters with (sampled) queries for the packing state
+        mq = min(cfg.packing.max_label_queries, train_wl.m)
+        sel = rng.choice(train_wl.m, size=mq, replace=False) if train_wl.m > mq else np.arange(train_wl.m)
+        lbl_wl = train_wl.subset(np.sort(sel))
+        labels = cluster_query_labels(part.clusters, lbl_wl)
+        pk = cfg.packing
+        if cfg.accelerated:
+            pk = dataclasses.replace(pk, spectral_ratio=cfg.cluster_ratio)
+        hierarchy = build_hierarchy(labels, part.clusters.mbrs, pk)
+        timings["packing"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    index = assemble_index(
+        dataset,
+        part.clusters,
+        hierarchy,
+        meta=dict(
+            n_clusters=part.clusters.k,
+            n_itemsets=len(itemsets),
+            accelerated=cfg.accelerated,
+            cdf_loss=bank.train_loss,
+        ),
+    )
+    timings["assembly"] = time.perf_counter() - t0
+    timings["total"] = sum(timings.values())
+    return BuildArtifacts(index=index, bank=bank, partition=part, hierarchy=hierarchy, timings=timings)

@@ -1,0 +1,286 @@
+"""Keyword-conditioned CDF models (paper §4.3.1 + §6 "Choice of CDF models").
+
+Per keyword ``k`` and spatial dimension ``d`` we model the marginal CDF
+``F_k^d`` of the locations of objects containing ``k``. Keywords are
+stratified by frequency (thresholds are *fractions of the dataset size*,
+matching the paper's percentage bands):
+
+* high   (freq ratio >= ``high_thresh``):  4-layer MLP (1->16->16->16->1),
+  ReLU hidden, sigmoid head, trained with MSE on empirical quantiles --
+  trained for *all* high keywords at once via ``vmap`` (a bank of MLPs).
+* medium (``low_thresh`` <= ratio < ``high_thresh``): Gaussian CDF with
+  moment-matched (mu, sigma).
+* low    (< ``low_thresh``): ignored (estimate 0), per the paper.
+
+The bank also hosts *frequent itemset* entries (appended virtual keywords)
+so multi-keyword queries can be corrected by inclusion-exclusion (§6).
+
+Everything is stored as stacked arrays so count estimation is a single
+vectorized function usable inside jitted split-learning losses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .types import GeoTextDataset
+
+CLASS_LOW, CLASS_MED, CLASS_HIGH = 0, 1, 2
+
+
+def mlp_init(key: jax.Array, widths: Sequence[int]) -> Dict[str, jax.Array]:
+    """Initialize one CDF MLP; widths e.g. (1, 16, 16, 16, 1)."""
+    params = {}
+    keys = jax.random.split(key, len(widths) - 1)
+    for i, (fan_in, fan_out) in enumerate(zip(widths[:-1], widths[1:])):
+        params[f"w{i}"] = jax.random.normal(keys[i], (fan_in, fan_out)) * jnp.sqrt(2.0 / fan_in)
+        params[f"b{i}"] = jnp.zeros((fan_out,))
+    return params
+
+
+def mlp_apply(params: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    """x: (..., 1) -> (...,) in [0,1]."""
+    h = x
+    n_layers = len(params) // 2
+    for i in range(n_layers):
+        h = h @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    return jax.nn.sigmoid(h[..., 0])
+
+
+def _empirical_quantiles(values: np.ndarray, n_points: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Return (x, F(x)) pairs: quantile coordinates and CDF targets."""
+    v = np.sort(values)
+    # targets: mid-rank CDF, plus anchors at domain edges
+    qs = (np.arange(n_points) + 0.5) / n_points
+    xs = np.quantile(v, qs)
+    xs = np.concatenate([[0.0], xs, [1.0]])
+    ys = np.concatenate([[0.0], qs, [1.0]])
+    return xs.astype(np.float32), ys.astype(np.float32)
+
+
+@dataclasses.dataclass
+class CDFBank:
+    """Stacked CDF models over ``n_entries = V + n_itemsets`` entries.
+
+    cls:      (E,) int8 class per entry
+    count:    (E,) float32 #objects containing the entry's keyword(-set)
+    gauss:    (E, 2, 2) float32 (mu, sigma) per dim (valid where cls==MED)
+    nn_slot:  (E,) int32 slot into the stacked NN params, -1 if none
+    nn_params: pytree of arrays with leading dim = n_high (valid where cls==HIGH)
+    """
+
+    cls: np.ndarray
+    count: np.ndarray
+    gauss: np.ndarray
+    nn_slot: np.ndarray
+    nn_params: Optional[Dict[str, jax.Array]]
+    vocab_size: int
+    train_loss: float = 0.0
+
+    @property
+    def n_entries(self) -> int:
+        return int(self.cls.shape[0])
+
+    def jax_tables(self) -> Dict[str, jax.Array]:
+        """Device-friendly views used by estimators inside jit."""
+        return dict(
+            cls=jnp.asarray(self.cls, jnp.int32),
+            count=jnp.asarray(self.count, jnp.float32),
+            gauss=jnp.asarray(self.gauss, jnp.float32),
+            nn_slot=jnp.asarray(self.nn_slot, jnp.int32),
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps",))
+def _train_mlp_bank(
+    params: Dict[str, jax.Array],
+    xs: jax.Array,  # (B, P) quantile coords per model
+    ys: jax.Array,  # (B, P) cdf targets
+    lr: float = 0.05,
+    n_steps: int = 300,
+) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """Adam on MSE, vmapped over the bank dimension B."""
+
+    def loss_fn(p, x, y):
+        pred = jax.vmap(lambda pi, xi: mlp_apply(pi, xi[:, None]))(p, x)
+        return jnp.mean((pred - y) ** 2)
+
+    # Adam state
+    m0 = jax.tree.map(jnp.zeros_like, params)
+    v0 = jax.tree.map(jnp.zeros_like, params)
+
+    def step(carry, i):
+        p, m, v = carry
+        l, g = jax.value_and_grad(loss_fn)(p, xs, ys)
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        t = i + 1
+        mhat = jax.tree.map(lambda a: a / (1 - 0.9**t), m)
+        vhat = jax.tree.map(lambda a: a / (1 - 0.999**t), v)
+        p = jax.tree.map(lambda a, mh, vh: a - lr * mh / (jnp.sqrt(vh) + 1e-8), p, mhat, vhat)
+        return (p, m, v), l
+
+    (params, _, _), losses = jax.lax.scan(step, (params, m0, v0), jnp.arange(n_steps))
+    return params, losses[-1]
+
+
+def build_cdf_bank(
+    dataset: GeoTextDataset,
+    itemsets: Optional[List[Tuple[int, ...]]] = None,
+    itemset_members: Optional[List[np.ndarray]] = None,
+    high_thresh: float = 0.001,  # >=0.1% of objects -> NN (paper: >=0.1%)
+    low_thresh: float = 0.00001,  # <0.001% -> ignored
+    n_points: int = 128,
+    n_steps: int = 300,
+    hidden: int = 16,
+    n_hidden_layers: int = 2,
+    seed: int = 0,
+    force_class: Optional[str] = None,  # "gauss" | "nn" for the ablation
+) -> CDFBank:
+    """Fit the stratified CDF bank for all keywords (+ frequent itemsets).
+
+    ``itemsets`` are tuples of keyword ids; ``itemset_members[i]`` are the
+    object ids containing *all* keywords of itemset i (from the miner).
+    """
+    V = dataset.vocab_size
+    itemsets = itemsets or []
+    itemset_members = itemset_members or []
+    E = V + len(itemsets)
+    n = max(dataset.n, 1)
+
+    # member object lists per entry
+    member_lists: List[np.ndarray] = [None] * E  # type: ignore
+    rows, cols = np.nonzero(dataset.kw_ids >= 0)
+    ids = dataset.kw_ids[rows, cols]
+    order = np.argsort(ids, kind="stable")
+    ids_s, rows_s = ids[order], rows[order]
+    uk, start = np.unique(ids_s, return_index=True)
+    bounds = np.append(start, ids_s.size)
+    for j, k in enumerate(uk):
+        member_lists[int(k)] = rows_s[bounds[j] : bounds[j + 1]]
+    for i, mem in enumerate(itemset_members):
+        member_lists[V + i] = np.asarray(mem, dtype=np.int64)
+
+    counts = np.array([0 if m is None else m.size for m in member_lists], dtype=np.float32)
+    ratio = counts / n
+    cls = np.full(E, CLASS_LOW, dtype=np.int8)
+    cls[(ratio >= low_thresh) & (counts >= 2)] = CLASS_MED
+    cls[(ratio >= high_thresh) & (counts >= 4)] = CLASS_HIGH
+    if force_class == "gauss":
+        cls[cls == CLASS_HIGH] = CLASS_MED
+    elif force_class == "nn":
+        cls[(cls == CLASS_MED) & (counts >= 4)] = CLASS_HIGH
+
+    gauss = np.zeros((E, 2, 2), dtype=np.float32)
+    gauss[:, 1, :] = 1.0  # sd row defaults to 1 (safe for unfitted entries)
+    nn_slot = np.full(E, -1, dtype=np.int32)
+
+    high_ids = np.nonzero(cls == CLASS_HIGH)[0]
+    med_ids = np.nonzero(cls == CLASS_MED)[0]
+
+    for e in med_ids:
+        pts = dataset.locs[member_lists[e]]
+        mu = pts.mean(axis=0)
+        sd = pts.std(axis=0) + 1e-4
+        gauss[e, 0] = mu
+        gauss[e, 1] = sd
+
+    nn_params = None
+    final_loss = 0.0
+    if high_ids.size:
+        nn_slot[high_ids] = np.arange(high_ids.size, dtype=np.int32)
+        # build quantile training data: (n_high*2, P) -- x and y dims interleaved
+        P = n_points
+        xs = np.zeros((high_ids.size, 2, P + 2), dtype=np.float32)
+        ys = np.zeros((high_ids.size, 2, P + 2), dtype=np.float32)
+        for j, e in enumerate(high_ids):
+            pts = dataset.locs[member_lists[e]]
+            for d in range(2):
+                xs[j, d], ys[j, d] = _empirical_quantiles(pts[:, d], P)
+        widths = (1,) + (hidden,) * n_hidden_layers + (1,)
+        key = jax.random.PRNGKey(seed)
+        base = mlp_init(key, widths)
+        B = high_ids.size * 2
+        params = jax.tree.map(lambda a: jnp.broadcast_to(a, (B,) + a.shape).copy(), base)
+        # per-model jitter so models are not identical
+        keys = jax.random.split(key, B)
+        jitter = jax.vmap(lambda k: mlp_init(k, widths))(keys)
+        params = jax.tree.map(lambda a, b: a * 0.0 + b, params, jitter)
+        params, loss = _train_mlp_bank(
+            params, jnp.asarray(xs.reshape(B, -1)), jnp.asarray(ys.reshape(B, -1)), n_steps=n_steps
+        )
+        nn_params = params
+        final_loss = float(loss)
+
+    return CDFBank(
+        cls=cls,
+        count=counts,
+        gauss=gauss,
+        nn_slot=nn_slot,
+        nn_params=nn_params,
+        vocab_size=V,
+        train_loss=final_loss,
+    )
+
+
+def _gauss_cdf(x: jax.Array, mu: jax.Array, sd: jax.Array) -> jax.Array:
+    sd = jnp.maximum(sd, 1e-5)  # guard: sd=0 would make erf'(inf) NaN-poison grads
+    return 0.5 * (1.0 + jax.lax.erf((x - mu) / (sd * jnp.sqrt(2.0))))
+
+
+def eval_cdf(
+    bank_tables: Dict[str, jax.Array],
+    nn_params: Optional[Dict[str, jax.Array]],
+    entry_ids: jax.Array,  # (B,) int32 entries (keywords or itemset slots), -1 = invalid
+    x: jax.Array,  # (B,) coordinates
+    dim: int,  # 0 = x, 1 = y
+) -> jax.Array:
+    """F_e^dim(x) per entry. Invalid/low entries return 0 contribution later
+    (the *count* estimator multiplies by entry count which is 0-masked)."""
+    eids = jnp.maximum(entry_ids, 0)
+    cls = bank_tables["cls"][eids]
+    mu = bank_tables["gauss"][eids, 0, dim]
+    sd = bank_tables["gauss"][eids, 1, dim]
+    g = _gauss_cdf(x, mu, sd)
+    if nn_params is not None:
+        slot = jnp.maximum(bank_tables["nn_slot"][eids], 0) * 2 + dim
+        p = jax.tree.map(lambda a: a[slot], nn_params)
+        nn = jax.vmap(lambda pi, xi: mlp_apply(pi, xi[None, None])[0])(p, x)
+        out = jnp.where(cls == CLASS_HIGH, nn, g)
+    else:
+        out = g
+    # clamp to [0,1] and enforce boundary behaviour
+    out = jnp.clip(out, 0.0, 1.0)
+    return jnp.where(entry_ids < 0, 0.0, out)
+
+
+def est_count_rect(
+    bank_tables: Dict[str, jax.Array],
+    nn_params: Optional[Dict[str, jax.Array]],
+    entry_ids: jax.Array,  # (B,)
+    rect: jax.Array,  # (B, 4) or (4,)
+) -> jax.Array:
+    """Estimated #objects containing entry e inside rect (Lemma 4.2):
+    n_e * (Fx(xu)-Fx(xl)) * (Fy(yu)-Fy(yl)). Low-class entries contribute 0.
+    """
+    rect = jnp.broadcast_to(rect, entry_ids.shape + (4,))
+    eids = jnp.maximum(entry_ids, 0)
+    cnt = bank_tables["count"][eids]
+    cls = bank_tables["cls"][eids]
+    fx = eval_cdf(bank_tables, nn_params, entry_ids, rect[..., 2], 0) - eval_cdf(
+        bank_tables, nn_params, entry_ids, rect[..., 0], 0
+    )
+    fy = eval_cdf(bank_tables, nn_params, entry_ids, rect[..., 3], 1) - eval_cdf(
+        bank_tables, nn_params, entry_ids, rect[..., 1], 1
+    )
+    est = cnt * jnp.clip(fx, 0.0, 1.0) * jnp.clip(fy, 0.0, 1.0)
+    valid = (entry_ids >= 0) & (cls != CLASS_LOW)
+    return jnp.where(valid, est, 0.0)

@@ -1,0 +1,149 @@
+"""Deep Q-Network (paper §5.2/§5.3) in pure JAX.
+
+Policy / target networks with soft updates (Eq. 7, tau=0.001), experience
+replay (capacity 256 per §7.1), epsilon-greedy with decay, duplicate-action
+masking, and SmoothL1 (sum reduction) loss per §7.6.4 on the TD target
+(Eq. 6). The replay buffer and the train step are jitted; the environment
+loop lives in ``packing.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def q_init(key: jax.Array, state_dim: int, n_actions: int, hidden: int = 64) -> Dict:
+    """3-layer MLP (paper: 3 layers, 64 hidden units)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    def dense(k, i, o):
+        return dict(w=jax.random.normal(k, (i, o)) * jnp.sqrt(2.0 / i), b=jnp.zeros((o,)))
+
+    return dict(l0=dense(k1, state_dim, hidden), l1=dense(k2, hidden, hidden), l2=dense(k3, hidden, n_actions))
+
+
+def q_apply(params: Dict, s: jax.Array) -> jax.Array:
+    h = jax.nn.relu(s @ params["l0"]["w"] + params["l0"]["b"])
+    h = jax.nn.relu(h @ params["l1"]["w"] + params["l1"]["b"])
+    return h @ params["l2"]["w"] + params["l2"]["b"]
+
+
+class Replay(NamedTuple):
+    s: jax.Array  # (C, D)
+    a: jax.Array  # (C,)
+    r: jax.Array  # (C,)
+    s2: jax.Array  # (C, D)
+    mask2: jax.Array  # (C, A) action mask at s2
+    done: jax.Array  # (C,)
+    ptr: jax.Array  # ()
+    size: jax.Array  # ()
+
+
+def replay_init(capacity: int, state_dim: int, n_actions: int) -> Replay:
+    return Replay(
+        s=jnp.zeros((capacity, state_dim)),
+        a=jnp.zeros((capacity,), jnp.int32),
+        r=jnp.zeros((capacity,)),
+        s2=jnp.zeros((capacity, state_dim)),
+        mask2=jnp.zeros((capacity, n_actions), bool),
+        done=jnp.zeros((capacity,), bool),
+        ptr=jnp.zeros((), jnp.int32),
+        size=jnp.zeros((), jnp.int32),
+    )
+
+
+@jax.jit
+def replay_add(buf: Replay, s, a, r, s2, mask2, done) -> Replay:
+    i = buf.ptr
+    cap = buf.s.shape[0]
+    return Replay(
+        s=buf.s.at[i].set(s),
+        a=buf.a.at[i].set(a),
+        r=buf.r.at[i].set(r),
+        s2=buf.s2.at[i].set(s2),
+        mask2=buf.mask2.at[i].set(mask2),
+        done=buf.done.at[i].set(done),
+        ptr=(i + 1) % cap,
+        size=jnp.minimum(buf.size + 1, cap),
+    )
+
+
+def smooth_l1(x: jax.Array) -> jax.Array:
+    ax = jnp.abs(x)
+    return jnp.where(ax < 1.0, 0.5 * x * x, ax - 0.5)
+
+
+@dataclasses.dataclass(frozen=True)
+class DQNConfig:
+    gamma: float = 0.99
+    tau: float = 0.001
+    lr: float = 1e-3
+    batch_size: int = 32
+    capacity: int = 256
+    hidden: int = 64
+    eps_start: float = 1.0
+    eps_end: float = 0.05
+    eps_decay: float = 0.98  # per-episode multiplicative decay
+
+
+class TrainState(NamedTuple):
+    params: Dict
+    target: Dict
+    opt_m: Dict
+    opt_v: Dict
+    step: jax.Array
+
+
+def train_state_init(key: jax.Array, state_dim: int, n_actions: int, cfg: DQNConfig) -> TrainState:
+    p = q_init(key, state_dim, n_actions, cfg.hidden)
+    return TrainState(
+        params=p,
+        target=jax.tree.map(jnp.copy, p),
+        opt_m=jax.tree.map(jnp.zeros_like, p),
+        opt_v=jax.tree.map(jnp.zeros_like, p),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def dqn_train_step(ts: TrainState, buf: Replay, key: jax.Array, cfg: DQNConfig) -> Tuple[TrainState, jax.Array]:
+    """One gradient step on a replay batch (Eq. 6 with SmoothL1-sum)."""
+    idx = jax.random.randint(key, (cfg.batch_size,), 0, jnp.maximum(buf.size, 1))
+    s, a, r, s2, m2, dn = (buf.s[idx], buf.a[idx], buf.r[idx], buf.s2[idx], buf.mask2[idx], buf.done[idx])
+
+    q_next = q_apply(ts.target, s2)
+    q_next = jnp.where(m2, q_next, -jnp.inf)
+    max_next = jnp.max(q_next, axis=-1)
+    max_next = jnp.where(jnp.isfinite(max_next), max_next, 0.0)
+    tgt = r + cfg.gamma * jnp.where(dn, 0.0, max_next)
+
+    def loss_fn(p):
+        q = q_apply(p, s)
+        qa = jnp.take_along_axis(q, a[:, None], axis=-1)[:, 0]
+        return jnp.sum(smooth_l1(qa - jax.lax.stop_gradient(tgt)))
+
+    loss, g = jax.value_and_grad(loss_fn)(ts.params)
+    t = ts.step + 1
+    m = jax.tree.map(lambda a_, b_: 0.9 * a_ + 0.1 * b_, ts.opt_m, g)
+    v = jax.tree.map(lambda a_, b_: 0.999 * a_ + 0.001 * b_ * b_, ts.opt_v, g)
+    params = jax.tree.map(
+        lambda p_, m_, v_: p_
+        - cfg.lr * (m_ / (1 - 0.9 ** t)) / (jnp.sqrt(v_ / (1 - 0.999 ** t)) + 1e-8),
+        ts.params,
+        m,
+        v,
+    )
+    # soft target update (Eq. 7)
+    target = jax.tree.map(lambda tp, pp: (1 - cfg.tau) * tp + cfg.tau * pp, ts.target, params)
+    return TrainState(params, target, m, v, t), loss
+
+
+@jax.jit
+def greedy_action(params: Dict, s: jax.Array, mask: jax.Array) -> jax.Array:
+    q = q_apply(params, s)
+    return jnp.argmax(jnp.where(mask, q, -jnp.inf))

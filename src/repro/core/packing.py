@@ -1,0 +1,258 @@
+"""Bottom-up packing with reinforcement learning (paper §5 + Alg. 3).
+
+One level of packing is an MDP: N bottom nodes are inserted sequentially
+into at most N upper-node slots. The state is the paper's
+``(m+1)*N + m``-vector: for each upper slot its m-dim query-label bitmap and
+a child count, plus the label of the incoming bottom node. Reward (Eq. 5) is
+the reduction in the average number of accessed nodes per query. Duplicated
+empty-slot actions are masked (§6 "Action mask in RL").
+
+Accelerations from §6 are implemented here too: stratified sampling of the
+training queries (``data/workloads.py``) and spectral-clustering grouping of
+bottom clusters before packing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .dqn import (
+    DQNConfig,
+    TrainState,
+    dqn_train_step,
+    greedy_action,
+    q_apply,
+    replay_add,
+    replay_init,
+    train_state_init,
+)
+
+
+@dataclasses.dataclass
+class PackingConfig:
+    dqn: DQNConfig = dataclasses.field(default_factory=DQNConfig)
+    epochs: int = 24
+    max_label_queries: int = 48  # m used for state encoding (stratified-sampled)
+    min_nodes: int = 3  # stop building levels at or below this width
+    max_levels: int = 6
+    action_mask: bool = True
+    spectral_ratio: float = 1.0  # <1.0 groups bottom clusters first (accel §6)
+    seed: int = 0
+
+
+class _Env:
+    """One-level packing environment (numpy; tiny state spaces)."""
+
+    def __init__(self, labels: np.ndarray, use_mask: bool):
+        self.labels = labels.astype(bool)  # (N, m)
+        self.N, self.m = labels.shape
+        self.use_mask = use_mask
+        self.reset()
+
+    def reset(self) -> np.ndarray:
+        self.upper = np.zeros((self.N, self.m), dtype=bool)
+        self.counts = np.zeros(self.N, dtype=np.int64)
+        self.t = 0
+        return self.state()
+
+    def state(self) -> np.ndarray:
+        nxt = self.labels[self.t] if self.t < self.N else np.zeros(self.m, bool)
+        per_upper = np.concatenate(
+            [self.upper.astype(np.float32), (self.counts[:, None] > 0).astype(np.float32)], axis=1
+        )
+        return np.concatenate([per_upper.reshape(-1), nxt.astype(np.float32)])
+
+    def mask(self) -> np.ndarray:
+        if not self.use_mask:
+            return np.ones(self.N, dtype=bool)
+        m = self.counts > 0
+        empties = np.nonzero(~m)[0]
+        if empties.size:
+            m[empties[0]] = True  # expose exactly one empty slot
+        return m
+
+    def avg_accesses(self) -> float:
+        """Average #upper nodes a query must traverse into (labeled, nonempty)."""
+        if self.m == 0:
+            return 0.0
+        act = self.upper[self.counts > 0]
+        if act.size == 0:
+            return 0.0
+        return float(act.sum(axis=0).mean())
+
+    def step(self, a: int) -> Tuple[np.ndarray, float, bool]:
+        before = self.avg_accesses()
+        self.upper[a] |= self.labels[self.t]
+        self.counts[a] += 1
+        self.t += 1
+        after = self.avg_accesses()
+        done = self.t >= self.N
+        return self.state(), before - after, done
+
+    def assignment(self) -> np.ndarray:
+        raise NotImplementedError
+
+
+def _run_episode(env: _Env, ts: TrainState, buf, key, eps: float, cfg: PackingConfig, train: bool):
+    """Play one packing episode; returns (assignment, sum_rewards, buf, ts, losses)."""
+    s = env.reset()
+    assign = np.zeros(env.N, dtype=np.int32)
+    total_r = 0.0
+    losses = []
+    for t in range(env.N):
+        mask = env.mask()
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        if train and float(jax.random.uniform(k1)) < eps:
+            valid = np.nonzero(mask)[0]
+            a = int(valid[int(jax.random.randint(k2, (), 0, valid.size))])
+        else:
+            a = int(greedy_action(ts.params, jnp.asarray(s), jnp.asarray(mask)))
+        s2, r, done = env.step(a)
+        assign[t] = a
+        total_r += r
+        if train:
+            mask2 = env.mask() if not done else np.zeros(env.N, bool)
+            buf = replay_add(
+                buf,
+                jnp.asarray(s),
+                jnp.int32(a),
+                jnp.float32(r),
+                jnp.asarray(s2),
+                jnp.asarray(mask2),
+                jnp.bool_(done),
+            )
+            if int(buf.size) >= cfg.dqn.batch_size:
+                ts, loss = dqn_train_step(ts, buf, k3, cfg.dqn)
+                losses.append(float(loss))
+        s = s2
+    return assign, total_r, buf, ts, losses
+
+
+@dataclasses.dataclass
+class LevelPackResult:
+    assign: np.ndarray  # (N,) upper slot per bottom node
+    n_upper: int
+    sum_rewards: float
+    losses: List[float]
+    reward_curve: List[float]
+
+
+def pack_one_level(
+    labels: np.ndarray, cfg: PackingConfig, seed: int = 0
+) -> LevelPackResult:
+    """Train a DQN for one level and return the greedy packing."""
+    N, m = labels.shape
+    env = _Env(labels, cfg.action_mask)
+    state_dim = (m + 1) * N + m
+    key = jax.random.PRNGKey(seed)
+    key, k0 = jax.random.split(key)
+    ts = train_state_init(k0, state_dim, N, cfg.dqn)
+    buf = replay_init(cfg.dqn.capacity, state_dim, N)
+    eps = cfg.dqn.eps_start
+    losses: List[float] = []
+    curve: List[float] = []
+    for ep in range(cfg.epochs):
+        key, k = jax.random.split(key)
+        _, total_r, buf, ts, ls = _run_episode(env, ts, buf, k, eps, cfg, train=True)
+        losses.extend(ls)
+        curve.append(total_r)
+        eps = max(cfg.dqn.eps_end, eps * cfg.dqn.eps_decay)
+    key, k = jax.random.split(key)
+    assign, total_r, _, _, _ = _run_episode(env, ts, buf, k, 0.0, cfg, train=False)
+    # compact slot ids
+    used = np.unique(assign)
+    remap = {int(u): i for i, u in enumerate(used)}
+    assign = np.array([remap[int(a)] for a in assign], dtype=np.int32)
+    return LevelPackResult(assign, len(used), total_r, losses, curve)
+
+
+def spectral_group(mbrs: np.ndarray, n_groups: int, seed: int = 0) -> np.ndarray:
+    """Spectral clustering on MBR corner features (§6 accel). Returns group ids."""
+    n = mbrs.shape[0]
+    n_groups = max(1, min(n_groups, n))
+    if n_groups >= n:
+        return np.arange(n, dtype=np.int32)
+    feats = mbrs.astype(np.float64)
+    d2 = ((feats[:, None, :] - feats[None, :, :]) ** 2).sum(-1)
+    sigma2 = np.median(d2[d2 > 0]) + 1e-12 if np.any(d2 > 0) else 1.0
+    A = np.exp(-d2 / sigma2)
+    np.fill_diagonal(A, 0.0)
+    deg = A.sum(1)
+    dinv = 1.0 / np.sqrt(np.maximum(deg, 1e-12))
+    L = np.eye(n) - dinv[:, None] * A * dinv[None, :]
+    vals, vecs = np.linalg.eigh(L)
+    U = vecs[:, :n_groups]
+    U = U / (np.linalg.norm(U, axis=1, keepdims=True) + 1e-12)
+    # k-means
+    rng = np.random.default_rng(seed)
+    centers = U[rng.choice(n, n_groups, replace=False)]
+    lab = np.zeros(n, dtype=np.int32)
+    for _ in range(25):
+        dist = ((U[:, None, :] - centers[None, :, :]) ** 2).sum(-1)
+        new = dist.argmin(1).astype(np.int32)
+        if np.array_equal(new, lab):
+            break
+        lab = new
+        for g in range(n_groups):
+            sel = lab == g
+            if sel.any():
+                centers[g] = U[sel].mean(0)
+    # compact
+    used = np.unique(lab)
+    remap = {int(u): i for i, u in enumerate(used)}
+    return np.array([remap[int(x)] for x in lab], dtype=np.int32)
+
+
+@dataclasses.dataclass
+class HierarchyResult:
+    parents: List[np.ndarray]  # per built level: parent slot of each lower node
+    level_labels: List[np.ndarray]
+    packs: List[LevelPackResult]
+
+
+def build_hierarchy(
+    bottom_labels: np.ndarray,  # (K, m) bool: bottom cluster x sampled-query label
+    bottom_mbrs: np.ndarray,
+    cfg: Optional[PackingConfig] = None,
+) -> HierarchyResult:
+    """Pack levels bottom-up until few nodes remain or packing stops helping."""
+    cfg = cfg or PackingConfig()
+    labels = bottom_labels.astype(bool)
+    parents: List[np.ndarray] = []
+    packs: List[LevelPackResult] = []
+    level_labels: List[np.ndarray] = [labels]
+
+    # optional grouping acceleration on the widest (first) level
+    if cfg.spectral_ratio < 1.0 and labels.shape[0] > 8:
+        n_groups = max(2, int(np.ceil(labels.shape[0] * cfg.spectral_ratio)))
+        gids = spectral_group(bottom_mbrs, n_groups, cfg.seed)
+        parents.append(gids)
+        ng = gids.max() + 1
+        glabels = np.zeros((ng, labels.shape[1]), dtype=bool)
+        for i, g in enumerate(gids):
+            glabels[g] |= labels[i]
+        labels = glabels
+        level_labels.append(labels)
+        packs.append(LevelPackResult(gids, int(ng), 0.0, [], []))
+
+    seed = cfg.seed
+    for lvl in range(cfg.max_levels):
+        N = labels.shape[0]
+        if N <= cfg.min_nodes:
+            break
+        res = pack_one_level(labels, cfg, seed=seed + lvl + 1)
+        if res.n_upper >= N or res.sum_rewards <= -float(N):
+            break  # packing stopped reducing accesses (paper's -N termination)
+        parents.append(res.assign)
+        packs.append(res)
+        new_labels = np.zeros((res.n_upper, labels.shape[1]), dtype=bool)
+        for i, a in enumerate(res.assign):
+            new_labels[a] |= labels[i]
+        labels = new_labels
+        level_labels.append(labels)
+    return HierarchyResult(parents=parents, level_labels=level_labels, packs=packs)

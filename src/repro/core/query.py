@@ -1,0 +1,215 @@
+"""SKR query processing over a WiskIndex (paper §3 "Query processing").
+
+Three execution paths:
+
+* ``execute_serial`` -- the paper-faithful traversal: breadth-first descent,
+  per-node MBR + bitmap checks, inverted-file verification at leaves. This
+  is the host reference used for wall-clock comparisons against baselines
+  and for correctness ground truth of the other paths.
+* ``execute_level_sync`` -- vectorized (numpy) level-synchronous traversal:
+  an (M, n_level) active mask descends the levels. Mirrors the TPU execution
+  strategy (see DESIGN.md §3); used to validate the JAX/Pallas serving path.
+* kNN (Boolean kNN, paper appendix A): best-first search.
+
+All paths return per-query result ids plus Eq.1-style cost counters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .cost import DEFAULT_W1, DEFAULT_W2
+from .types import GeoTextDataset, Workload, WiskIndex, points_in_rect
+
+
+@dataclasses.dataclass
+class QueryStats:
+    nodes_accessed: np.ndarray  # (m,) int64 -- nodes whose MBR/bitmap were checked
+    verified: np.ndarray  # (m,) int64 -- objects fetched from inverted files
+    results: List[np.ndarray]  # per-query object ids
+    cost: np.ndarray  # (m,) float64 Eq.1-style cost
+
+    @property
+    def total_cost(self) -> float:
+        return float(self.cost.sum())
+
+
+def _node_match(level, rect, qbm) -> np.ndarray:
+    mb = level.mbrs
+    inter = (mb[:, 0] <= rect[2]) & (rect[0] <= mb[:, 2]) & (mb[:, 1] <= rect[3]) & (rect[1] <= mb[:, 3])
+    kw = np.any(level.bitmaps & qbm[None, :], axis=1)
+    return inter & kw
+
+
+def _verify_leaf(
+    index: WiskIndex, dataset: GeoTextDataset, leaf_id: int, rect, q_kws
+) -> Tuple[np.ndarray, int]:
+    """Inverted-file verification: postings for query keywords -> spatial filter."""
+    inv = index.inv
+    lo, hi = inv.kw_ptr[leaf_id], inv.kw_ptr[leaf_id + 1]
+    kws = inv.kw[lo:hi]
+    cand: List[np.ndarray] = []
+    for k in q_kws:
+        j = np.searchsorted(kws, k)
+        if j < kws.size and kws[j] == k:
+            row = lo + j
+            cand.append(inv.obj[inv.obj_ptr[row] : inv.obj_ptr[row + 1]])
+    if not cand:
+        return np.zeros(0, dtype=np.int32), 0
+    ids = np.unique(np.concatenate(cand))
+    ok = points_in_rect(dataset.locs[ids], rect)
+    return ids[ok].astype(np.int32), int(ids.size)
+
+
+def execute_serial(
+    index: WiskIndex,
+    dataset: GeoTextDataset,
+    workload: Workload,
+    w1: float = DEFAULT_W1,
+    w2: float = DEFAULT_W2,
+) -> QueryStats:
+    m = workload.m
+    nodes = np.zeros(m, dtype=np.int64)
+    verified = np.zeros(m, dtype=np.int64)
+    results: List[np.ndarray] = []
+    for qi in range(m):
+        rect = workload.rects[qi]
+        qbm = workload.kw_bitmap[qi]
+        q_kws = [int(k) for k in workload.kw_ids[qi] if k >= 0]
+        # root level: check every node
+        active = np.arange(index.levels[0].n)
+        res_parts: List[np.ndarray] = []
+        for li, level in enumerate(index.levels):
+            nodes[qi] += active.size
+            match = _node_match(level, rect, qbm)
+            hit = active[match[active]]
+            if li == len(index.levels) - 1:
+                for leaf in hit:
+                    ids, nv = _verify_leaf(index, dataset, int(leaf), rect, q_kws)
+                    verified[qi] += nv
+                    if ids.size:
+                        res_parts.append(ids)
+                break
+            # expand children of hits
+            if hit.size:
+                nxt = np.concatenate(
+                    [level.child[level.child_ptr[h] : level.child_ptr[h + 1]] for h in hit]
+                )
+            else:
+                nxt = np.zeros(0, dtype=np.int32)
+            active = nxt
+            if active.size == 0:
+                for _ in range(li + 1, len(index.levels)):
+                    pass
+                break
+        results.append(
+            np.unique(np.concatenate(res_parts)) if res_parts else np.zeros(0, dtype=np.int32)
+        )
+    cost = w1 * nodes.astype(np.float64) + w2 * verified.astype(np.float64)
+    return QueryStats(nodes_accessed=nodes, verified=verified, results=results, cost=cost)
+
+
+def execute_level_sync(
+    index: WiskIndex,
+    dataset: GeoTextDataset,
+    workload: Workload,
+    w1: float = DEFAULT_W1,
+    w2: float = DEFAULT_W2,
+) -> QueryStats:
+    """Vectorized traversal with (M, n_level) masks (the TPU execution shape)."""
+    m = workload.m
+    nodes = np.zeros(m, dtype=np.int64)
+    active = np.ones((m, index.levels[0].n), dtype=bool)
+    for li, level in enumerate(index.levels):
+        mb = level.mbrs
+        inter = (
+            (mb[None, :, 0] <= workload.rects[:, None, 2])
+            & (workload.rects[:, None, 0] <= mb[None, :, 2])
+            & (mb[None, :, 1] <= workload.rects[:, None, 3])
+            & (workload.rects[:, None, 1] <= mb[None, :, 3])
+        )
+        kw = np.any(level.bitmaps[None, :, :] & workload.kw_bitmap[:, None, :], axis=2)
+        nodes += active.sum(axis=1)
+        hit = active & inter & kw
+        if li == len(index.levels) - 1:
+            leaf_hit = hit
+            break
+        # propagate to children
+        nxt = np.zeros((m, index.levels[li + 1].n), dtype=bool)
+        for u in range(level.n):
+            ch = level.child[level.child_ptr[u] : level.child_ptr[u + 1]]
+            nxt[:, ch] |= hit[:, u : u + 1]
+        active = nxt
+    # leaf verification (vectorized per leaf)
+    verified = np.zeros(m, dtype=np.int64)
+    results: List[List[np.ndarray]] = [[] for _ in range(m)]
+    clusters = index.clusters
+    kwm_cache: dict = {}
+    for leaf in range(index.levels[-1].n):
+        qs = np.nonzero(leaf_hit[:, leaf])[0]
+        if qs.size == 0:
+            continue
+        ids = clusters.order[clusters.offsets[leaf] : clusters.offsets[leaf + 1]]
+        bm = dataset.kw_bitmap[ids]
+        locs = dataset.locs[ids]
+        for qi in qs:
+            match = np.any(bm & workload.kw_bitmap[qi][None, :], axis=1)
+            verified[qi] += int(match.sum())
+            sel = ids[match & points_in_rect(locs, workload.rects[qi])]
+            if sel.size:
+                results[qi].append(sel)
+    res = [
+        np.unique(np.concatenate(r)) if r else np.zeros(0, dtype=np.int32) for r in results
+    ]
+    cost = w1 * nodes.astype(np.float64) + w2 * verified.astype(np.float64)
+    return QueryStats(nodes_accessed=nodes, verified=verified, results=res, cost=cost)
+
+
+def knn_query(
+    index: WiskIndex,
+    dataset: GeoTextDataset,
+    point: np.ndarray,
+    kw_bitmap: np.ndarray,
+    k: int,
+) -> np.ndarray:
+    """Boolean kNN (appendix A): best-first search over the hierarchy."""
+
+    def mbr_dist2(mb):
+        dx = np.maximum(np.maximum(mb[0] - point[0], point[0] - mb[2]), 0.0)
+        dy = np.maximum(np.maximum(mb[1] - point[1], point[1] - mb[3]), 0.0)
+        return dx * dx + dy * dy
+
+    heap: List[Tuple[float, int, int, int]] = []  # (dist, tie, level, node)
+    tie = 0
+    for u in range(index.levels[0].n):
+        heapq.heappush(heap, (float(mbr_dist2(index.levels[0].mbrs[u])), tie, 0, u))
+        tie += 1
+    out: List[Tuple[float, int]] = []  # max-heap by -dist of selected objects
+    clusters = index.clusters
+    while heap:
+        d, _, li, u = heapq.heappop(heap)
+        if len(out) >= k and d >= -out[0][0]:
+            break
+        level = index.levels[li]
+        if not np.any(level.bitmaps[u] & kw_bitmap):
+            continue
+        if li == len(index.levels) - 1:
+            ids = clusters.order[clusters.offsets[u] : clusters.offsets[u + 1]]
+            match = np.any(dataset.kw_bitmap[ids] & kw_bitmap[None, :], axis=1)
+            for oid in ids[match]:
+                dd = float(((dataset.locs[oid] - point) ** 2).sum())
+                if len(out) < k:
+                    heapq.heappush(out, (-dd, int(oid)))
+                elif dd < -out[0][0]:
+                    heapq.heapreplace(out, (-dd, int(oid)))
+        else:
+            for c in level.child[level.child_ptr[u] : level.child_ptr[u + 1]]:
+                heapq.heappush(
+                    heap, (float(mbr_dist2(index.levels[li + 1].mbrs[c])), tie, li + 1, int(c))
+                )
+                tie += 1
+    out.sort(key=lambda t: -t[0])
+    return np.array([oid for _, oid in out], dtype=np.int32)

@@ -1,0 +1,95 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+The wrappers pad inputs to tile multiples, pick ``interpret=True`` on CPU
+(the container target; kernels execute their Python bodies for validation)
+and compiled Mosaic on TPU, and slice outputs back. They are the only entry
+points the rest of the framework uses.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .cdf_mlp import cdf_mlp_bank
+from .skr_filter import skr_filter
+from .skr_verify import skr_verify
+from . import ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_dim(a: jax.Array, axis: int, mult: int, fill=0) -> jax.Array:
+    size = a.shape[axis]
+    target = -(-size // mult) * mult
+    if target == size:
+        return a
+    pads = [(0, 0)] * a.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(a, pads, constant_values=fill)
+
+
+def filter_pairs(
+    q_rects, q_bm, n_mbrs, n_bm, bm: int = 128, bk: int = 128, interpret: Optional[bool] = None
+) -> jax.Array:
+    """(M, K) int8 relevance via the Pallas filter kernel (padded + sliced)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    M, K = q_rects.shape[0], n_mbrs.shape[0]
+    bm_ = min(bm, max(M, 1))
+    bk_ = min(bk, max(K, 1))
+    qr = _pad_dim(jnp.asarray(q_rects, jnp.float32), 0, bm_)
+    qb = _pad_dim(jnp.asarray(q_bm, jnp.uint32), 0, bm_)
+    # pad node MBRs with never-intersecting rects
+    nm = jnp.asarray(n_mbrs, jnp.float32)
+    pad_k = -(-K // bk_) * bk_ - K
+    if pad_k:
+        nm = jnp.concatenate([nm, jnp.tile(jnp.array([[2.0, 2.0, -2.0, -2.0]], jnp.float32), (pad_k, 1))], 0)
+    nb = _pad_dim(jnp.asarray(n_bm, jnp.uint32), 0, bk_)
+    out = skr_filter(qr, qb, nm, nb, bm=bm_, bk=bk_, interpret=interpret)
+    return out[:M, :K]
+
+
+def verify_candidates(
+    q_rects, q_bm, cand_x, cand_y, cand_bm, cand_valid, bm: int = 8, bc: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """(M, C) int8 verified-candidate matrix via the Pallas verify kernel."""
+    if interpret is None:
+        interpret = _on_cpu()
+    M, C = cand_x.shape
+    bm_ = min(bm, max(M, 1))
+    bc_ = min(bc, max(C, 1))
+    qr = _pad_dim(jnp.asarray(q_rects, jnp.float32), 0, bm_)
+    qb = _pad_dim(jnp.asarray(q_bm, jnp.uint32), 0, bm_)
+    cx = _pad_dim(_pad_dim(jnp.asarray(cand_x, jnp.float32), 0, bm_), 1, bc_)
+    cy = _pad_dim(_pad_dim(jnp.asarray(cand_y, jnp.float32), 0, bm_), 1, bc_)
+    cb = _pad_dim(_pad_dim(jnp.asarray(cand_bm, jnp.uint32), 0, bm_), 1, bc_)
+    cv = _pad_dim(_pad_dim(jnp.asarray(cand_valid, jnp.int8), 0, bm_), 1, bc_)
+    out = skr_verify(qr, qb, cx, cy, cb, cv, bm=bm_, bc=bc_, interpret=interpret)
+    return out[:M, :C]
+
+
+def cdf_bank_forward(
+    params: Dict[str, jax.Array], x: jax.Array, bn: int = 256, bb: int = 64,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """(N, B) CDF values for the whole MLP bank at points x."""
+    if interpret is None:
+        interpret = _on_cpu()
+    N = x.shape[0]
+    B = params["w0"].shape[0]
+    bn_ = min(bn, max(N, 1))
+    bb_ = min(bb, max(B, 1))
+    xp = _pad_dim(jnp.asarray(x, jnp.float32), 0, bn_)
+    pp = {k: _pad_dim(v, 0, bb_) for k, v in params.items()}
+    out = cdf_mlp_bank(pp, xp, bn=bn_, bb=bb_, interpret=interpret)
+    return out[:N, :B]
+
+
+__all__ = ["filter_pairs", "verify_candidates", "cdf_bank_forward", "ref"]

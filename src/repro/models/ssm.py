@@ -1,0 +1,137 @@
+"""Mamba selective-SSM block (Jamba's sequence mixer).
+
+TPU adaptation (see DESIGN.md): the CUDA selective-scan kernel becomes a
+*chunked associative scan*: the sequence is processed in chunks of
+``cfg.ssm_chunk``; within a chunk the linear recurrence
+``h_t = dA_t * h_{t-1} + dB_t x_t`` runs as a log-depth
+``jax.lax.associative_scan`` over ``(B, Lc, d_inner, d_state)`` VMEM-sized
+blocks; chunks are stitched with an outer ``lax.scan`` carrying the state.
+The depthwise causal conv is expressed as ``d_conv`` shifted elementwise
+multiplies so channel sharding (d_inner over "model") partitions trivially.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.rules import constrain
+from .layers import Param, _dtype, make, zeros
+
+
+def init_mamba(key, cfg: ArchConfig) -> Dict:
+    ks = jax.random.split(key, 7)
+    d, di, ds, dc, dtr = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.d_conv, cfg.dt_rank
+    dt = _dtype(cfg)
+    return dict(
+        in_proj=make(ks[0], (d, 2 * di), ("wembed", "inner"), 1.0, dt),
+        conv_w=make(ks[1], (dc, di), ("conv", "inner"), 1.0, jnp.float32),
+        conv_b=zeros((di,), ("inner",)),
+        x_proj=make(ks[2], (di, dtr + 2 * ds), ("inner", None), 1.0, dt),
+        dt_proj=make(ks[3], (dtr, di), (None, "inner"), 1.0, jnp.float32),
+        dt_bias=zeros((di,), ("inner",)),
+        A_log=Param(
+            jnp.log(jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))),
+            ("inner", "state"),
+        ),
+        D=Param(jnp.ones((di,), jnp.float32), ("inner",)),
+        out_proj=make(ks[4], (di, d), ("inner", "wembed"), 1.0, dt),
+    )
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B, S, di); w: (dc, di) -> causal depthwise conv via shifts."""
+    dc = w.shape[0]
+    out = x * w[-1]
+    for j in range(1, dc):
+        shifted = jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[dc - 1 - j]
+    return out + b
+
+
+def _ssm_scan(dA: jax.Array, dBx: jax.Array, h0: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Associative scan of h_t = dA_t h_{t-1} + dBx_t within a chunk.
+
+    dA, dBx: (B, L, di, ds); h0: (B, di, ds). Returns (h (B,L,di,ds), h_last).
+    """
+
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a1 * a2, a2 * b1 + b2
+
+    prodA, h = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    h = h + prodA * h0[:, None]
+    return h, h[:, -1]
+
+
+def mamba_mixer(params: Dict, x: jax.Array, cfg: ArchConfig, rules) -> jax.Array:
+    """Full-sequence (train/prefill) mamba mixer."""
+    B, S, d = x.shape
+    di, ds = cfg.d_inner, cfg.d_state
+    xz = x @ params["in_proj"]
+    xz = constrain(xz, ("batch", "seq", "inner"), rules)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c = jax.nn.silu(_causal_conv(x_in.astype(jnp.float32), params["conv_w"], params["conv_b"]))
+    bcdt = (x_c.astype(x.dtype)) @ params["x_proj"]
+    dtr = cfg.dt_rank
+    dt_in, Bm, Cm = bcdt[..., :dtr], bcdt[..., dtr : dtr + ds], bcdt[..., dtr + ds :]
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) @ params["dt_proj"] + params["dt_bias"])  # (B,S,di)
+    A = -jnp.exp(params["A_log"])  # (di, ds)
+
+    Lc = min(cfg.ssm_chunk, S)
+    assert S % Lc == 0, "seq must divide ssm_chunk"
+    n_chunks = S // Lc
+
+    def chunk_body(h_prev, xs):
+        dt_c, B_c, C_c, x_c_ = xs  # (B,Lc,di) (B,Lc,ds) (B,Lc,ds) (B,Lc,di)
+        dA = jnp.exp(dt_c[..., None] * A)  # (B,Lc,di,ds)
+        dBx = (dt_c * x_c_)[..., None] * B_c[:, :, None, :].astype(jnp.float32)
+        h, h_last = _ssm_scan(dA, dBx, h_prev)
+        y = jnp.einsum("blds,bls->bld", h, C_c.astype(jnp.float32))
+        return h_last, y
+
+    resh = lambda a: a.reshape(B, n_chunks, Lc, *a.shape[2:]).swapaxes(0, 1)
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    _, ys = jax.lax.scan(chunk_body, h0, (resh(dt), resh(Bm), resh(Cm), resh(x_c)))
+    y = ys.swapaxes(0, 1).reshape(B, S, di)
+    y = y + params["D"] * x_c
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = constrain(y, ("batch", "seq", "inner"), rules)
+    out = y @ params["out_proj"]
+    return constrain(out, ("batch", "seq", "embed"), rules)
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int) -> Dict[str, jax.Array]:
+    return dict(
+        h=jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), jnp.float32),
+    )
+
+
+def mamba_decode(
+    params: Dict, x: jax.Array, state: Dict[str, jax.Array], cfg: ArchConfig, rules
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token recurrent step. x: (B, 1, d)."""
+    B = x.shape[0]
+    di, ds, dc = cfg.d_inner, cfg.d_state, cfg.d_conv
+    xz = x[:, 0] @ params["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate([state["conv"], x_in.astype(jnp.float32)[:, None]], axis=1)  # (B,dc,di)
+    conv_out = jnp.einsum("bcd,cd->bd", window, params["conv_w"]) + params["conv_b"]
+    x_c = jax.nn.silu(conv_out)
+    bcdt = x_c.astype(x.dtype) @ params["x_proj"]
+    dtr = cfg.dt_rank
+    dt_in, Bm, Cm = bcdt[..., :dtr], bcdt[..., dtr : dtr + ds], bcdt[..., dtr + ds :]
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) @ params["dt_proj"] + params["dt_bias"])  # (B,di)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt[..., None] * A)  # (B,di,ds)
+    dBx = (dt * x_c)[..., None] * Bm[:, None, :].astype(jnp.float32)
+    h = dA * state["h"] + dBx
+    y = jnp.einsum("bds,bs->bd", h, Cm.astype(jnp.float32)) + params["D"] * x_c
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = (y @ params["out_proj"])[:, None]
+    new_state = dict(h=h, conv=window[:, 1:])
+    return constrain(out, ("batch", None, "embed"), rules), new_state

@@ -1,0 +1,209 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM (matrix memory) + recurrent sLSTM.
+
+mLSTM keeps per-head matrix state ``C (dv x dk)``, normalizer ``N (dk)`` and
+stabilizer ``m``; the chunkwise form computes intra-chunk interactions with
+a decay-masked attention-like quadratic and carries (C, N, m) across chunks
+-- the TPU-friendly equivalent of the paper's recurrent formulation.
+sLSTM (exponential gating + normalizer + stabilizer states) is inherently
+sequential and runs as a ``lax.scan`` over time steps.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.rules import constrain
+from .layers import Param, _dtype, make, zeros
+
+
+# ------------------------------------------------------------------- mLSTM
+def init_mlstm(key, cfg: ArchConfig) -> Dict:
+    ks = jax.random.split(key, 6)
+    d, H = cfg.d_model, cfg.n_heads
+    di = cfg.d_inner
+    dh = di // H
+    dt = _dtype(cfg)
+    return dict(
+        up=make(ks[0], (d, 2 * di), ("wembed", "inner"), 1.0, dt),
+        wq=make(ks[1], (di, H, dh), ("inner", "heads", "head_dim"), 1.0, dt),
+        wk=make(ks[2], (di, H, dh), ("inner", "heads", "head_dim"), 1.0, dt),
+        wv=make(ks[3], (di, H, dh), ("inner", "heads", "head_dim"), 1.0, dt),
+        w_if=make(ks[4], (di, 2 * H), ("inner", None), 1.0, jnp.float32),
+        b_if=zeros((2 * H,), (None,)),
+        down=make(ks[5], (di, d), ("inner", "wembed"), 1.0, dt),
+    )
+
+
+def _mlstm_chunk(q, k, v, li, lf, state):
+    """One chunk. q,k,v: (B,L,H,dh); li,lf: (B,L,H); state: (C,N,m)."""
+    B, L, H, dh = q.shape
+    C_prev, N_prev, m_prev = state  # (B,H,dh,dh), (B,H,dh), (B,H)
+    F = jnp.cumsum(lf, axis=1)  # (B,L,H) cumulative log-forget
+    # intra-chunk decay D[t,tau] = F_t - F_tau + li_tau  (tau <= t)
+    Dm = F[:, :, None, :] - F[:, None, :, :] + li[:, None, :, :]  # (B,t,tau,H)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    Dm = jnp.where(tri[None, :, :, None], Dm, -jnp.inf)
+    # stabilizer
+    m_intra = jnp.max(Dm, axis=2)  # (B,t,H)
+    m_inter = m_prev[:, None, :] + F  # (B,t,H)
+    m_t = jnp.maximum(m_intra, m_inter)
+    scale = 1.0 / dh**0.5
+    s = jnp.einsum("blhd,bmhd->blmh", q.astype(jnp.float32) * scale, k.astype(jnp.float32))
+    w = s * jnp.exp(Dm - m_t[:, :, None, :])  # (B,t,tau,H)
+    h_intra = jnp.einsum("blmh,bmhd->blhd", w, v.astype(jnp.float32))
+    n_intra = jnp.einsum("blmh,bmhd->blhd", jnp.exp(Dm - m_t[:, :, None, :]), k.astype(jnp.float32))
+    inter_scale = jnp.exp(m_inter - m_t)  # (B,t,H)
+    h_inter = jnp.einsum("blhd,bhed->blhe", q.astype(jnp.float32) * scale, C_prev) * inter_scale[..., None]
+    n_inter = jnp.einsum("blhd,bhd->blh", q.astype(jnp.float32) * scale, N_prev)[..., None] * 0 + (
+        jnp.einsum("blhd,bhd->blh", q.astype(jnp.float32) * scale, N_prev) * inter_scale
+    )[..., None]
+    h_num = h_intra + h_inter  # (B,t,H,dh)
+    qn = jnp.einsum("blhd,blhd->blh", q.astype(jnp.float32) * scale, n_intra) + n_inter[..., 0]
+    denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_t))[..., None]
+    h = h_num / denom
+    # carry state to end of chunk
+    F_end = F[:, -1:, :]  # (B,1,H)
+    m_end = jnp.maximum(m_prev + F_end[:, 0], jnp.max(li + (F_end - F), axis=1))
+    decay_out = jnp.exp(li + F_end - F - m_end[:, None, :])  # (B,L,H)
+    C_new = jnp.exp(m_prev + F_end[:, 0] - m_end)[:, :, None, None] * C_prev + jnp.einsum(
+        "blh,blhe,blhd->bhed", decay_out, v.astype(jnp.float32), k.astype(jnp.float32)
+    )
+    N_new = jnp.exp(m_prev + F_end[:, 0] - m_end)[:, :, None] * N_prev + jnp.einsum(
+        "blh,blhd->bhd", decay_out, k.astype(jnp.float32)
+    )
+    return h, (C_new, N_new, m_end)
+
+
+def mlstm_mixer(params: Dict, x: jax.Array, cfg: ArchConfig, rules) -> jax.Array:
+    B, S, d = x.shape
+    H = cfg.n_heads
+    di = cfg.d_inner
+    dh = di // H
+    xz = x @ params["up"]
+    xz = constrain(xz, ("batch", "seq", "inner"), rules)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    q = jnp.einsum("bsd,dhk->bshk", xi, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xi, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xi, params["wv"])
+    gates = xi.astype(jnp.float32) @ params["w_if"] + params["b_if"]  # (B,S,2H)
+    li = gates[..., :H]  # log input gate (exp gating)
+    lf = jax.nn.log_sigmoid(gates[..., H:])
+    L = min(cfg.ssm_chunk, S)
+    assert S % L == 0
+    n = S // L
+    resh = lambda a: a.reshape(B, n, L, *a.shape[2:]).swapaxes(0, 1)
+    state0 = (
+        jnp.zeros((B, H, dh, dh), jnp.float32),
+        jnp.zeros((B, H, dh), jnp.float32),
+        jnp.full((B, H), -1e30, jnp.float32),
+    )
+
+    def body(state, xs):
+        qc, kc, vc, lic, lfc = xs
+        h, state = _mlstm_chunk(qc, kc, vc, lic, lfc, state)
+        return state, h
+
+    _, hs = jax.lax.scan(body, state0, (resh(q), resh(k), resh(v), resh(li), resh(lf)))
+    h = hs.swapaxes(0, 1).reshape(B, S, di)
+    y = (h.astype(x.dtype) * jax.nn.silu(z)) @ params["down"]
+    return constrain(y, ("batch", "seq", "embed"), rules)
+
+
+def init_mlstm_state(cfg: ArchConfig, batch: int):
+    H = cfg.n_heads
+    dh = cfg.d_inner // H
+    return dict(
+        C=jnp.zeros((batch, H, dh, dh), jnp.float32),
+        N=jnp.zeros((batch, H, dh), jnp.float32),
+        m=jnp.full((batch, H), -1e30, jnp.float32),
+    )
+
+
+def mlstm_decode(params, x, state, cfg: ArchConfig, rules):
+    """Single-step recurrent mLSTM. x: (B,1,d)."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    dh = cfg.d_inner // H
+    xz = x[:, 0] @ params["up"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    q = jnp.einsum("bd,dhk->bhk", xi, params["wq"]).astype(jnp.float32) / dh**0.5
+    k = jnp.einsum("bd,dhk->bhk", xi, params["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bd,dhk->bhk", xi, params["wv"]).astype(jnp.float32)
+    gates = xi.astype(jnp.float32) @ params["w_if"] + params["b_if"]
+    li, lf = gates[..., :H], jax.nn.log_sigmoid(gates[..., H:])
+    m_new = jnp.maximum(lf + state["m"], li)
+    i_g = jnp.exp(li - m_new)
+    f_g = jnp.exp(lf + state["m"] - m_new)
+    C = f_g[..., None, None] * state["C"] + i_g[..., None, None] * jnp.einsum("bhe,bhd->bhed", v, k)
+    N = f_g[..., None] * state["N"] + i_g[..., None] * k
+    qn = jnp.einsum("bhd,bhd->bh", q, N)
+    h = jnp.einsum("bhd,bhed->bhe", q, C) / jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))[..., None]
+    h = h.reshape(B, cfg.d_inner).astype(x.dtype)
+    y = ((h * jax.nn.silu(z)) @ params["down"])[:, None]
+    return constrain(y, ("batch", None, "embed"), rules), dict(C=C, N=N, m=m_new)
+
+
+# ------------------------------------------------------------------- sLSTM
+def init_slstm(key, cfg: ArchConfig) -> Dict:
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    dt = _dtype(cfg)
+    return dict(
+        w_in=make(ks[0], (d, 4 * d), ("wembed", "inner"), 1.0, dt),
+        w_rec=make(ks[1], (d, 4 * d), ("wembed", "inner"), 1.0, dt),
+        b=zeros((4 * d,), ("inner",)),
+        down=make(ks[2], (d, d), ("inner", "wembed"), 1.0, dt),
+    )
+
+
+def _slstm_step(params, carry, x_t):
+    """carry: (c, n, h, m) each (B, d); x_t: (B, d)."""
+    c, n, h, m = carry
+    d = x_t.shape[-1]
+    pre = (x_t @ params["w_in"] + h.astype(x_t.dtype) @ params["w_rec"]).astype(jnp.float32) + params["b"]
+    zi, ii, fi, oi = jnp.split(pre, 4, axis=-1)
+    m_new = jnp.maximum(fi + m, ii)
+    i_g = jnp.exp(ii - m_new)
+    f_g = jnp.exp(fi + m - m_new)
+    z = jnp.tanh(zi)
+    o = jax.nn.sigmoid(oi)
+    c_new = f_g * c + i_g * z
+    n_new = f_g * n + i_g
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_mixer(params: Dict, x: jax.Array, cfg: ArchConfig, rules) -> jax.Array:
+    B, S, d = x.shape
+    carry = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(3)) + (
+        jnp.full((B, d), -1e30, jnp.float32),
+    )
+
+    def body(c, x_t):
+        return _slstm_step(params, c, x_t)
+
+    _, hs = jax.lax.scan(body, carry, x.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)
+    y = h @ params["down"]
+    return constrain(y, ("batch", "seq", "embed"), rules)
+
+
+def init_slstm_state(cfg: ArchConfig, batch: int):
+    d = cfg.d_model
+    return dict(
+        c=jnp.zeros((batch, d), jnp.float32),
+        n=jnp.zeros((batch, d), jnp.float32),
+        h=jnp.zeros((batch, d), jnp.float32),
+        m=jnp.full((batch, d), -1e30, jnp.float32),
+    )
+
+
+def slstm_decode(params, x, state, cfg: ArchConfig, rules):
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    carry, h = _slstm_step(params, carry, x[:, 0])
+    y = (h.astype(x.dtype) @ params["down"])[:, None]
+    new = dict(c=carry[0], n=carry[1], h=carry[2], m=carry[3])
+    return constrain(y, ("batch", None, "embed"), rules), new

@@ -1,0 +1,145 @@
+"""Pure-JAX optimizers (no external deps): AdamW, Adafactor, SGD + schedules.
+
+Every optimizer is a pair of pytree-level functions::
+
+    state = init(params)
+    updates, state = update(grads, state, params, lr, step)
+
+States are plain pytrees so they checkpoint/re-shard like parameters.
+Adafactor keeps factored second moments (row/col) for >=2-D leaves -- the
+production choice for very large configs on 16 GB v5e HBM (see DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, tree), norm
+
+
+# ----------------------------------------------------------------- schedules
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable[[jax.Array], jax.Array]:
+    def fn(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        warm = base_lr * jnp.minimum((step + 1.0) / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return fn
+
+
+# --------------------------------------------------------------------- adamw
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8, wd: float = 0.1):
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(m=jax.tree.map(f32, params), v=jax.tree.map(f32, params))
+
+    def update(grads, state, params, lr, step):
+        t = step.astype(jnp.float32) + 1.0
+        m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g.astype(jnp.float32), state.m, grads)
+        v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.v, grads)
+        def upd(m_, v_, p_):
+            mh = m_ / (1 - b1**t)
+            vh = v_ / (1 - b2**t)
+            return (-lr * (mh / (jnp.sqrt(vh) + eps) + wd * p_.astype(jnp.float32))).astype(p_.dtype)
+        return jax.tree.map(upd, m, v, params), AdamWState(m, v)
+
+    return init, update
+
+
+# ----------------------------------------------------------------- adafactor
+class AdafactorState(NamedTuple):
+    vr: Any  # row factors (or full v for <2D leaves)
+    vc: Any  # col factors (zeros() sentinel for <2D leaves)
+
+
+def adafactor(eps: float = 1e-30, clip_thresh: float = 1.0, decay_pow: float = 0.8):
+    """Factored second-moment optimizer (Shazeer & Stern) without momentum."""
+
+    def init(params):
+        def vr_init(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vc_init(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((1,), jnp.float32)
+
+        return AdafactorState(vr=jax.tree.map(vr_init, params), vc=jax.tree.map(vc_init, params))
+
+    def update(grads, state, params, lr, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay_pow)
+
+        def upd(g, vr, vc, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if p.ndim >= 2:
+                vr_n = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc_n = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr_n, axis=-1, keepdims=True), eps)
+                pre = (vr_n / denom)[..., None] * vc_n[..., None, :]
+                u = g / jnp.sqrt(pre + eps)
+            else:
+                vr_n = beta * vr + (1 - beta) * g2
+                vc_n = vc
+                u = g / jnp.sqrt(vr_n + eps)
+            # update clipping (RMS <= clip_thresh)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_thresh)
+            return (-lr * u).astype(p.dtype), vr_n, vc_n
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_vr = tdef.flatten_up_to(state.vr)
+        flat_vc = tdef.flatten_up_to(state.vc)
+        outs = [upd(g, vr, vc, p) for g, vr, vc, p in zip(flat_g, flat_vr, flat_vc, flat_p)]
+        updates = tdef.unflatten([o[0] for o in outs])
+        vr = tdef.unflatten([o[1] for o in outs])
+        vc = tdef.unflatten([o[2] for o in outs])
+        return updates, AdafactorState(vr, vc)
+
+    return init, update
+
+
+# ----------------------------------------------------------------------- sgd
+class SGDState(NamedTuple):
+    mom: Any
+
+
+def sgd(momentum: float = 0.9):
+    def init(params):
+        return SGDState(mom=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def update(grads, state, params, lr, step):
+        mom = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32), state.mom, grads)
+        return jax.tree.map(lambda m, p: (-lr * m).astype(p.dtype), mom, params), SGDState(mom)
+
+    return init, update
+
+
+OPTIMIZERS = {"adamw": adamw, "adafactor": adafactor, "sgd": sgd}
+
+
+def get_optimizer(name: str):
+    return OPTIMIZERS[name]()

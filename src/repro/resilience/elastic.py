@@ -1,0 +1,51 @@
+"""Elastic scaling: recompute the mesh from surviving devices and re-shard.
+
+``plan_remesh(n_devices)`` picks the largest (data, model) grid that fits
+the survivor count while preserving the model-parallel degree where
+possible (changing TP degree would change expert/head shard divisibility);
+the checkpoint layer then restores the latest step with the new shardings
+(ckpt/checkpoint.py::restore). The deterministic data pipeline skips to
+``global_step * global_batch`` examples so restarts are bitwise-consistent.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass
+class RemeshPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    dropped_devices: int
+
+    def make_mesh(self) -> Mesh:
+        return jax.make_mesh(self.shape, self.axes)
+
+
+def plan_remesh(n_devices: int, prefer_model: int = 16) -> RemeshPlan:
+    """Largest usable (data, model) grid <= n_devices, keeping model degree
+    at the largest power-of-two divisor <= prefer_model."""
+    best = (None, None)
+    m = prefer_model
+    while m >= 1:
+        if n_devices >= m:
+            drop = n_devices - (n_devices // m) * m
+            if best[0] is None or drop < best[0]:
+                best = (drop, m)
+        m //= 2
+    model = best[1] or 1
+    data = n_devices // model
+    # drop ragged remainder devices (they rejoin at next restart)
+    used = data * model
+    return RemeshPlan(shape=(data, model), axes=("data", "model"), dropped_devices=n_devices - used)
+
+
+def data_skip_offset(global_step: int, global_batch: int) -> int:
+    """Deterministic pipeline fast-forward for restart."""
+    return global_step * global_batch

@@ -1,0 +1,225 @@
+"""Roofline assembly: three terms per (arch x shape) from dry-run artifacts.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+Terms (seconds, per step):
+  compute    = FLOPs_per_chip / peak_FLOPs
+  memory     = HBM_bytes_per_chip / HBM_bw
+  collective = collective_bytes_per_chip / ICI_bw
+
+FLOPs_per_chip comes from the trip-count-corrected HLO dot census
+(roofline/hlo_stats.py); the raw ``cost_analysis`` value is reported too
+(it counts while bodies once -- see tests/test_roofline.py). HBM bytes per
+chip are an analytic napkin model (stated inline) because the CPU backend's
+byte accounting also ignores trip counts; collective bytes are the
+corrected HLO parse. MODEL_FLOPS uses 6*N*D (dense) / 6*N_active*D (MoE);
+the MODEL/HLO ratio exposes remat + causal-masking + capacity waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+
+from ..configs import ARCH_IDS, get_config
+from ..configs.base import SHAPES
+
+
+def param_counts(cfg) -> Dict[str, float]:
+    """(total_params, active_params_per_token) analytic estimate."""
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
+    H = cfg.pad_heads_to or cfg.n_heads
+    hd, KV = cfg.head_dim, cfg.n_kv_heads
+    emb = V * d * 2  # embed + head
+    per_attn = d * H * hd + 2 * d * KV * hd + H * hd * d
+    if cfg.use_mla:
+        per_attn = (
+            d * cfg.q_lora + cfg.q_lora * H * (cfg.qk_nope + cfg.qk_rope)
+            + d * (cfg.kv_lora + cfg.qk_rope)
+            + cfg.kv_lora * H * (cfg.qk_nope + cfg.v_head)
+            + H * cfg.v_head * d
+        )
+    per_dense_ffn = 3 * d * cfg.d_ff
+    fe = cfg.d_expert or cfg.d_ff
+    per_expert = 3 * d * fe
+    per_shared = 3 * d * fe * cfg.n_shared_experts
+
+    total = emb
+    active = emb / max(V, 1) * d / d  # embedding lookup ~ d per token; ignore
+    total_active = 0.0
+    if cfg.family == "encdec":
+        total += cfg.enc_layers * (per_attn + 2 * d * cfg.d_ff)
+        total += L * (2 * per_attn + 2 * d * cfg.d_ff)
+        total_active = total
+    elif cfg.family == "xlstm":
+        di = cfg.d_inner
+        per_m = d * 2 * di + 3 * di * (di // cfg.n_heads) * cfg.n_heads / max(cfg.n_heads, 1) * cfg.n_heads
+        per_m = d * 2 * di + 3 * di * di / cfg.n_heads + di * 2 * cfg.n_heads + di * d
+        per_s = 2 * d * 4 * d + d * d
+        n_s = L // cfg.slstm_every
+        total += (L - n_s) * per_m + n_s * per_s
+        total_active = total
+    elif cfg.family == "hybrid":
+        di = cfg.d_inner
+        per_mamba = d * 2 * di + di * (cfg.dt_rank + 2 * cfg.d_state) + cfg.dt_rank * di + di * d
+        n_attn = L // cfg.attn_every
+        n_moe = L // cfg.moe_every if cfg.n_experts else 0
+        n_dense_ffn = L - n_moe
+        total += (L - n_attn) * per_mamba + n_attn * per_attn
+        total += n_dense_ffn * per_dense_ffn + n_moe * cfg.n_experts * per_expert
+        active = total - n_moe * cfg.n_experts * per_expert + n_moe * cfg.moe_topk * per_expert
+        total_active = active
+    elif cfg.n_experts:
+        n_moe = L - cfg.first_dense
+        total += L * per_attn + cfg.first_dense * per_dense_ffn
+        total += n_moe * (cfg.n_experts * per_expert + per_shared)
+        total_active = (
+            emb + L * per_attn + cfg.first_dense * per_dense_ffn
+            + n_moe * (cfg.moe_topk * per_expert + per_shared)
+        )
+    else:
+        total += L * (per_attn + per_dense_ffn)
+        total_active = total
+    return dict(total=float(total), active=float(total_active))
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    """MODEL_FLOPS global per step: 6*N_active*D train, 2*N_active*D prefill,
+    2*N_active*B decode (one token per sequence)."""
+    seq, batch, kind = SHAPES[shape_name]
+    pc = param_counts(cfg)
+    n_act = pc["active"]
+    tokens = seq * batch
+    if kind == "train":
+        return 6.0 * n_act * tokens
+    if kind == "prefill":
+        return 2.0 * n_act * tokens
+    return 2.0 * n_act * batch  # decode: one new token per sequence
+
+
+def analytic_hbm_bytes(cfg, shape_name: str, n_chips: int) -> float:
+    """Per-chip HBM traffic napkin model (stated, conservative):
+
+    train:   3x param-shard reads (fwd + remat-recompute + bwd) + grad write
+             + optimizer state read/write + 2 passes over saved activations.
+    prefill: 1x param reads + activation write/read once.
+    decode:  1x param reads + full KV-cache shard read + O(1) writes.
+    """
+    seq, batch, kind = SHAPES[shape_name]
+    pc = param_counts(cfg)
+    p_shard = pc["total"] * 2 / n_chips  # bf16 storage spread over all chips
+    d = cfg.d_model
+    tokens_local = seq * batch / max(n_chips / 16, 1) / 16  # dp shards only
+    if kind == "train":
+        opt_mult = 8 if cfg.optimizer == "adamw" else 1  # f32 m+v r/w vs factored
+        act = 2 * cfg.n_layers * tokens_local * d * 2  # saved layer inputs, 2 passes
+        return 3 * p_shard + p_shard + opt_mult * p_shard * 2 + act
+    if kind == "prefill":
+        act = 2 * cfg.n_layers * tokens_local * d * 2
+        return p_shard + act
+    # decode: cache shard dominates
+    if cfg.use_mla:
+        cache = cfg.n_layers * batch * seq * (cfg.kv_lora + cfg.qk_rope) * 2
+    elif cfg.family == "xlstm":
+        H = cfg.n_heads
+        dh = cfg.d_inner // H
+        cache = cfg.n_layers * batch * (H * dh * dh) * 4
+    elif cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.attn_every
+        cache = n_attn * batch * seq * cfg.n_kv_heads * cfg.head_dim * 2 * 2
+        cache += (cfg.n_layers - n_attn) * batch * cfg.d_inner * cfg.d_state * 4
+    else:
+        cache = cfg.n_layers * batch * seq * cfg.n_kv_heads * cfg.head_dim * 2 * 2
+    return p_shard + cache / n_chips + pc["active"] * 2 / n_chips
+
+
+@dataclasses.dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    hlo_flops_global: float
+    useful_ratio: float
+    raw_cost_flops: float
+    note: str = ""
+
+
+def roofline_from_record(rec: Dict, cfg=None) -> Optional[RooflineRow]:
+    if "skipped" in rec or rec.get("arch") == "wisk":
+        return None
+    arch, shape = rec["arch"], rec["shape"]
+    cfg = cfg or get_config(arch)
+    chips = rec.get("devices", 256)
+    corr = rec.get("hlo_corrected") or {}
+    flops_dev = corr.get("dot_flops_per_device", 0.0)
+    coll_dev = corr.get("collective_total_per_device", rec.get("collective_total_per_device", 0))
+    mf = model_flops(cfg, shape)
+    hlo_global = flops_dev * chips
+    compute = flops_dev / PEAK_FLOPS
+    memory = analytic_hbm_bytes(cfg, shape, chips) / HBM_BW
+    collective = coll_dev / ICI_BW
+    terms = dict(compute=compute, memory=memory, collective=collective)
+    bottleneck = max(terms, key=terms.get)
+    return RooflineRow(
+        arch=arch,
+        shape=shape,
+        compute_s=compute,
+        memory_s=memory,
+        collective_s=collective,
+        bottleneck=bottleneck,
+        model_flops=mf,
+        hlo_flops_global=hlo_global,
+        useful_ratio=(mf / hlo_global) if hlo_global else 0.0,
+        raw_cost_flops=rec.get("cost", {}).get("flops", 0.0),
+    )
+
+
+def load_rows(dryrun_dir: str, mesh: str = "pod16x16") -> List[RooflineRow]:
+    rows = []
+    for f in sorted(Path(dryrun_dir).glob(f"*_{mesh}.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("mesh") != mesh:
+            continue
+        row = roofline_from_record(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def to_markdown(rows: List[RooflineRow]) -> str:
+    hdr = (
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | bound | "
+        "MODEL_FLOPS | HLO_FLOPS | useful |\n|---|---|---|---|---|---|---|---|---|\n"
+    )
+    out = [hdr]
+    for r in rows:
+        out.append(
+            f"| {r.arch} | {r.shape} | {r.compute_s*1e3:.2f} | {r.memory_s*1e3:.2f} | "
+            f"{r.collective_s*1e3:.2f} | **{r.bottleneck}** | {r.model_flops:.2e} | "
+            f"{r.hlo_flops_global:.2e} | {r.useful_ratio:.2f} |\n"
+        )
+    return "".join(out)
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    rows = load_rows(args.dir)
+    print(to_markdown(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every parameter / activation dimension carries a logical name; a rules table
+maps logical names to mesh axes. Weights use FSDP-flavored names (``wembed``)
+so storage shards over the data axes while activations stay unsharded on the
+same dimension (GSPMD inserts the per-layer all-gathers under ``lax.scan``,
+giving ZeRO-3 semantics).
+
+The production meshes (launch/mesh.py) are ``("data","model")`` single-pod
+and ``("pod","data","model")`` multi-pod; ``dp_axes(mesh)`` returns the data
+axes present, so the same rules serve both.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def default_rules(mesh: Mesh) -> Dict[str, Axis]:
+    dp = dp_axes(mesh)
+    return {
+        # activations
+        "batch": dp,
+        "seq": None,
+        "embed": None,
+        "act_heads": "model",
+        "act_mlp": "model",
+        "act_vocab": "model",
+        "act_experts": "model",
+        "kv_seq": "model",  # decode KV caches: sequence over model (flash-decoding)
+        "kv_seq_all": dp + ("model",),  # long-context decode: sequence over everything
+        # weights
+        "wembed": dp,  # FSDP storage axis
+        "heads": "model",
+        "kv_heads": None,  # GQA kv heads often < |model|; replicate (see DESIGN.md)
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_mlp": None,
+        "layers": None,
+        "lora": None,
+        "state": None,
+        "inner": "model",  # mamba d_inner / xlstm inner: channel TP
+        "conv": None,
+        "repeat": None,
+    }
+
+
+def spec_for(names: Sequence[Optional[str]], rules: Dict[str, Axis]) -> P:
+    parts = []
+    for n in names:
+        if n is None:
+            parts.append(None)
+        else:
+            ax = rules.get(n)
+            parts.append(ax if ax is None or isinstance(ax, str) or isinstance(ax, tuple) else None)
+    # normalize empty tuples to None
+    parts = [None if (isinstance(p, tuple) and len(p) == 0) else p for p in parts]
+    return P(*parts)
+
+
+def named_sharding(mesh: Mesh, names: Sequence[Optional[str]], rules: Optional[Dict[str, Axis]] = None) -> NamedSharding:
+    rules = rules or default_rules(mesh)
+    return NamedSharding(mesh, spec_for(names, rules))
+
+
+def constrain(x: jax.Array, names: Sequence[Optional[str]], rules: Dict[str, Axis]) -> jax.Array:
+    """with_sharding_constraint by logical names.
+
+    ``rules["__mesh__"]`` (set by the step builder) turns the spec into a
+    NamedSharding -- a bare PartitionSpec needs an ambient mesh and silently
+    failing there would leave activations unconstrained (GSPMD then
+    propagates weight shardings into activations; see EXPERIMENTS.md §Perf
+    iteration 0, which measured exactly that).
+    """
+    mesh = rules.get("__mesh__") if isinstance(rules, dict) else None
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec_for(names, rules)))
+
+
+def tree_shardings(mesh: Mesh, tree_names: Any, rules: Optional[Dict[str, Axis]] = None):
+    """Map a pytree of logical-name tuples to NamedShardings."""
+    rules = rules or default_rules(mesh)
+    return jax.tree.map(
+        lambda names: named_sharding(mesh, names, rules),
+        tree_names,
+        is_leaf=lambda t: isinstance(t, tuple) and all(isinstance(x, (str, type(None))) for x in t),
+    )

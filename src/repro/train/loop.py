@@ -1,0 +1,121 @@
+"""Training loop with checkpoint/restart, straggler monitoring, and optional
+gradient compression -- the fault-tolerance substrate (DESIGN.md §5).
+
+Runs real (small) configs on the host devices; the same loop drives a pod
+when the mesh has real TPU devices behind it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..ckpt.checkpoint import AsyncCheckpointer, latest_step, restore
+from ..configs.base import ArchConfig
+from ..data.tokens import TokenPipeline
+from ..optim.compression import EFState, ef_init, int8_tree_roundtrip, topk_with_error_feedback
+from ..resilience.straggler import MitigationPlan, StragglerMonitor
+from .step import Steps, build_steps
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    n_steps: int = 50
+    batch: int = 8
+    seq: int = 128
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 25
+    log_every: int = 10
+    grad_compression: Optional[str] = None  # None | "topk" | "int8"
+    topk_frac: float = 0.1
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class TrainResult:
+    losses: list
+    final_step: int
+    restored_from: Optional[int]
+    step_times: list
+    flagged_hosts: list
+
+
+def train(cfg: ArchConfig, tc: TrainConfig, mesh=None, steps: Optional[Steps] = None) -> TrainResult:
+    steps = steps or build_steps(cfg, mesh)
+    pipe = TokenPipeline(vocab=cfg.vocab, seq=tc.seq, batch=tc.batch, seed=tc.seed)
+
+    restored_from = None
+    state = jax.jit(steps.init_state)(jax.random.PRNGKey(tc.seed))
+    start_step = 0
+    ckpt = None
+    if tc.ckpt_dir:
+        ckpt = AsyncCheckpointer(tc.ckpt_dir)
+        last = latest_step(tc.ckpt_dir)
+        if last is not None:
+            state, start_step = restore(tc.ckpt_dir, state)
+            restored_from = start_step
+            pipe.skip_to(start_step)
+
+    ef: Optional[EFState] = None
+    base_train = steps.train_step
+
+    def train_with_compression(state, batch, ef_res):
+        def loss_fn(params):
+            return steps.bundle.loss(params, batch, steps.rules, steps.mesh)
+
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        if tc.grad_compression == "topk":
+            grads, ef_res = topk_with_error_feedback(grads, ef_res, tc.topk_frac)
+        elif tc.grad_compression == "int8":
+            grads = int8_tree_roundtrip(grads)
+        from ..optim.optimizers import clip_by_global_norm, get_optimizer, cosine_schedule
+
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        opt_init, opt_update = get_optimizer(cfg.optimizer)
+        lr_t = cosine_schedule(3e-4, 100, 10_000)(state["step"])
+        updates, opt = opt_update(grads, state["opt"], state["params"], lr_t, state["step"])
+        params = jax.tree.map(lambda p, u: p + u.astype(p.dtype), state["params"], updates)
+        return dict(params=params, opt=opt, step=state["step"] + 1), dict(loss=loss, grad_norm=gnorm), ef_res
+
+    if tc.grad_compression:
+        grads_template = state["params"]
+        ef = ef_init(grads_template)
+        step_fn = jax.jit(train_with_compression)
+    else:
+        step_fn = jax.jit(base_train)
+
+    monitor = StragglerMonitor(n_hosts=1)
+    losses, times, flagged_all = [], [], []
+    for it in range(start_step, tc.n_steps):
+        batch = pipe.next_batch(cfg)
+        t0 = time.perf_counter()
+        if tc.grad_compression:
+            state, metrics, ef = step_fn(state, batch, ef)
+        else:
+            state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        flagged = monitor.observe(np.array([dt]))
+        if flagged:
+            flagged_all.extend(flagged)
+        losses.append(loss)
+        if tc.log_every and (it + 1) % tc.log_every == 0:
+            print(f"step {it+1} loss {loss:.4f} ({dt*1e3:.0f} ms)")
+        if ckpt and (it + 1) % tc.ckpt_every == 0:
+            ckpt.submit(it + 1, state)
+    if ckpt:
+        ckpt.submit(tc.n_steps, state)
+        ckpt.close()
+    return TrainResult(
+        losses=losses,
+        final_step=tc.n_steps,
+        restored_from=restored_from,
+        step_times=times,
+        flagged_hosts=flagged_all,
+    )

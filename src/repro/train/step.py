@@ -1,0 +1,208 @@
+"""train_step / serve_step builders: model + optimizer + sharding specs.
+
+``build_steps(cfg, mesh)`` returns a ``Steps`` object exposing jit-able
+functions and the NamedShardings for every argument -- consumed by both the
+real training loop (small configs on CPU) and the multi-pod dry-run
+(ShapeDtypeStruct lowering at 512 devices).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, SHAPES
+from ..models.model import ModelBundle, build_model
+from ..models.layers import split_params
+from ..optim.optimizers import clip_by_global_norm, cosine_schedule, get_optimizer
+from ..sharding.rules import default_rules, named_sharding, spec_for
+
+
+def opt_state_specs(name: str, param_specs):
+    """Mirror param logical specs onto optimizer state leaves."""
+    if name == "adamw":
+        return type("S", (), {})  # handled structurally below
+
+    return None
+
+
+def _adamw_specs(pspecs):
+    from ..optim.optimizers import AdamWState
+
+    return AdamWState(m=pspecs, v=pspecs)
+
+
+def _adafactor_specs(pspecs):
+    from ..optim.optimizers import AdafactorState
+
+    def vr(s):
+        return s[:-1] if len(s) >= 2 else s
+
+    def vc(s):
+        return s[:-2] + s[-1:] if len(s) >= 2 else (None,)
+
+    is_spec = lambda x: isinstance(x, tuple) and all(isinstance(i, (str, type(None))) for i in x)
+    return AdafactorState(
+        vr=jax.tree.map(vr, pspecs, is_leaf=is_spec),
+        vc=jax.tree.map(vc, pspecs, is_leaf=is_spec),
+    )
+
+
+def _sgd_specs(pspecs):
+    from ..optim.optimizers import SGDState
+
+    return SGDState(mom=pspecs)
+
+
+OPT_SPECS = {"adamw": _adamw_specs, "adafactor": _adafactor_specs, "sgd": _sgd_specs}
+
+
+@dataclasses.dataclass
+class Steps:
+    cfg: ArchConfig
+    bundle: ModelBundle
+    mesh: Optional[Mesh]
+    rules: Dict
+
+    init_state: Callable  # key -> state dict
+    train_step: Callable  # (state, batch) -> (state, metrics)
+    prefill_step: Callable  # (params, batch) -> logits
+    decode_step: Callable  # (params, cache, tokens, pos) -> (logits, cache)
+
+    state_specs: Any  # logical-name tree mirroring state
+    param_specs: Any
+
+    def shardings(self, tree_of_specs):
+        mesh = self.mesh
+        rules = self.rules
+        is_spec = lambda x: isinstance(x, tuple) and all(
+            isinstance(i, (str, type(None))) for i in x
+        )
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, spec_for(s, rules)), tree_of_specs, is_leaf=is_spec
+        )
+
+    def batch_spec(self, kind: str, seq: int, batch: int):
+        """(abstract batch pytree, logical specs) for a shape kind."""
+        cfg = self.cfg
+        sds = jax.ShapeDtypeStruct
+        if cfg.family == "encdec":
+            enc_s = max(seq // cfg.enc_frames_div, 64)
+            b = dict(
+                frames=sds((batch, enc_s, cfg.d_model), jnp.bfloat16),
+                tokens=sds((batch, seq), jnp.int32),
+            )
+            s = dict(frames=("batch", None, None), tokens=("batch", None))
+        elif cfg.family == "vlm":
+            P_ = min(cfg.n_patches, max(seq // 4, 16))
+            b = dict(
+                patches=sds((batch, P_, cfg.d_model), jnp.bfloat16),
+                tokens=sds((batch, max(seq - P_, 8)), jnp.int32),
+            )
+            s = dict(patches=("batch", None, None), tokens=("batch", None))
+        else:
+            b = dict(tokens=sds((batch, seq), jnp.int32))
+            s = dict(tokens=("batch", None))
+        return b, s
+
+    def cache_spec(self, batch: int, seq: int, long_ctx: bool = False):
+        """(abstract cache pytree, logical specs). long_ctx reshards the
+        sequence dim over every mesh axis and replicates batch (batch=1)."""
+        shapes = self.bundle.cache_shape(batch, seq)
+        sds = {}
+        specs = {}
+        for k, (shape, dtype, names) in shapes.items():
+            names = tuple(names)
+            if long_ctx:
+                names = tuple(
+                    "kv_seq_all" if n == "kv_seq" else (None if n == "batch" else n)
+                    for n in names
+                )
+            sds[k] = jax.ShapeDtypeStruct(shape, dtype)
+            specs[k] = names
+        return sds, specs
+
+
+def build_steps(
+    cfg: ArchConfig,
+    mesh: Optional[Mesh] = None,
+    lr: float = 3e-4,
+    warmup: int = 100,
+    total_steps: int = 10_000,
+    grad_clip: float = 1.0,
+) -> Steps:
+    bundle = build_model(cfg)
+    if mesh is not None:
+        rules = default_rules(mesh)
+    else:
+        # single-device rules: everything replicated
+        rules = {k: None for k in default_rules_keys()}
+    if getattr(cfg, "logical_overrides", None):
+        rules.update(cfg.logical_overrides if mesh is not None else {})
+    if mesh is not None:
+        rules["__mesh__"] = mesh  # makes constrain() binding (NamedSharding)
+    opt_init, opt_update = get_optimizer(cfg.optimizer)
+    sched = cosine_schedule(lr, warmup, total_steps)
+
+    captured = {}
+
+    def init_state(key):
+        ptree = bundle.init(key)
+        values, specs = split_params(ptree)
+        captured["pspecs"] = specs
+        opt = opt_init(values)
+        return dict(params=values, opt=opt, step=jnp.zeros((), jnp.int32))
+
+    # trace once abstractly to learn the spec tree
+    jax.eval_shape(init_state, jax.random.PRNGKey(0))
+    pspecs = captured["pspecs"]
+    state_specs = dict(
+        params=pspecs, opt=OPT_SPECS[cfg.optimizer](pspecs), step=()
+    )
+
+    def train_step(state, batch):
+        def loss_fn(params):
+            return bundle.loss(params, batch, rules, mesh)
+
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        lr_t = sched(state["step"])
+        updates, opt = opt_update(grads, state["opt"], state["params"], lr_t, state["step"])
+        params = jax.tree.map(lambda p, u: p + u.astype(p.dtype), state["params"], updates)
+        new_state = dict(params=params, opt=opt, step=state["step"] + 1)
+        return new_state, dict(loss=loss, grad_norm=gnorm, lr=lr_t)
+
+    def prefill_step(params, batch):
+        return bundle.prefill(params, batch, rules, mesh)
+
+    def decode_step(params, cache, tokens, pos):
+        return bundle.decode(params, cache, tokens, pos, rules, mesh)
+
+    return Steps(
+        cfg=cfg,
+        bundle=bundle,
+        mesh=mesh,
+        rules=rules,
+        init_state=init_state,
+        train_step=train_step,
+        prefill_step=prefill_step,
+        decode_step=decode_step,
+        state_specs=state_specs,
+        param_specs=pspecs,
+    )
+
+
+def default_rules_keys():
+    from ..sharding.rules import default_rules as dr
+    import jax as _jax
+    from jax.sharding import Mesh as _M
+
+    # keys only; build from a trivial mesh
+    dev = np.array(_jax.devices()[:1]).reshape(1, 1)
+    m = _M(dev, ("data", "model"))
+    return dr(m).keys()

@@ -1,0 +1,143 @@
+"""Unit tests: CDF estimates, partitioner, DQN packing, baselines, workloads."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.cdf import build_cdf_bank, est_count_rect
+from repro.core.cost import exact_query_results
+from repro.core.itemsets import expand_queries, mine_frequent_itemsets
+from repro.core.packing import PackingConfig, build_hierarchy, pack_one_level, spectral_group
+from repro.core.dqn import DQNConfig
+from repro.data.synth import make_dataset
+from repro.data.workloads import make_workload, stratified_sample
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset("fs", n=2500, seed=3)
+
+
+def test_cdf_estimates_close(ds):
+    bank = build_cdf_bank(ds, n_steps=150)
+    tables = bank.jax_tables()
+    rng = np.random.default_rng(0)
+    # evaluate counts for the most frequent keywords over random rects
+    top_kw = np.argsort(ds.kw_freq)[::-1][:10]
+    rel_errs = []
+    for k in top_kw:
+        members = np.nonzero((ds.kw_ids == k).any(1))[0]
+        for _ in range(5):
+            lo = rng.uniform(0, 0.5, 2)
+            hi = lo + rng.uniform(0.2, 0.5, 2)
+            rect = jnp.asarray([lo[0], lo[1], hi[0], hi[1]], jnp.float32)
+            est = float(est_count_rect(tables, bank.nn_params, jnp.asarray([k]), rect)[0])
+            pts = ds.locs[members]
+            exact = int(
+                (
+                    (pts[:, 0] >= lo[0]) & (pts[:, 0] <= hi[0])
+                    & (pts[:, 1] >= lo[1]) & (pts[:, 1] <= hi[1])
+                ).sum()
+            )
+            rel_errs.append(abs(est - exact) / max(exact, 10))
+    assert np.median(rel_errs) < 0.35, f"median CDF error too high: {np.median(rel_errs)}"
+
+
+def test_query_expansion_signs(ds):
+    wl = make_workload(ds, m=16, n_keywords=5, seed=0)
+    its, mem = mine_frequent_itemsets(ds, min_support=1e-4, max_size=2)
+    ent, sgn = expand_queries(wl, its, ds.vocab_size)
+    assert ent.shape == sgn.shape
+    # singletons positive, pairs negative
+    assert ((sgn == 1.0) | (sgn == -1.0) | (sgn == 0.0)).all()
+    assert (sgn[ent >= ds.vocab_size] == -1.0).all()
+    assert (sgn[(ent >= 0) & (ent < ds.vocab_size)] == 1.0).all()
+
+
+def test_packing_beats_random(ds):
+    rng = np.random.default_rng(0)
+    N, m = 16, 12
+    labels = rng.integers(0, 2, (N, m)).astype(bool)
+    cfg = PackingConfig(epochs=10, dqn=DQNConfig(eps_decay=0.9))
+    res = pack_one_level(labels, cfg, seed=0)
+
+    def avg_accesses(assign):
+        n_up = assign.max() + 1
+        upper = np.zeros((n_up, m), bool)
+        for i, a in enumerate(assign):
+            upper[a] |= labels[i]
+        return upper.sum(0).mean()
+
+    learned = avg_accesses(res.assign)
+    rand_scores = []
+    for s in range(20):
+        r = np.random.default_rng(s).integers(0, max(res.n_upper, 2), N)
+        _, r = np.unique(r, return_inverse=True)
+        rand_scores.append(avg_accesses(r.astype(np.int32)))
+    assert learned <= np.median(rand_scores) + 1e-9
+
+
+def test_action_mask_limits_empty_slots():
+    from repro.core.packing import _Env
+
+    labels = np.eye(6, dtype=bool)
+    env = _Env(labels, use_mask=True)
+    m = env.mask()
+    assert m.sum() == 1  # all empty -> exactly one slot exposed
+    env.step(0)
+    m = env.mask()
+    assert m.sum() == 2  # one used + one empty
+
+
+def test_spectral_group_shapes():
+    rng = np.random.default_rng(0)
+    mbrs = rng.uniform(0, 1, (20, 4)).astype(np.float32)
+    g = spectral_group(mbrs, 5)
+    assert g.shape == (20,)
+    assert g.max() + 1 <= 5
+
+
+def test_hierarchy_labels_propagate():
+    rng = np.random.default_rng(1)
+    labels = rng.integers(0, 2, (12, 8)).astype(bool)
+    mbrs = rng.uniform(0, 1, (12, 4)).astype(np.float32)
+    h = build_hierarchy(labels, mbrs, PackingConfig(epochs=4))
+    lv = h.level_labels
+    for i, parent in enumerate(h.parents):
+        lower, upper = lv[i], lv[i + 1]
+        for j, p in enumerate(parent):
+            assert (upper[p] | lower[j]).tolist() == upper[p].tolist()
+
+
+def test_stratified_sample_ratio(ds):
+    wl = make_workload(ds, m=200, seed=0)
+    idx = stratified_sample(wl, 0.3, seed=0)
+    assert 0.2 <= idx.size / wl.m <= 0.4
+    assert np.unique(idx).size == idx.size
+
+
+@pytest.mark.parametrize("dist", ["UNI", "LAP", "GAU", "MIX"])
+def test_workload_valid(ds, dist):
+    wl = make_workload(ds, m=50, dist=dist, region_frac=0.001, n_keywords=3, seed=1)
+    assert (wl.rects[:, 0] <= wl.rects[:, 2]).all()
+    assert (wl.rects[:, 1] <= wl.rects[:, 3]).all()
+    assert (wl.rects >= 0).all() and (wl.rects <= 1).all()
+    assert ((wl.kw_ids == -1) | (wl.kw_ids < ds.vocab_size)).all()
+    # every query has at least one keyword
+    assert ((wl.kw_ids >= 0).sum(1) >= 1).all()
+
+
+def test_baselines_exact(ds):
+    from repro.baselines.conventional import build_grid_index, build_str_rtree
+    from repro.baselines.learned import build_floodt, build_lsti, build_tfi, tfi_query
+    from repro.core.query import execute_serial
+
+    wl = make_workload(ds, m=20, seed=5)
+    gt = exact_query_results(ds, wl)
+    train = make_workload(ds, m=40, seed=6)
+    for idx in [build_grid_index(ds, 6), build_str_rtree(ds), build_floodt(ds, train), build_lsti(ds)]:
+        st = execute_serial(idx, ds, wl)
+        np.testing.assert_array_equal(np.array([len(r) for r in st.results]), gt)
+    tfi = build_tfi(ds)
+    st = tfi_query(tfi, ds, wl)
+    np.testing.assert_array_equal(np.array([len(r) for r in st.results]), gt)

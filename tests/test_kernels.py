@@ -1,0 +1,70 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracles."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _rand_rects(rng, n):
+    lo = rng.uniform(0, 0.8, (n, 2)).astype(np.float32)
+    hi = lo + rng.uniform(0.01, 0.2, (n, 2)).astype(np.float32)
+    return np.concatenate([lo, hi], axis=1)
+
+
+@pytest.mark.parametrize("m,k,w", [(1, 1, 1), (7, 33, 3), (64, 128, 15), (130, 257, 16), (128, 128, 32)])
+def test_skr_filter_sweep(m, k, w):
+    rng = np.random.default_rng(m * 1000 + k + w)
+    qr = _rand_rects(rng, m)
+    nm = _rand_rects(rng, k)
+    qb = (rng.integers(0, 2 ** 32, (m, w), dtype=np.uint32)
+          * rng.integers(0, 2, (m, w), dtype=np.uint32))
+    nb = rng.integers(0, 2 ** 32, (k, w), dtype=np.uint32)
+    out = np.asarray(ops.filter_pairs(qr, qb, nm, nb))
+    exp = np.asarray(ref.skr_filter_ref(*map(jnp.asarray, (qr, qb, nm, nb))))
+    np.testing.assert_array_equal(out, exp)
+
+
+@pytest.mark.parametrize("m,c,w", [(1, 8, 1), (5, 100, 4), (16, 512, 15), (33, 1000, 8)])
+def test_skr_verify_sweep(m, c, w):
+    rng = np.random.default_rng(m + c + w)
+    qr = _rand_rects(rng, m)
+    qb = rng.integers(0, 2 ** 32, (m, w), dtype=np.uint32)
+    cx = rng.uniform(0, 1, (m, c)).astype(np.float32)
+    cy = rng.uniform(0, 1, (m, c)).astype(np.float32)
+    cb = (rng.integers(0, 2 ** 32, (m, c, w), dtype=np.uint32)
+          * rng.integers(0, 2, (m, c, w), dtype=np.uint32))
+    cv = rng.integers(0, 2, (m, c)).astype(np.int8)
+    out = np.asarray(ops.verify_candidates(qr, qb, cx, cy, cb, cv))
+    exp = np.asarray(ref.skr_verify_ref(*map(jnp.asarray, (qr, qb, cx, cy, cb, cv))))
+    np.testing.assert_array_equal(out, exp)
+
+
+@pytest.mark.parametrize("n,b,h", [(1, 1, 16), (65, 23, 16), (301, 64, 16), (256, 130, 8)])
+def test_cdf_mlp_sweep(n, b, h):
+    rng = np.random.default_rng(n + b)
+    params = {
+        "w0": rng.normal(0, 1, (b, 1, h)), "b0": rng.normal(0, 1, (b, h)),
+        "w1": rng.normal(0, 0.5, (b, h, h)), "b1": rng.normal(0, 0.5, (b, h)),
+        "w2": rng.normal(0, 0.5, (b, h, h)), "b2": rng.normal(0, 0.5, (b, h)),
+        "w3": rng.normal(0, 0.5, (b, h, 1)), "b3": rng.normal(0, 0.5, (b, 1)),
+    }
+    params = {k: jnp.asarray(v, jnp.float32) for k, v in params.items()}
+    x = jnp.asarray(rng.uniform(0, 1, n), jnp.float32)
+    out = np.asarray(ops.cdf_bank_forward(params, x))
+    exp = np.asarray(ref.cdf_mlp_ref(params, x))
+    np.testing.assert_allclose(out, exp, atol=2e-6)
+
+
+def test_filter_block_size_invariance():
+    rng = np.random.default_rng(0)
+    m, k, w = 50, 90, 5
+    qr = _rand_rects(rng, m)
+    nm = _rand_rects(rng, k)
+    qb = rng.integers(0, 2 ** 32, (m, w), dtype=np.uint32)
+    nb = rng.integers(0, 2 ** 32, (k, w), dtype=np.uint32)
+    a = np.asarray(ops.filter_pairs(qr, qb, nm, nb, bm=16, bk=32))
+    b = np.asarray(ops.filter_pairs(qr, qb, nm, nb, bm=128, bk=128))
+    np.testing.assert_array_equal(a, b)

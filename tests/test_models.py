@@ -1,0 +1,151 @@
+"""Per-architecture smoke tests (reduced configs): one train step + decode
+on CPU, asserting output shapes and no NaNs -- as required for each of the
+10 assigned architectures. Plus MoE dense-path internals and roofline
+param-count sanity."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.train.step import build_steps
+
+
+def _batch_for(cfg, B=2, S=64):
+    if cfg.family == "encdec":
+        return dict(
+            frames=jnp.ones((B, S // 4, cfg.d_model), jnp.float32),
+            tokens=jnp.ones((B, S), jnp.int32),
+        )
+    if cfg.family == "vlm":
+        P = 16
+        return dict(
+            patches=jnp.ones((B, P, cfg.d_model), jnp.float32),
+            tokens=jnp.ones((B, S - P), jnp.int32),
+        )
+    return dict(tokens=jnp.ones((B, S), jnp.int32))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_train_and_decode(arch):
+    cfg = get_config(arch).reduced()
+    steps = build_steps(cfg)
+    state = jax.jit(steps.init_state)(jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+    new_state, metrics = jax.jit(steps.train_step)(state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss), f"{arch}: NaN loss"
+    assert loss > 0
+    assert int(new_state["step"]) == 1
+    # params changed
+    delta = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(
+            lambda p, q: float(jnp.sum(jnp.abs(p.astype(jnp.float32) - q.astype(jnp.float32)))),
+            state["params"],
+            new_state["params"],
+        ),
+    )
+    assert delta > 0, f"{arch}: train step did not update params"
+    # decode one token
+    B, S = 2, 64
+    cache_sds, _ = steps.cache_spec(B, S)
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_sds)
+    logits, cache = jax.jit(steps.decode_step)(
+        new_state["params"], cache, jnp.ones((B, 1), jnp.int32), jnp.int32(0)
+    )
+    assert logits.shape[0] == B and logits.shape[-1] == cfg.vocab
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32)))), f"{arch}: NaN decode"
+
+
+def test_decode_matches_prefill_tinyllama():
+    """Decoding tokens one-by-one must match the teacher-forced forward."""
+    cfg = get_config("tinyllama-1.1b").reduced()
+    steps = build_steps(cfg)
+    state = jax.jit(steps.init_state)(jax.random.PRNGKey(1))
+    params = state["params"]
+    B, S = 2, 16
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    # full forward logits at last position
+    logits_full = steps.prefill_step(params, dict(tokens=toks))
+    # decode step-by-step
+    cache_sds, _ = steps.cache_spec(B, S)
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_sds)
+    dec = jax.jit(steps.decode_step)
+    for t in range(S):
+        logits_dec, cache = dec(params, cache, toks[:, t : t + 1], jnp.int32(t))
+    np.testing.assert_allclose(
+        np.asarray(logits_dec[:, 0], np.float32),
+        np.asarray(logits_full[:, -1], np.float32),
+        rtol=0.05, atol=0.05,
+    )
+
+
+def test_moe_routing_respects_capacity():
+    from repro.models.moe import _capacity, _route, init_moe, moe_ffn_dense
+    from repro.models.layers import split_params
+
+    cfg = get_config("qwen2-moe-a2.7b").reduced()
+    params, _ = split_params(init_moe(jax.random.PRNGKey(0), cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model), jnp.float32)
+    x2d = x.reshape(-1, cfg.d_model)
+    probs, top_idx = _route(x2d, params["w_router"], cfg)
+    assert probs.shape[1] >= cfg.n_experts
+    # no token routed to padding experts
+    assert int(jnp.max(top_idx)) < cfg.n_experts
+    out = moe_ffn_dense(params, x, cfg, {})
+    assert out.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_padded_heads_are_exact():
+    """starcoder2 pads 36 -> 48 heads: padded heads must contribute zero."""
+    import dataclasses
+    from repro.models.layers import attention, init_attention, split_params
+
+    cfg = get_config("starcoder2-7b").reduced()
+    cfg = dataclasses.replace(cfg, n_heads=6, n_kv_heads=2, pad_heads_to=8, d_model=96, head_dim=16)
+    p_pad, _ = split_params(init_attention(jax.random.PRNGKey(0), cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, cfg.d_model), jnp.float32)
+    out_pad = attention(p_pad, x, cfg, {})
+    # drop the padded per-group slots -> same output (padding is per KV
+    # group: g=3 real q-heads of g_pad=4 slots per kv head)
+    import numpy as _np
+
+    KV, g, g_pad, hd, d = 2, 3, 4, 16, cfg.d_model
+    keep = _np.concatenate([_np.arange(k * g_pad, k * g_pad + g) for k in range(KV)])
+    cfg_np = dataclasses.replace(cfg, pad_heads_to=0)
+    p_np = dict(
+        wq=p_pad["wq"][:, keep], wk=p_pad["wk"], wv=p_pad["wv"], wo=p_pad["wo"][keep]
+    )
+    out_np = attention(p_np, x, cfg_np, {})
+    np.testing.assert_allclose(np.asarray(out_pad), np.asarray(out_np), atol=1e-5)
+
+
+def test_causal_impls_agree():
+    import dataclasses
+    from repro.models.layers import _chunked_causal_attn
+
+    rng = jax.random.PRNGKey(0)
+    q = jax.random.normal(rng, (2, 64, 4, 16), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 4, 16), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 64, 4, 16), jnp.float32)
+    a = _chunked_causal_attn(q, k, v, 16, True, "masked_scan")
+    b = _chunked_causal_attn(q, k, v, 16, True, "unrolled_prefix")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_param_counts_sane():
+    from repro.roofline.analysis import param_counts
+
+    tl = param_counts(get_config("tinyllama-1.1b"))
+    assert 0.9e9 < tl["total"] < 1.4e9, tl
+    ds3 = param_counts(get_config("deepseek-v3-671b"))
+    assert 6.0e11 < ds3["total"] < 7.5e11, ds3
+    assert 3.0e10 < ds3["active"] < 5.0e10, ds3  # ~37B active
+    star = param_counts(get_config("starcoder2-7b"))
+    # counted with gated-MLP convention + 48-head TP padding -> above the
+    # published 7.2B; bound documents the accounting, not the HF number
+    assert 6e9 < star["total"] < 1.2e10, star

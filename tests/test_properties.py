@@ -1,0 +1,114 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.itemsets import mine_frequent_itemsets
+from repro.core.types import GeoTextDataset, ids_to_bitmap, bitmap_intersects
+from repro.optim.compression import (
+    ef_init,
+    int8_dequantize,
+    int8_quantize,
+    topk_compress,
+    topk_with_error_feedback,
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 40),
+    v=st.integers(2, 40),
+    seed=st.integers(0, 1000),
+)
+def test_bitmap_equals_set_semantics(n, v, seed):
+    rng = np.random.default_rng(seed)
+    a_ids = np.full((n, 4), -1, np.int32)
+    b_ids = np.full((n, 4), -1, np.int32)
+    for i in range(n):
+        ka = rng.choice(v, size=rng.integers(0, min(4, v + 1)), replace=False)
+        kb = rng.choice(v, size=rng.integers(1, min(4, v + 1)), replace=False)
+        a_ids[i, : ka.size] = ka
+        b_ids[i, : kb.size] = kb
+    a_bm = ids_to_bitmap(a_ids, v)
+    b_bm = ids_to_bitmap(b_ids, v)
+    got = bitmap_intersects(a_bm, b_bm)
+    want = np.array(
+        [bool(set(a_ids[i][a_ids[i] >= 0]) & set(b_ids[i][b_ids[i] >= 0])) for i in range(n)]
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(20, 80), v=st.integers(4, 12), seed=st.integers(0, 100))
+def test_apriori_matches_bruteforce_pairs(n, v, seed):
+    rng = np.random.default_rng(seed)
+    kw_ids = np.full((n, 3), -1, np.int32)
+    for i in range(n):
+        ks = rng.choice(v, size=rng.integers(1, 4), replace=False)
+        kw_ids[i, : ks.size] = ks
+    locs = rng.uniform(0, 1, (n, 2)).astype(np.float32)
+    ds = GeoTextDataset.from_ids(locs, kw_ids, v)
+    min_support = 3 / n
+    itemsets, members = mine_frequent_itemsets(ds, min_support=min_support, max_size=2)
+    got_pairs = {s for s in itemsets if len(s) == 2}
+    # brute force
+    want = set()
+    sets = [set(kw_ids[i][kw_ids[i] >= 0].tolist()) for i in range(n)]
+    for a in range(v):
+        for b in range(a + 1, v):
+            cnt = sum(1 for s in sets if a in s and b in s)
+            if cnt >= max(2, int(np.ceil(min_support * n))):
+                want.add((a, b))
+    assert got_pairs == want
+    # member lists exact
+    for s, mem in zip(itemsets, members):
+        if len(s) == 2:
+            a, b = s
+            want_mem = [i for i in range(n) if a in sets[i] and b in sets[i]]
+            np.testing.assert_array_equal(np.sort(mem), want_mem)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    size=st.integers(4, 300),
+    frac=st.floats(0.05, 1.0),
+    seed=st.integers(0, 1000),
+)
+def test_topk_contraction(size, frac, seed):
+    """||x - topk(x)|| <= ||x|| with equality only when nothing kept."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 1, size).astype(np.float32))
+    c = topk_compress(x, frac)
+    err = np.linalg.norm(np.asarray(x - c))
+    assert err <= np.linalg.norm(np.asarray(x)) + 1e-6
+    k = max(1, int(size * frac))
+    assert int((np.asarray(c) != 0).sum()) <= size  # kept entries bounded
+    # kept entries are the largest-magnitude ones
+    kept_mag = np.abs(np.asarray(c)[np.asarray(c) != 0])
+    dropped_mag = np.abs(np.asarray(x))[np.asarray(c) == 0]
+    if kept_mag.size and dropped_mag.size:
+        assert kept_mag.min() >= dropped_mag.max() - 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(size=st.integers(2, 200), seed=st.integers(0, 1000))
+def test_int8_quantization_error_bound(size, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 3, size).astype(np.float32))
+    q, s = int8_quantize(x)
+    back = int8_dequantize(q, s)
+    max_err = float(jnp.max(jnp.abs(back - x)))
+    assert max_err <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_recovers_dropped_mass():
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(0, 1, 64).astype(np.float32))}
+    ef = ef_init(g)
+    total_sent = np.zeros(64, np.float32)
+    for _ in range(50):
+        sent, ef = topk_with_error_feedback(g, ef, frac=0.1)
+        total_sent += np.asarray(sent["w"])
+    # with constant gradient, EF ensures average transmitted -> gradient
+    np.testing.assert_allclose(total_sent / 50, np.asarray(g["w"]), atol=0.25)

@@ -1,0 +1,103 @@
+"""End-to-end behaviour tests: WISK build -> query correctness -> cost wins."""
+import numpy as np
+import pytest
+
+from repro.core.build import BuildConfig, build_wisk
+from repro.core.cost import exact_query_results, exact_workload_cost
+from repro.core.dqn import DQNConfig
+from repro.core.packing import PackingConfig
+from repro.core.partition import PartitionConfig
+from repro.core.query import execute_level_sync, execute_serial
+from repro.core.types import ClusterSet
+from repro.data.synth import make_dataset
+from repro.data.workloads import make_workload
+
+
+@pytest.fixture(scope="module")
+def built():
+    ds = make_dataset("fs", n=3000, seed=0)
+    wl = make_workload(ds, m=48, dist="MIX", seed=1)
+    cfg = BuildConfig(
+        partition=PartitionConfig(max_clusters=32, n_steps=50, n_restarts=2),
+        packing=PackingConfig(epochs=4, max_label_queries=16, dqn=DQNConfig()),
+        cdf_train_steps=80,
+    )
+    art = build_wisk(ds, wl, cfg)
+    test_wl = make_workload(ds, m=24, dist="MIX", seed=2)
+    return ds, wl, test_wl, art
+
+
+def test_build_produces_partition(built):
+    ds, wl, _, art = built
+    clusters = art.partition.clusters
+    assert clusters.k > 1, "partitioner should split the space"
+    assert clusters.assign.shape[0] == ds.n
+    sizes = clusters.sizes()
+    assert sizes.sum() == ds.n
+    assert (sizes >= 0).all()
+
+
+def test_serial_query_exact(built):
+    ds, _, test_wl, art = built
+    st = execute_serial(art.index, ds, test_wl)
+    gt = exact_query_results(ds, test_wl)
+    got = np.array([len(r) for r in st.results])
+    np.testing.assert_array_equal(got, gt)
+
+
+def test_level_sync_matches_serial(built):
+    ds, _, test_wl, art = built
+    s1 = execute_serial(art.index, ds, test_wl)
+    s2 = execute_level_sync(art.index, ds, test_wl)
+    for a, b in zip(s1.results, s2.results):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_wisk_beats_single_cluster(built):
+    ds, _, test_wl, art = built
+    flat1 = ClusterSet.from_assignment(ds, np.zeros(ds.n, dtype=np.int32))
+    c_flat = exact_workload_cost(ds, flat1, test_wl).total
+    c_wisk = exact_workload_cost(ds, art.partition.clusters, test_wl).total
+    assert c_wisk < c_flat * 0.5, f"expected >2x cost win, got {c_flat} -> {c_wisk}"
+
+
+def test_hierarchy_reduces_node_accesses(built):
+    ds, _, test_wl, art = built
+    from repro.core.index import flat_index
+
+    st_h = execute_serial(art.index, ds, test_wl)
+    st_f = execute_serial(flat_index(ds, art.partition.clusters), ds, test_wl)
+    for a, b in zip(st_h.results, st_f.results):
+        np.testing.assert_array_equal(a, b)
+    if art.index.height > 1:
+        assert st_h.nodes_accessed.sum() <= st_f.nodes_accessed.sum()
+
+
+def test_batched_engine_matches_serial(built):
+    ds, _, test_wl, art = built
+    from repro.serve.engine import BatchedWisk, retrieve_workload
+
+    bw = BatchedWisk.build(art.index, ds)
+    out = retrieve_workload(bw, test_wl, max_leaves=art.partition.clusters.k)
+    st = execute_serial(art.index, ds, test_wl)
+    assert (out["overflow"] == 0).all()
+    got = [np.sort(row[row >= 0]) for row in out["ids"]]
+    for a, b in zip(got, st.results):
+        np.testing.assert_array_equal(a, np.sort(b))
+
+
+def test_knn_matches_bruteforce(built):
+    ds, _, test_wl, art = built
+    from repro.core.query import knn_query
+
+    rng = np.random.default_rng(0)
+    for qi in range(4):
+        point = rng.uniform(0.2, 0.8, 2).astype(np.float32)
+        kw_bm = test_wl.kw_bitmap[qi]
+        k = 10
+        got = knn_query(art.index, ds, point, kw_bm, k)
+        match = np.any(ds.kw_bitmap & kw_bm[None, :], axis=1)
+        d2 = ((ds.locs - point) ** 2).sum(1)
+        d2[~match] = np.inf
+        want = np.argsort(d2)[:k]
+        np.testing.assert_allclose(np.sort(d2[got]), np.sort(d2[want]), rtol=1e-6)
