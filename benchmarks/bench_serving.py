@@ -1,24 +1,61 @@
-"""WISK TPU-path serving throughput (batched kernels vs serial host)."""
+"""WISK TPU-path serving throughput: sparse frontier vs dense mask vs host.
+
+Reports, per mode, the per-query latency plus the traversal-work counters
+(DESIGN.md §3): ``nodes_scanned`` is what the kernels actually touch (padded
+frontier widths vs full level widths), ``nodes_checked`` the frontier-
+resident nodes -- the gap between the two modes' scanned counts is the
+payoff of the sparse descent.
+"""
 import time
 
-import jax.numpy as jnp
+import numpy as np
 
 from . import common as C
 from repro.serve.engine import BatchedWisk, retrieve_workload
+
+
+def _time_mode(bw, test, max_leaves, mode, reps=3):
+    out = retrieve_workload(bw, test, max_leaves=max_leaves, mode=mode)  # warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = retrieve_workload(bw, test, max_leaves=max_leaves, mode=mode)
+    dt = (time.perf_counter() - t0) / reps / test.m * 1e6
+    return dt, out
 
 
 def run():
     rows = []
     ds = C.dataset()
     art = C.wisk_index()
-    test = C.workload("fs", C.DEFAULT_N, 48, "MIX", 0.0005, 5, 24)
-    bw = BatchedWisk.build(art.index, ds)
-    out = retrieve_workload(bw, test, max_leaves=art.partition.clusters.k)  # warm + correctness
-    t0 = time.perf_counter()
-    for _ in range(3):
-        out = retrieve_workload(bw, test, max_leaves=art.partition.clusters.k)
-    dt = (time.perf_counter() - t0) / 3 / test.m * 1e6
-    rows.append(C.row("serving/batched-kernels", dt, f"overflow={int(out['overflow'].sum())}"))
+    test = C.workload("fs", C.DEFAULT_N, 64, "MIX", 0.0005, 5, 24)
+    bw = BatchedWisk.build(art.index, ds, dense=True)
+    max_leaves = art.partition.clusters.k
+
+    dt_f, out_f = _time_mode(bw, test, max_leaves, "frontier")
+    widths = ",".join(str(w) for w in out_f["frontier_widths"])
+    rows.append(
+        C.row(
+            "serving/frontier",
+            dt_f,
+            f"overflow={int(out_f['overflow'].sum())} "
+            f"scanned={int(out_f['nodes_scanned'].sum())} "
+            f"checked={int(out_f['nodes_checked'].sum())} widths=[{widths}]",
+        )
+    )
+    dt_d, out_d = _time_mode(bw, test, max_leaves, "dense")
+    rows.append(
+        C.row(
+            "serving/dense-mask",
+            dt_d,
+            f"overflow={int(out_d['overflow'].sum())} "
+            f"scanned={int(out_d['nodes_scanned'].sum())} "
+            f"checked={int(out_d['nodes_checked'].sum())}",
+        )
+    )
+    for qf, qd in zip(out_f["ids"], out_d["ids"]):
+        assert np.array_equal(np.sort(qf[qf >= 0]), np.sort(qd[qd >= 0])), (
+            "frontier/dense result mismatch"
+        )
     us, st = C.time_queries(art.index, ds, test)
     rows.append(C.row("serving/serial-host", us, f"cost={st.total_cost:.0f}"))
     return rows

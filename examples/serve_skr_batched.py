@@ -33,9 +33,13 @@ def main():
     for _ in range(3):
         retrieve_workload(bw, test, max_leaves=art.partition.clusters.k)
     dt = (time.perf_counter() - t0) / 3
+    widths = ",".join(str(w) for w in out["frontier_widths"])
     print(f"batched pipeline: {test.m} queries in {dt*1e3:.1f} ms "
           f"({dt/test.m*1e6:.0f} us/query), exact={agree}, "
-          f"verified/query={out['verified'].mean():.1f}")
+          f"verified/query={out['verified'].mean():.1f}, "
+          f"frontier widths=[{widths}], "
+          f"nodes checked/scanned per query="
+          f"{out['nodes_checked'].mean():.1f}/{out['nodes_scanned'].mean():.1f}")
 
 
 if __name__ == "__main__":

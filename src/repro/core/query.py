@@ -37,6 +37,49 @@ class QueryStats:
         return float(self.cost.sum())
 
 
+# ------------------------------------------------------- CSR / frontier helpers
+def padded_child_table(level) -> np.ndarray:
+    """(n, max_fanout) int32 child table from a level's CSR, padded with -1.
+
+    The hierarchy is a tree (every lower node has exactly one parent), so the
+    rows are disjoint: gathering the rows of a query's surviving frontier
+    yields the next frontier with no duplicates. Shared by the numpy
+    level-sync path and the device frontier descent (serve.engine).
+    """
+    cached = getattr(level, "_padded_child_table", None)
+    if cached is not None:
+        return cached
+    counts = np.diff(level.child_ptr)
+    fanout = int(counts.max()) if counts.size else 0
+    table = np.full((level.n, max(fanout, 1)), -1, dtype=np.int32)
+    for u in range(level.n):
+        ch = level.child[level.child_ptr[u] : level.child_ptr[u + 1]]
+        table[u, : ch.size] = ch
+    try:  # memoize on the level (a pure function of its static CSR)
+        level._padded_child_table = table
+    except AttributeError:  # plain classes/namedtuples without __dict__
+        pass
+    return table
+
+
+def propagate_hits(hit: np.ndarray, child_table: np.ndarray, n_down: int) -> np.ndarray:
+    """(m, n_up) bool hits -> (m, n_down) bool active-children mask.
+
+    Dense reference for CSR frontier expansion: a child is active iff its
+    (unique) parent hit. Equivalent to ``hit @ adjacency > 0`` with the dense
+    (n_up, n_down) 0/1 matrix -- the property test in tests/test_properties.py
+    pins that equivalence.
+    """
+    m = hit.shape[0]
+    nxt = np.zeros((m, n_down), dtype=bool)
+    for f in range(child_table.shape[1]):
+        col = child_table[:, f]
+        valid = col >= 0
+        if valid.any():
+            nxt[:, col[valid]] |= hit[:, valid]
+    return nxt
+
+
 def _node_match(level, rect, qbm) -> np.ndarray:
     mb = level.mbrs
     inter = (mb[:, 0] <= rect[2]) & (rect[0] <= mb[:, 2]) & (mb[:, 1] <= rect[3]) & (rect[1] <= mb[:, 3])
@@ -137,12 +180,8 @@ def execute_level_sync(
         if li == len(index.levels) - 1:
             leaf_hit = hit
             break
-        # propagate to children
-        nxt = np.zeros((m, index.levels[li + 1].n), dtype=bool)
-        for u in range(level.n):
-            ch = level.child[level.child_ptr[u] : level.child_ptr[u + 1]]
-            nxt[:, ch] |= hit[:, u : u + 1]
-        active = nxt
+        # propagate to children (CSR frontier expansion, dense-mask form)
+        active = propagate_hits(hit, padded_child_table(level), index.levels[li + 1].n)
     # leaf verification (vectorized per leaf)
     verified = np.zeros(m, dtype=np.int64)
     results: List[List[np.ndarray]] = [[] for _ in range(m)]

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: sparse-frontier node filtering (DESIGN.md §3).
+
+``skr_filter`` scores the full (query x node) cross product -- O(M*K) work
+per level no matter how selective the learned hierarchy is. The frontier
+kernel instead receives, per query, a *gathered* tile of candidate nodes
+(the query's frontier): MBRs ``(BM, BF, 4)``, bitmaps ``(BM, BF, W)`` and a
+validity plane for the -1 padding slots. It reuses the skr_filter inner
+loop -- rectangle intersect + unrolled bitmap-word AND -- but over the
+frontier tile, so per-level work is O(M*F) with F the bucketed frontier
+width, not the level width.
+
+Layout notes (TPU): the minor dimension is the frontier width (BF = 128
+lanes by default); the bitmap plane ``(BM, BF, W)`` is the big operand and
+streams through VMEM one word-plane at a time via the static W unroll, so
+only (BM, BF) boolean accumulators stay live.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _frontier_kernel(q_rects_ref, q_bm_ref, f_mbrs_ref, f_bm_ref, f_valid_ref, out_ref):
+    qr = q_rects_ref[...]  # (BM, 4)
+    fm = f_mbrs_ref[...]  # (BM, BF, 4)
+    inter = (
+        (qr[:, 0:1] <= fm[:, :, 2])
+        & (fm[:, :, 0] <= qr[:, 2:3])
+        & (qr[:, 1:2] <= fm[:, :, 3])
+        & (fm[:, :, 1] <= qr[:, 3:4])
+    )  # (BM, BF)
+    qb = q_bm_ref[...]  # (BM, W) uint32
+    fb = f_bm_ref[...]  # (BM, BF, W) uint32
+    W = qb.shape[1]
+    kw = jnp.zeros(inter.shape, dtype=jnp.bool_)
+    for w in range(W):  # static unroll over bitmap words (skr_filter inner loop)
+        kw = kw | ((fb[:, :, w] & qb[:, w][:, None]) != 0)
+    out_ref[...] = (inter & kw & (f_valid_ref[...] > 0)).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bf", "interpret"))
+def frontier_filter(
+    q_rects: jax.Array,  # (M, 4)
+    q_bm: jax.Array,  # (M, W)
+    f_mbrs: jax.Array,  # (M, F, 4)
+    f_bm: jax.Array,  # (M, F, W)
+    f_valid: jax.Array,  # (M, F) int8
+    bm: int = 8,
+    bf: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """(M, F) int8 survivor matrix. Inputs padded to tile multiples by ops.py."""
+    M, F = f_valid.shape
+    W = q_bm.shape[1]
+    bm = min(bm, M)
+    bf = min(bf, F)
+    grid = (pl.cdiv(M, bm), pl.cdiv(F, bf))
+    return pl.pallas_call(
+        _frontier_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 4), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, W), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, bf, 4), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bm, bf, W), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bm, bf), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bf), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, F), jnp.int8),
+        interpret=interpret,
+    )(q_rects, q_bm, f_mbrs, f_bm, f_valid)

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .cdf_mlp import cdf_mlp_bank
+from .frontier import frontier_filter
 from .skr_filter import skr_filter
 from .skr_verify import skr_verify
 from . import ref
@@ -22,6 +23,19 @@ from . import ref
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
+
+
+# sentinel rectangle that intersects nothing under the closed-rect predicate
+# (xlo > xhi): used for node/query padding here and in launch.wisk_serve
+NEVER_RECT = (2.0, 2.0, -2.0, -2.0)
+
+
+def padded_tile_len(n: int, tile: int = 128) -> int:
+    """Slots a kernel actually touches for a length-``n`` operand dimension:
+    the wrappers below block by ``min(tile, n)`` and pad up to a multiple of
+    it. Exposed so cost counters can report padded (true) device work."""
+    t = min(tile, max(int(n), 1))
+    return -(-int(n) // t) * t
 
 
 def _pad_dim(a: jax.Array, axis: int, mult: int, fill=0) -> jax.Array:
@@ -49,10 +63,29 @@ def filter_pairs(
     nm = jnp.asarray(n_mbrs, jnp.float32)
     pad_k = -(-K // bk_) * bk_ - K
     if pad_k:
-        nm = jnp.concatenate([nm, jnp.tile(jnp.array([[2.0, 2.0, -2.0, -2.0]], jnp.float32), (pad_k, 1))], 0)
+        nm = jnp.concatenate([nm, jnp.tile(jnp.array([NEVER_RECT], jnp.float32), (pad_k, 1))], 0)
     nb = _pad_dim(jnp.asarray(n_bm, jnp.uint32), 0, bk_)
     out = skr_filter(qr, qb, nm, nb, bm=bm_, bk=bk_, interpret=interpret)
     return out[:M, :K]
+
+
+def filter_frontier(
+    q_rects, q_bm, f_mbrs, f_bm, f_valid, bm: int = 8, bf: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """(M, F) int8 frontier-survivor matrix via the Pallas frontier kernel."""
+    if interpret is None:
+        interpret = _on_cpu()
+    M, F = f_valid.shape
+    bm_ = min(bm, max(M, 1))
+    bf_ = min(bf, max(F, 1))
+    qr = _pad_dim(jnp.asarray(q_rects, jnp.float32), 0, bm_)
+    qb = _pad_dim(jnp.asarray(q_bm, jnp.uint32), 0, bm_)
+    fm = _pad_dim(_pad_dim(jnp.asarray(f_mbrs, jnp.float32), 0, bm_), 1, bf_)
+    fb = _pad_dim(_pad_dim(jnp.asarray(f_bm, jnp.uint32), 0, bm_), 1, bf_)
+    fv = _pad_dim(_pad_dim(jnp.asarray(f_valid, jnp.int8), 0, bm_), 1, bf_)
+    out = frontier_filter(qr, qb, fm, fb, fv, bm=bm_, bf=bf_, interpret=interpret)
+    return out[:M, :F]
 
 
 def verify_candidates(
@@ -92,4 +125,4 @@ def cdf_bank_forward(
     return out[:N, :B]
 
 
-__all__ = ["filter_pairs", "verify_candidates", "cdf_bank_forward", "ref"]
+__all__ = ["filter_pairs", "filter_frontier", "verify_candidates", "cdf_bank_forward", "ref"]

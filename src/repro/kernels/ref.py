@@ -28,6 +28,29 @@ def skr_filter_ref(
     return (inter & kw).astype(jnp.int8)
 
 
+def frontier_filter_ref(
+    q_rects: jax.Array,  # (M, 4) f32
+    q_bm: jax.Array,  # (M, W) uint32
+    f_mbrs: jax.Array,  # (M, F, 4) f32 -- MBRs gathered at each frontier slot
+    f_bm: jax.Array,  # (M, F, W) uint32
+    f_valid: jax.Array,  # (M, F) int8 (1 = slot holds a real node)
+) -> jax.Array:
+    """(M, F) int8: frontier slot survives (MBR intersect AND bitmap AND valid).
+
+    Same predicate as ``skr_filter_ref`` but over per-query gathered node
+    tiles instead of the full (M, K) cross product -- the sparse-frontier
+    half of DESIGN.md §3.
+    """
+    inter = (
+        (q_rects[:, None, 0] <= f_mbrs[:, :, 2])
+        & (f_mbrs[:, :, 0] <= q_rects[:, None, 2])
+        & (q_rects[:, None, 1] <= f_mbrs[:, :, 3])
+        & (f_mbrs[:, :, 1] <= q_rects[:, None, 3])
+    )
+    kw = jnp.any((f_bm & q_bm[:, None, :]) != 0, axis=-1)
+    return (inter & kw & (f_valid > 0)).astype(jnp.int8)
+
+
 def skr_verify_ref(
     q_rects: jax.Array,  # (M, 4) f32
     q_bm: jax.Array,  # (M, W) uint32

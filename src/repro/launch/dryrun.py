@@ -173,12 +173,12 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: Path, causal_impl:
         rec["memory"] = {"error": str(e)}
 
     try:
-        ca = compiled.cost_analysis()
-        if isinstance(ca, (list, tuple)):
-            ca = ca[0]
+        from ..roofline.hlo_stats import cost_analysis_dict
+
+        ca = cost_analysis_dict(compiled)
         rec["cost"] = {k: float(v) for k, v in ca.items() if np.isscalar(v) and k in (
             "flops", "bytes accessed", "transcendentals", "utilization operand 0 {}",
-        ) or k in ("flops", "bytes accessed")}
+        )}
         print("cost_analysis: flops=%.3e bytes=%.3e" % (
             rec["cost"].get("flops", 0), rec["cost"].get("bytes accessed", 0)))
     except Exception as e:  # pragma: no cover

@@ -17,15 +17,57 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..sharding.compat import shard_map
+
 from ..configs.wisk import WiskServeConfig
+from ..kernels.ops import NEVER_RECT
 from ..kernels.ref import skr_filter_ref, skr_verify_ref
+from ..serve.engine import BatchedWisk, retrieve, round_up_bucket
 from ..sharding.rules import dp_axes
 
 OBJ_PER_LEAF = 512
 TOP_LEAVES_LOCAL = 4
+
+
+# ------------------------------------------------- batch/frontier bucketing
+def pad_queries_to_bucket(q_rects, q_bm, minimum: int = 8):
+    """Pad an incoming query batch to its power-of-two bucket.
+
+    The frontier descent (serve.engine) retraces per (batch, frontier-width)
+    shape; bucketing the batch dimension here -- like the engine buckets
+    frontier widths -- keeps the set of compiled shapes logarithmic in the
+    largest batch ever seen. Pad queries use never-intersecting rects and
+    empty bitmaps, so they survive no filter and verify nothing.
+    """
+    q_rects = np.asarray(q_rects, np.float32)
+    q_bm = np.asarray(q_bm, np.uint32)
+    m = q_rects.shape[0]
+    bucket = round_up_bucket(m, minimum)
+    if bucket == m:
+        return q_rects, q_bm, m
+    pad = bucket - m
+    rects = np.concatenate(
+        [q_rects, np.tile(np.array([NEVER_RECT], np.float32), (pad, 1))], 0
+    )
+    bms = np.concatenate([q_bm, np.zeros((pad, q_bm.shape[1]), np.uint32)], 0)
+    return rects, bms, m
+
+
+def serve_batch(
+    bw: BatchedWisk,
+    q_rects,
+    q_bm,
+    max_leaves: int = 32,
+    mode: str = "frontier",
+    minimum_bucket: int = 8,
+):
+    """Bucketed front door for the batched engine: pad -> retrieve -> slice."""
+    rects, bms, m = pad_queries_to_bucket(q_rects, q_bm, minimum_bucket)
+    out = retrieve(bw, jnp.asarray(rects), jnp.asarray(bms), max_leaves, mode=mode)
+    per_query = ("ids", "counts", "nodes_checked", "nodes_scanned", "verified", "overflow")
+    return {k: (v[:m] if k in per_query else v) for k, v in out.items()}
 
 
 def wisk_serve_step(q_rects, q_bm, leaf_mbrs, leaf_bm, obj_x, obj_y, obj_bm, obj_valid,

@@ -23,7 +23,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from ..sharding.compat import shard_map
 
 from ..configs.base import ArchConfig
 from ..sharding.rules import constrain, dp_axes

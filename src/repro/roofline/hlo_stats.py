@@ -61,6 +61,18 @@ class Computation:
     lines: List[str]
 
 
+def cost_analysis_dict(compiled) -> Dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns a one-element list of per-partition dicts; newer jax
+    returns the dict directly. Callers always want the flat dict.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 def split_computations(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
     comps: Dict[str, Computation] = {}
     entry = None
@@ -123,21 +135,34 @@ def dot_flops_line(line: str, table) -> int:
     if not sm:
         return 0
     result = _shape_elems(sm.group(2))
-    # operands
-    ops = re.findall(r"dot\(([^)]*)\)", line)
-    lhs_name = None
-    if ops:
-        parts = [p.strip().lstrip("%") for p in ops[0].split(",")]
-        if parts:
-            lhs_name = parts[0].split(" ")[-1].lstrip("%")
     cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
     contract = 1
-    if lhs_name and cm and lhs_name in table:
-        dims = table[lhs_name][1]
+    lhs_dims = _dot_lhs_dims(line, table)
+    if lhs_dims is not None and cm:
         for d in cm.group(1).split(","):
-            if d != "" and int(d) < len(dims):
-                contract *= dims[int(d)]
+            if d != "" and int(d) < len(lhs_dims):
+                contract *= lhs_dims[int(d)]
     return 2 * result * contract
+
+
+def _dot_lhs_dims(line: str, table) -> Optional[List[int]]:
+    """Dims of a dot's lhs operand.
+
+    Current XLA prints typed operands -- ``dot(f32[64,32]{1,0} %a, ...)`` --
+    so the lhs shape is read straight off the operand text (naive comma
+    splitting breaks on the ``{1,0}`` layout braces). Older untyped operand
+    lists -- ``dot(a, b)`` -- fall back to the symbol table.
+    """
+    ops = re.findall(r"dot\(([^)]*)\)", line)
+    if not ops:
+        return None
+    sm = _SHAPE_RE.search(ops[0])
+    if sm:  # typed operand: first shape in the operand list is the lhs type
+        return [int(d) for d in sm.group(2).split(",")] if sm.group(2) else []
+    names = re.findall(r"%?([\w\.\-]+)", ops[0].split(",")[0])
+    if names and names[-1] in table:
+        return table[names[-1]][1]
+    return None
 
 
 def analyze(hlo: str) -> Dict:

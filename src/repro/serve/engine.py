@@ -1,14 +1,38 @@
 """Serving engine: WISK retrieval front-end + batched LM decode.
 
-The WISK half is the TPU-execution path of the paper (level-synchronous
-filter via the Pallas kernels, capacity-bounded verification); the LM half
-is a simple batched greedy decoder over any arch bundle. ``retrieve()``
-returns exact SKR results (validated against core.query in tests) plus the
-Eq.1-style cost counters.
+The WISK half is the TPU-execution path of the paper (DESIGN.md §3). Two
+traversal modes share the leaf verification stage:
+
+* ``mode="frontier"`` (default) -- sparse frontier descent: each query
+  carries a padded int32 frontier of candidate node ids; per level the
+  Pallas frontier kernel filters the gathered frontier tile (MBR intersect
+  + bitmap AND) and survivors' children are expanded through device-resident
+  CSR child arrays into the next frontier, compacted with a prefix-sum
+  scatter. Per-level work is O(M * frontier_width), so the learned
+  hierarchy's pruning shows up as wall-clock, not just as a counter.
+* ``mode="dense"`` -- the original level-synchronous path kept for A/B
+  benchmarking: an (M, n_level) active mask and dense (n_up, n_down) int8
+  child matrices; per-level work is O(M * n_level) regardless of
+  selectivity.
+
+Both modes return exact SKR results (validated against core.query in
+tests/test_query_parity.py) plus Eq.1-style cost counters:
+
+* ``nodes_checked`` -- nodes whose MBR/bitmap were examined for the query
+  (frontier-resident nodes only; matches ``execute_serial``'s
+  ``nodes_accessed``),
+* ``nodes_scanned`` -- slots the kernels actually touched (padded frontier
+  widths, or full level widths in dense mode) -- the honest device-work
+  measure the benchmark compares,
+* ``verified``/``overflow`` -- Eq.1 verification cost and ``max_leaves``
+  spill accounting.
+
+The LM half is a simple batched greedy decoder over any arch bundle.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -16,8 +40,23 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ..core.query import padded_child_table
 from ..core.types import GeoTextDataset, WiskIndex, Workload
 from ..kernels import ops
+
+
+def round_up_bucket(n: int, minimum: int = 8) -> int:
+    """Next power-of-two >= n (>= minimum): the frontier/batch width buckets.
+
+    Bucketing dynamic widths to powers of two bounds the number of distinct
+    shapes the jitted level steps ever see (log2 of the largest level), so
+    recompiles stay O(levels * log(width)) for the lifetime of the server.
+    """
+    n = max(int(n), 1)
+    b = int(minimum)
+    while b < n:
+        b <<= 1
+    return b
 
 
 @dataclasses.dataclass
@@ -26,28 +65,46 @@ class BatchedWisk:
 
     level_mbrs: List[jnp.ndarray]
     level_bms: List[jnp.ndarray]
-    child_matrix: List[jnp.ndarray]  # (n_up, n_down) int8 adjacency per level
+    # CSR children per non-leaf level, padded-table form (frontier path)
+    child_table: List[jnp.ndarray]  # (n_up, max_fanout) int32, -1 padded
+    child_counts: List[jnp.ndarray]  # (n_up,) int32
+    # dense adjacency per non-leaf level (A/B dense path; [] if not built)
+    child_matrix: List[jnp.ndarray]  # (n_up, n_down) int8
     leaf_obj_x: jnp.ndarray  # (K, OBJ) padded per-leaf object blocks
     leaf_obj_y: jnp.ndarray
     leaf_obj_bm: jnp.ndarray  # (K, OBJ, W)
     leaf_obj_id: jnp.ndarray  # (K, OBJ) int32, -1 pad
     obj_per_leaf: int
 
+    @property
+    def n_levels(self) -> int:
+        return len(self.level_mbrs)
+
+    @property
+    def n_leaves(self) -> int:
+        return int(self.level_mbrs[-1].shape[0])
+
     @staticmethod
-    def build(index: WiskIndex, dataset: GeoTextDataset) -> "BatchedWisk":
+    def build(index: WiskIndex, dataset: GeoTextDataset, dense: bool = False) -> "BatchedWisk":
+        """``dense=True`` additionally materializes the O(n_up * n_down)
+        child matrices the A/B ``mode="dense"`` path needs; the default
+        frontier path only builds the CSR arrays."""
         mbrs = [jnp.asarray(l.mbrs) for l in index.levels]
         bms = [jnp.asarray(l.bitmaps) for l in index.levels]
-        child = []
+        child_table, child_counts, child_matrix = [], [], []
         for li in range(len(index.levels) - 1):
             l = index.levels[li]
-            n_down = index.levels[li + 1].n
-            m = np.zeros((l.n, n_down), dtype=np.int8)
-            for u in range(l.n):
-                m[u, l.child[l.child_ptr[u] : l.child_ptr[u + 1]]] = 1
-            child.append(jnp.asarray(m))
+            child_table.append(jnp.asarray(padded_child_table(l)))
+            child_counts.append(jnp.asarray(np.diff(l.child_ptr), jnp.int32))
+            if dense:
+                n_down = index.levels[li + 1].n
+                m = np.zeros((l.n, n_down), dtype=np.int8)
+                for u in range(l.n):
+                    m[u, l.child[l.child_ptr[u] : l.child_ptr[u + 1]]] = 1
+                child_matrix.append(jnp.asarray(m))
         clusters = index.clusters
         sizes = np.diff(clusters.offsets)
-        OBJ = int(max(8, 1 << int(np.ceil(np.log2(max(sizes.max(), 1))))))
+        OBJ = round_up_bucket(int(sizes.max()))
         K = clusters.k
         W = dataset.words
         ox = np.zeros((K, OBJ), np.float32)
@@ -63,7 +120,9 @@ class BatchedWisk:
         return BatchedWisk(
             level_mbrs=mbrs,
             level_bms=bms,
-            child_matrix=child,
+            child_table=child_table,
+            child_counts=child_counts,
+            child_matrix=child_matrix,
             leaf_obj_x=jnp.asarray(ox),
             leaf_obj_y=jnp.asarray(oy),
             leaf_obj_bm=jnp.asarray(obm),
@@ -72,35 +131,62 @@ class BatchedWisk:
         )
 
 
-def retrieve(
-    bw: BatchedWisk,
-    q_rects: jnp.ndarray,
-    q_bm: jnp.ndarray,
-    max_leaves: int = 32,
-) -> Dict[str, np.ndarray]:
-    """Level-synchronous traversal + capacity-bounded verification.
+# ------------------------------------------------------------ frontier steps
+@jax.jit
+def _filter_frontier_level(mbrs, bms, q_rects, q_bm, frontier):
+    """Gather frontier node tiles and run the Pallas frontier kernel."""
+    valid = frontier >= 0
+    safe = jnp.clip(frontier, 0, mbrs.shape[0] - 1)
+    surv = ops.filter_frontier(q_rects, q_bm, mbrs[safe], bms[safe], valid.astype(jnp.int8))
+    return surv, jnp.sum(valid, axis=1).astype(jnp.int32)
 
-    Returns result ids (padded -1), counts, and cost counters. Exact as long
-    as <= max_leaves leaves are relevant per query (overflow is counted).
+
+@jax.jit
+def _frontier_child_counts(child_counts, frontier, surv):
+    """Per-query number of children the surviving frontier will expand to."""
+    safe = jnp.clip(frontier, 0, child_counts.shape[0] - 1)
+    return jnp.sum(jnp.where(surv > 0, child_counts[safe], 0), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("f_next",))
+def _expand_frontier(child_table, frontier, surv, f_next: int):
+    """CSR gather of survivors' children + prefix-sum compaction.
+
+    The hierarchy is a tree, so gathered child rows are disjoint and the
+    compacted frontier has no duplicates. ``f_next`` must be >= the max
+    per-query child count (guaranteed by the caller's bucketing), so the
+    descent is lossless.
     """
+    M, F = frontier.shape
+    safe = jnp.clip(frontier, 0, child_table.shape[0] - 1)
+    cand = jnp.where((surv > 0)[:, :, None], child_table[safe], -1).reshape(M, -1)
+    validc = cand >= 0
+    pos = jnp.cumsum(validc, axis=1) - 1
+    pos = jnp.where(validc & (pos < f_next), pos, f_next)  # f_next = trash slot
+    nxt = jnp.full((M, f_next + 1), -1, jnp.int32)
+    nxt = nxt.at[jnp.arange(M)[:, None], pos].set(cand, mode="drop")
+    return nxt[:, :f_next]
+
+
+@functools.partial(jax.jit, static_argnames=("take", "n_leaf"))
+def _select_leaves_frontier(frontier, surv, take: int, n_leaf: int):
+    """Up to ``take`` surviving leaves per query, smallest leaf id first.
+
+    Keying top-k by ``n_leaf - leaf_id`` reproduces the dense path's
+    tie-break (top_k prefers lower indices), so dense and frontier modes
+    drop the *same* leaves under ``max_leaves`` overflow.
+    """
+    key = jnp.where(surv > 0, n_leaf - frontier, 0)
+    val, _ = jax.lax.top_k(key, take)
+    leaf_ok = val > 0
+    top_leaf = jnp.where(leaf_ok, n_leaf - val, 0)
+    overflow = jnp.maximum(jnp.sum((surv > 0).astype(jnp.int32), axis=1) - take, 0)
+    return top_leaf, leaf_ok, overflow
+
+
+def _verify_leaves(bw: BatchedWisk, q_rects, q_bm, top_leaf, leaf_ok):
+    """Capacity-bounded verification of the selected leaves (shared by modes)."""
     M = q_rects.shape[0]
-    active = jnp.ones((M, bw.level_mbrs[0].shape[0]), jnp.int8)
-    nodes_checked = jnp.zeros((M,), jnp.int64)
-    for li in range(len(bw.level_mbrs)):
-        rel = ops.filter_pairs(q_rects, q_bm, bw.level_mbrs[li], bw.level_bms[li])
-        nodes_checked = nodes_checked + jnp.sum(active > 0, axis=1)
-        hit = (rel > 0) & (active > 0)
-        if li < len(bw.level_mbrs) - 1:
-            active = (hit.astype(jnp.int8) @ bw.child_matrix[li] > 0).astype(jnp.int8)
-        else:
-            leaf_hit = hit
-    # pick up to max_leaves relevant leaves per query
-    score = leaf_hit.astype(jnp.int32)
-    take = min(max_leaves, score.shape[1])
-    top_val, top_leaf = jax.lax.top_k(score, take)  # (M, L)
-    leaf_ok = top_val > 0
-    overflow = jnp.maximum(jnp.sum(score, axis=1) - take, 0)
-    # gather candidate blocks
     cx = bw.leaf_obj_x[top_leaf].reshape(M, -1)
     cy = bw.leaf_obj_y[top_leaf].reshape(M, -1)
     cbm = bw.leaf_obj_bm[top_leaf].reshape(M, -1, q_bm.shape[1])
@@ -113,18 +199,121 @@ def retrieve(
         (jnp.any(cbm & q_bm[:, None, :] != 0, axis=-1) & cval), axis=1
     )
     ids = jnp.where(match > 0, cid, -1)
+    return ids, counts, kw_scanned
+
+
+def _retrieve_frontier(
+    bw: BatchedWisk, q_rects: jnp.ndarray, q_bm: jnp.ndarray, max_leaves: int
+) -> Dict[str, np.ndarray]:
+    M = q_rects.shape[0]
+    n_root = int(bw.level_mbrs[0].shape[0])
+    width = round_up_bucket(n_root)
+    root = np.full((width,), -1, np.int32)
+    root[:n_root] = np.arange(n_root, dtype=np.int32)
+    frontier = jnp.tile(jnp.asarray(root)[None, :], (M, 1))
+
+    nodes_checked = jnp.zeros((M,), jnp.int32)
+    widths: List[int] = []
+    surv = None
+    for li in range(bw.n_levels):
+        widths.append(int(frontier.shape[1]))
+        surv, n_valid = _filter_frontier_level(
+            bw.level_mbrs[li], bw.level_bms[li], q_rects, q_bm, frontier
+        )
+        nodes_checked = nodes_checked + n_valid
+        if li < bw.n_levels - 1:
+            # bucket the next frontier width on the batch's actual occupancy
+            need = _frontier_child_counts(bw.child_counts[li], frontier, surv)
+            f_next = round_up_bucket(int(jnp.max(need)))
+            frontier = _expand_frontier(bw.child_table[li], frontier, surv, f_next)
+
+    n_leaf = bw.n_leaves
+    take = min(max_leaves, n_leaf, int(frontier.shape[1]))
+    top_leaf, leaf_ok, overflow = _select_leaves_frontier(frontier, surv, take, n_leaf)
+    ids, counts, kw_scanned = _verify_leaves(bw, q_rects, q_bm, top_leaf, leaf_ok)
     return dict(
         ids=np.asarray(ids),
         counts=np.asarray(counts),
-        nodes_checked=np.asarray(nodes_checked),
+        nodes_checked=np.asarray(nodes_checked, np.int64),
+        nodes_scanned=np.full((M,), sum(widths), np.int64),
+        verified=np.asarray(kw_scanned),
+        overflow=np.asarray(overflow),
+        frontier_widths=np.asarray(widths, np.int32),
+    )
+
+
+# --------------------------------------------------------------- dense path
+def _retrieve_dense(
+    bw: BatchedWisk, q_rects: jnp.ndarray, q_bm: jnp.ndarray, max_leaves: int
+) -> Dict[str, np.ndarray]:
+    if len(bw.child_matrix) != len(bw.level_mbrs) - 1:
+        raise ValueError("dense mode needs BatchedWisk.build(..., dense=True)")
+    M = q_rects.shape[0]
+    active = jnp.ones((M, bw.level_mbrs[0].shape[0]), jnp.int8)
+    nodes_checked = jnp.zeros((M,), jnp.int32)
+    for li in range(len(bw.level_mbrs)):
+        rel = ops.filter_pairs(q_rects, q_bm, bw.level_mbrs[li], bw.level_bms[li])
+        nodes_checked = nodes_checked + jnp.sum(active > 0, axis=1)
+        hit = (rel > 0) & (active > 0)
+        if li < len(bw.level_mbrs) - 1:
+            active = (hit.astype(jnp.int8) @ bw.child_matrix[li] > 0).astype(jnp.int8)
+        else:
+            leaf_hit = hit
+    # pick up to max_leaves relevant leaves per query (lowest leaf id first)
+    score = leaf_hit.astype(jnp.int32)
+    take = min(max_leaves, score.shape[1])
+    top_val, top_leaf = jax.lax.top_k(score, take)  # (M, L)
+    leaf_ok = top_val > 0
+    overflow = jnp.maximum(jnp.sum(score, axis=1) - take, 0)
+    ids, counts, kw_scanned = _verify_leaves(bw, q_rects, q_bm, top_leaf, leaf_ok)
+    return dict(
+        ids=np.asarray(ids),
+        counts=np.asarray(counts),
+        nodes_checked=np.asarray(nodes_checked, np.int64),
+        # padded (tile-aligned) widths filter_pairs actually scores, so the
+        # A/B metric stays symmetric with the frontier path (whose power-of-
+        # two buckets are already tile-exact)
+        nodes_scanned=np.full(
+            (M,),
+            sum(ops.padded_tile_len(int(l.shape[0])) for l in bw.level_mbrs),
+            np.int64,
+        ),
         verified=np.asarray(kw_scanned),
         overflow=np.asarray(overflow),
     )
 
 
-def retrieve_workload(bw: BatchedWisk, workload: Workload, max_leaves: int = 32):
+def retrieve(
+    bw: BatchedWisk,
+    q_rects: jnp.ndarray,
+    q_bm: jnp.ndarray,
+    max_leaves: int = 32,
+    mode: str = "frontier",
+) -> Dict[str, np.ndarray]:
+    """Batched SKR retrieval. Exact as long as <= max_leaves leaves are
+    relevant per query (the spill is counted in ``overflow``).
+
+    ``mode="frontier"`` is the sparse descent; ``mode="dense"`` the original
+    full-level scan (kept for A/B benchmarking).
+    """
+    q_rects = jnp.asarray(q_rects, jnp.float32)
+    q_bm = jnp.asarray(q_bm, jnp.uint32)
+    if mode == "frontier":
+        return _retrieve_frontier(bw, q_rects, q_bm, max_leaves)
+    if mode == "dense":
+        return _retrieve_dense(bw, q_rects, q_bm, max_leaves)
+    raise ValueError(f"unknown retrieve mode {mode!r}")
+
+
+def retrieve_workload(
+    bw: BatchedWisk, workload: Workload, max_leaves: int = 32, mode: str = "frontier"
+):
     return retrieve(
-        bw, jnp.asarray(workload.rects), jnp.asarray(workload.kw_bitmap), max_leaves
+        bw,
+        jnp.asarray(workload.rects),
+        jnp.asarray(workload.kw_bitmap),
+        max_leaves,
+        mode=mode,
     )
 
 

@@ -1,0 +1,31 @@
+"""Version-tolerant shims over moving jax APIs.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to ``jax.shard_map``
+(and renamed ``check_rep`` -> ``check_vma``) across jax releases. Callers in
+this repo use the modern spelling (``jax.shard_map`` semantics with
+``check_vma=``); this module makes that spelling work on older jax (0.4.x)
+by falling back to the experimental module and translating the kwarg.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+try:  # jax >= 0.6 style
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+
+    _KWARG = "check_vma"
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _KWARG = "check_rep"
+
+
+@functools.wraps(_shard_map)
+def shard_map(*args: Any, **kwargs: Any):
+    if "check_vma" in kwargs and _KWARG != "check_vma":
+        kwargs[_KWARG] = kwargs.pop("check_vma")
+    return _shard_map(*args, **kwargs)
+
+
+__all__ = ["shard_map"]

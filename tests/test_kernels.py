@@ -58,6 +58,73 @@ def test_cdf_mlp_sweep(n, b, h):
     np.testing.assert_allclose(out, exp, atol=2e-6)
 
 
+@pytest.mark.parametrize(
+    "m,f,w",
+    [
+        (1, 1, 1),  # degenerate single-slot frontier
+        (5, 37, 3),  # nothing a multiple of the 128-lane tile
+        (9, 130, 4),  # frontier just past one lane tile
+        (33, 257, 8),  # queries and frontier both off-tile
+        (8, 128, 16),  # exact tile for contrast
+    ],
+)
+def test_frontier_filter_sweep(m, f, w):
+    """Pallas frontier kernel (interpret) vs jnp oracle, incl. pad slots."""
+    rng = np.random.default_rng(m * 7919 + f * 31 + w)
+    qr = _rand_rects(rng, m)
+    qb = (rng.integers(0, 2 ** 32, (m, w), dtype=np.uint32)
+          * rng.integers(0, 2, (m, w), dtype=np.uint32))
+    fm = _rand_rects(rng, m * f).reshape(m, f, 4).astype(np.float32)
+    fb = (rng.integers(0, 2 ** 32, (m, f, w), dtype=np.uint32)
+          * rng.integers(0, 2, (m, f, w), dtype=np.uint32))
+    fv = rng.integers(0, 2, (m, f)).astype(np.int8)
+    out = np.asarray(ops.filter_frontier(qr, qb, fm, fb, fv))
+    exp = np.asarray(ref.frontier_filter_ref(*map(jnp.asarray, (qr, qb, fm, fb, fv))))
+    np.testing.assert_array_equal(out, exp)
+
+
+def test_frontier_filter_block_size_invariance():
+    rng = np.random.default_rng(1)
+    m, f, w = 21, 70, 5
+    qr = _rand_rects(rng, m)
+    qb = rng.integers(0, 2 ** 32, (m, w), dtype=np.uint32)
+    fm = _rand_rects(rng, m * f).reshape(m, f, 4).astype(np.float32)
+    fb = rng.integers(0, 2 ** 32, (m, f, w), dtype=np.uint32)
+    fv = rng.integers(0, 2, (m, f)).astype(np.int8)
+    a = np.asarray(ops.filter_frontier(qr, qb, fm, fb, fv, bm=4, bf=16))
+    b = np.asarray(ops.filter_frontier(qr, qb, fm, fb, fv, bm=8, bf=128))
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("m,k,w", [(3, 5, 2), (127, 129, 7)])
+def test_skr_filter_off_tile_padding(m, k, w):
+    """skr_filter on shapes straddling the 128-lane tile boundary."""
+    rng = np.random.default_rng(m + k * 13 + w)
+    qr = _rand_rects(rng, m)
+    nm = _rand_rects(rng, k)
+    qb = rng.integers(0, 2 ** 32, (m, w), dtype=np.uint32)
+    nb = (rng.integers(0, 2 ** 32, (k, w), dtype=np.uint32)
+          * rng.integers(0, 2, (k, w), dtype=np.uint32))
+    out = np.asarray(ops.filter_pairs(qr, qb, nm, nb))
+    exp = np.asarray(ref.skr_filter_ref(*map(jnp.asarray, (qr, qb, nm, nb))))
+    np.testing.assert_array_equal(out, exp)
+
+
+@pytest.mark.parametrize("m,c,w", [(2, 3, 1), (9, 513, 5)])
+def test_skr_verify_off_tile_padding(m, c, w):
+    """skr_verify on candidate widths just past the block size."""
+    rng = np.random.default_rng(m * 3 + c + w)
+    qr = _rand_rects(rng, m)
+    qb = rng.integers(0, 2 ** 32, (m, w), dtype=np.uint32)
+    cx = rng.uniform(0, 1, (m, c)).astype(np.float32)
+    cy = rng.uniform(0, 1, (m, c)).astype(np.float32)
+    cb = rng.integers(0, 2 ** 32, (m, c, w), dtype=np.uint32)
+    cv = rng.integers(0, 2, (m, c)).astype(np.int8)
+    out = np.asarray(ops.verify_candidates(qr, qb, cx, cy, cb, cv))
+    exp = np.asarray(ref.skr_verify_ref(*map(jnp.asarray, (qr, qb, cx, cy, cb, cv))))
+    np.testing.assert_array_equal(out, exp)
+
+
 def test_filter_block_size_invariance():
     rng = np.random.default_rng(0)
     m, k, w = 50, 90, 5

@@ -5,6 +5,10 @@ param-count sanity."""
 import numpy as np
 import pytest
 
+# compiling a train step per architecture takes minutes on CPU; excluded
+# from the CI fast lane (`pytest -m "not slow"`)
+pytestmark = pytest.mark.slow
+
 import jax
 import jax.numpy as jnp
 

@@ -1,5 +1,12 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+hypothesis lives in requirements-test.txt, not the runtime deps; the module
+skips cleanly (instead of failing collection) where it isn't installed.
+"""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (requirements-test.txt)")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
@@ -100,6 +107,40 @@ def test_int8_quantization_error_bound(size, seed):
     back = int8_dequantize(q, s)
     max_err = float(jnp.max(jnp.abs(back - x)))
     assert max_err <= float(s) * 0.5 + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_down=st.integers(1, 60),
+    m=st.integers(1, 8),
+    seed=st.integers(0, 10_000),
+)
+def test_csr_frontier_propagation_matches_dense_matmul(n_down, m, seed):
+    """CSR frontier expansion == dense 0/1 adjacency matmul on random parents.
+
+    This is the invariant the serving engine's sparse frontier descent rests
+    on (DESIGN.md §3): expanding the surviving frontier through the padded
+    CSR child table must activate exactly the children the dense
+    ``hit @ child_matrix > 0`` mask would.
+    """
+    from repro.core.query import padded_child_table, propagate_hits
+
+    rng = np.random.default_rng(seed)
+    n_up = int(rng.integers(1, n_down + 1))
+    parent = rng.integers(0, n_up, n_down)
+    parent[rng.integers(0, n_down)] = n_up - 1  # keep the parent count exact
+    order = np.argsort(parent, kind="stable").astype(np.int32)
+    ptr = np.zeros(n_up + 1, np.int64)
+    np.cumsum(np.bincount(parent, minlength=n_up), out=ptr[1:])
+
+    class _Level:
+        child_ptr, child, n = ptr, order, n_up
+
+    hit = rng.integers(0, 2, (m, n_up)).astype(bool)
+    got = propagate_hits(hit, padded_child_table(_Level), n_down)
+    adj = np.zeros((n_up, n_down), np.int8)
+    adj[parent, np.arange(n_down)] = 1
+    np.testing.assert_array_equal(got, (hit @ adj) > 0)
 
 
 def test_error_feedback_recovers_dropped_mass():

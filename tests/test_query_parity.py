@@ -1,0 +1,183 @@
+"""Cross-path parity: serial / level-sync / batched dense / batched frontier.
+
+The serving rewrite (sparse frontier descent, DESIGN.md §3) is only
+acceptable if it is provably exact: on seeded randomized datasets and
+workloads all four execution paths must return identical result-id sets and
+consistent Eq.1 cost counters, including flat (no-hierarchy) indexes and
+small-``max_leaves`` overflow. Index construction here is deterministic
+(grid clusters + spatial grouping) so the suite is fast and seed-stable --
+it does not run the DQN packer.
+"""
+import numpy as np
+import pytest
+
+from repro.core.index import assemble_index, flat_index
+from repro.core.packing import HierarchyResult
+from repro.core.query import (
+    execute_level_sync,
+    execute_serial,
+    padded_child_table,
+    propagate_hits,
+)
+from repro.core.types import ClusterSet
+from repro.data.synth import make_dataset
+from repro.data.workloads import make_workload
+from repro.serve.engine import BatchedWisk, retrieve_workload, round_up_bucket
+
+
+def _grid_clusters(ds, g):
+    cell = np.minimum((ds.locs * g).astype(np.int32), g - 1)
+    assign = cell[:, 0] * g + cell[:, 1]
+    _, assign = np.unique(assign, return_inverse=True)
+    return ClusterSet.from_assignment(ds, assign.astype(np.int32))
+
+
+def _spatial_parents(mbrs, g):
+    cent = np.clip((mbrs[:, :2] + mbrs[:, 2:]) / 2, 0.0, 1.0)
+    cell = np.minimum((cent * g).astype(np.int32), g - 1)
+    pid = cell[:, 0] * g + cell[:, 1]
+    _, pid = np.unique(pid, return_inverse=True)
+    return pid.astype(np.int32)
+
+
+def _build_index(ds, g=6, levels=2):
+    """Deterministic hierarchy: grid leaves grouped spatially, bottom-up."""
+    clusters = _grid_clusters(ds, g)
+    parents = []
+    mbrs = clusters.mbrs
+    gg = max(2, g // 2)
+    for _ in range(levels - 1):
+        p = _spatial_parents(mbrs, gg)
+        if p.max() + 1 >= mbrs.shape[0]:  # grouping stopped shrinking
+            break
+        parents.append(p)
+        n_up = int(p.max()) + 1
+        up = np.zeros((n_up, 4), np.float32)
+        for u in range(n_up):
+            mb = mbrs[p == u]
+            up[u] = (mb[:, 0].min(), mb[:, 1].min(), mb[:, 2].max(), mb[:, 3].max())
+        mbrs = up
+        gg = max(2, gg // 2)
+    hier = HierarchyResult(parents=parents, level_labels=[], packs=[]) if parents else None
+    return assemble_index(ds, clusters, hier), clusters
+
+
+def _result_sets(out):
+    return [np.sort(row[row >= 0]) for row in out["ids"]]
+
+
+@pytest.mark.parametrize("seed,levels", [(0, 2), (1, 2), (2, 3), (3, 1)])
+def test_all_paths_identical(seed, levels):
+    ds = make_dataset("fs", n=1500, seed=seed)
+    if levels == 1:
+        index, clusters = flat_index(ds, _grid_clusters(ds, 5)), _grid_clusters(ds, 5)
+    else:
+        index, clusters = _build_index(ds, g=6, levels=levels)
+    wl = make_workload(ds, m=20, dist="MIX", seed=seed + 10)
+    st_serial = execute_serial(index, ds, wl)
+    st_sync = execute_level_sync(index, ds, wl)
+    bw = BatchedWisk.build(index, ds, dense=True)
+    outs = {
+        mode: retrieve_workload(bw, wl, max_leaves=clusters.k, mode=mode)
+        for mode in ("dense", "frontier")
+    }
+    for a, b in zip(st_serial.results, st_sync.results):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(st_serial.nodes_accessed, st_sync.nodes_accessed)
+    np.testing.assert_array_equal(st_serial.verified, st_sync.verified)
+    for mode, out in outs.items():
+        assert (out["overflow"] == 0).all(), mode
+        for got, want in zip(_result_sets(out), st_serial.results):
+            np.testing.assert_array_equal(got, np.sort(want), err_msg=mode)
+        np.testing.assert_array_equal(out["nodes_checked"], st_serial.nodes_accessed)
+        np.testing.assert_array_equal(out["verified"], st_serial.verified)
+        np.testing.assert_array_equal(out["counts"], [len(r) for r in st_serial.results])
+
+
+def test_frontier_scans_fewer_nodes_than_dense_mask():
+    """The acceptance gate of the rewrite: per-level kernel work is the
+    bucketed frontier width, not the level width, so on a hierarchical index
+    the frontier path touches strictly fewer slots than the dense mask --
+    and examines exactly the nodes the paper-faithful traversal does."""
+    ds = make_dataset("fs", n=2500, seed=5)
+    index, clusters = _build_index(ds, g=8, levels=3)
+    assert index.height >= 2
+    wl = make_workload(ds, m=32, dist="MIX", seed=7)
+    bw = BatchedWisk.build(index, ds, dense=True)
+    dense = retrieve_workload(bw, wl, max_leaves=clusters.k, mode="dense")
+    frontier = retrieve_workload(bw, wl, max_leaves=clusters.k, mode="frontier")
+    assert frontier["nodes_scanned"].sum() < dense["nodes_scanned"].sum()
+    assert frontier["nodes_checked"].sum() < dense["nodes_scanned"].sum()
+    st = execute_serial(index, ds, wl)
+    np.testing.assert_array_equal(frontier["nodes_checked"], st.nodes_accessed)
+    # per-level width never exceeds its bucketed level size
+    for w, lvl in zip(frontier["frontier_widths"], index.levels):
+        assert w <= round_up_bucket(lvl.n)
+
+
+def test_max_leaves_overflow_parity():
+    """Small max_leaves: dense and frontier must drop the SAME leaves (ids
+    and overflow counts identical) and return subsets of the exact results."""
+    ds = make_dataset("fs", n=1500, seed=8)
+    index, clusters = _build_index(ds, g=6, levels=2)
+    # big rectangles so queries touch many leaves and actually overflow
+    wl = make_workload(ds, m=16, dist="UNI", region_frac=0.2, n_keywords=4, seed=9)
+    bw = BatchedWisk.build(index, ds, dense=True)
+    st = execute_serial(index, ds, wl)
+    for max_leaves in (1, 2, 4):
+        dense = retrieve_workload(bw, wl, max_leaves=max_leaves, mode="dense")
+        frontier = retrieve_workload(bw, wl, max_leaves=max_leaves, mode="frontier")
+        np.testing.assert_array_equal(dense["overflow"], frontier["overflow"])
+        for a, b in zip(_result_sets(dense), _result_sets(frontier)):
+            np.testing.assert_array_equal(a, b)
+        for got, want in zip(_result_sets(frontier), st.results):
+            assert np.isin(got, want).all()
+    assert retrieve_workload(bw, wl, max_leaves=1, mode="frontier")["overflow"].sum() > 0
+    # with full capacity the overflow vanishes and results are exact again
+    full = retrieve_workload(bw, wl, max_leaves=clusters.k, mode="frontier")
+    assert (full["overflow"] == 0).all()
+    for got, want in zip(_result_sets(full), st.results):
+        np.testing.assert_array_equal(got, np.sort(want))
+
+
+def test_csr_propagation_matches_dense_matmul():
+    """CSR frontier expansion == dense adjacency matmul on random parents
+    (non-hypothesis twin of the property test in test_properties.py)."""
+    rng = np.random.default_rng(11)
+    for _ in range(10):
+        n_down = int(rng.integers(2, 40))
+        n_up = int(rng.integers(1, n_down + 1))
+        parent = rng.integers(0, n_up, n_down)
+        parent[rng.integers(0, n_down)] = n_up - 1  # ensure last parent used
+        ptr = np.zeros(n_up + 1, np.int64)
+        order = np.argsort(parent, kind="stable").astype(np.int32)
+        np.cumsum(np.bincount(parent, minlength=n_up), out=ptr[1:])
+
+        class L:
+            child_ptr, child, n = ptr, order, n_up
+
+        table = padded_child_table(L)
+        hit = rng.integers(0, 2, (5, n_up)).astype(bool)
+        got = propagate_hits(hit, table, n_down)
+        adj = np.zeros((n_up, n_down), np.int8)
+        adj[parent, np.arange(n_down)] = 1
+        np.testing.assert_array_equal(got, (hit @ adj) > 0)
+
+
+def test_bucketing_pads_are_inert():
+    """serve_batch pads the batch to its power-of-two bucket; pad queries
+    must not change real queries' results or counters."""
+    from repro.launch.wisk_serve import pad_queries_to_bucket, serve_batch
+
+    ds = make_dataset("fs", n=1200, seed=12)
+    index, clusters = _build_index(ds, g=5, levels=2)
+    bw = BatchedWisk.build(index, ds)
+    wl = make_workload(ds, m=13, dist="MIX", seed=13)  # not a power of two
+    rects, bms, m = pad_queries_to_bucket(wl.rects, wl.kw_bitmap)
+    assert m == 13 and rects.shape[0] == 16
+    out = serve_batch(bw, wl.rects, wl.kw_bitmap, max_leaves=clusters.k)
+    direct = retrieve_workload(bw, wl, max_leaves=clusters.k, mode="frontier")
+    assert out["ids"].shape[0] == 13
+    for a, b in zip(_result_sets(out), _result_sets(direct)):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(out["nodes_checked"], direct["nodes_checked"])

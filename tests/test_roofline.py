@@ -5,7 +5,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.roofline.hlo_stats import analyze
+from repro.roofline.hlo_stats import analyze, cost_analysis_dict
 from repro.roofline.analysis import model_flops, roofline_from_record
 
 
@@ -21,7 +21,7 @@ def test_cost_analysis_counts_while_body_once():
 
     x = jnp.ones((128, 128))
     c = _compile(lambda x: jax.lax.scan(body, x, None, length=8)[0], x)
-    raw = c.cost_analysis()["flops"]
+    raw = cost_analysis_dict(c)["flops"]
     assert raw == pytest.approx(2 * 128**3, rel=0.01)  # ONE body, not 8
 
 
