@@ -1,4 +1,10 @@
-"""Table 4: index construction time (incl. Accelerated WISK)."""
+"""Table 4: index construction time (incl. Accelerated WISK).
+
+Also the A/B for the construction execution strategies (DESIGN.md §5): the
+batched (frontier-parallel splits + scan-compiled RL packing) and sequential
+(per-subspace / per-env-step host loops) modes are reported side by side
+with per-phase timings and round/dispatch counters.
+"""
 import time
 
 from . import common as C
@@ -7,18 +13,38 @@ from repro.baselines.conventional import build_grid_index, build_str_rtree
 from repro.baselines.learned import build_floodt, build_lsti
 
 
+def _notes(art) -> str:
+    phases = {k: round(v, 2) for k, v in art.timings.items()}
+    return f"phase_times={phases};counters={art.counters}"
+
+
 def run():
     rows = []
     ds = C.dataset()
     wl = C.workload("fs", C.DEFAULT_N, C.DEFAULT_M, "MIX", 0.0005, 5, 113)
 
-    t0 = time.perf_counter()
-    art = build_wisk(ds, wl, C.small_build_config())
-    rows.append(C.row("table4/wisk", (time.perf_counter() - t0) * 1e6,
-                      f"phase_times={ {k: round(v, 2) for k, v in art.timings.items()} }"))
+    arts = {}
+    for mode in ("batched", "sequential"):
+        t0 = time.perf_counter()
+        arts[mode] = build_wisk(ds, wl, C.small_build_config(construction=mode))
+        name = "table4/wisk" if mode == "batched" else "table4/wisk-sequential"
+        rows.append(C.row(name, (time.perf_counter() - t0) * 1e6, _notes(arts[mode])))
+    ratio = arts["sequential"].counters["construction_dispatches"] / max(
+        arts["batched"].counters["construction_dispatches"], 1
+    )
+    rows.append(
+        C.row(
+            "table4/dispatch-reduction",
+            0.0,
+            f"sequential={arts['sequential'].counters['construction_dispatches']};"
+            f"batched={arts['batched'].counters['construction_dispatches']};"
+            f"ratio={ratio:.1f}x",
+        )
+    )
+
     t0 = time.perf_counter()
     art_a = build_wisk(ds, wl, C.small_build_config(accelerated=True))
-    rows.append(C.row("table4/wisk-accelerated", (time.perf_counter() - t0) * 1e6, ""))
+    rows.append(C.row("table4/wisk-accelerated", (time.perf_counter() - t0) * 1e6, _notes(art_a)))
     for name, fn in (
         ("grid", lambda: build_grid_index(ds, 8)),
         ("str-rtree", lambda: build_str_rtree(ds)),

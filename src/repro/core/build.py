@@ -8,6 +8,13 @@ Step 2: label bottom clusters with (sampled) training queries and pack them
 ``accelerated=True`` enables the §6 accelerations: stratified query sampling
 (default 30%) and spectral-clustering grouping of bottom clusters (default
 20% ratio), matching the "Accelerated WISK" row of Table 4.
+
+``construction`` selects the execution strategy for both learned phases
+(DESIGN.md §5): ``"batched"`` (default) runs frontier-parallel split
+learning and scan-compiled RL packing (device dispatches scale with tree
+depth + episode count); ``"sequential"`` keeps the original per-subspace /
+per-env-step host loops for A/B. Per-phase timings plus round/dispatch
+counters land in ``BuildArtifacts.timings`` / ``.counters``.
 """
 from __future__ import annotations
 
@@ -40,6 +47,7 @@ class BuildConfig:
     sample_ratio: float = 0.3  # query sampling for training (Fig. 13a)
     cluster_ratio: float = 0.2  # spectral grouping ratio (Fig. 13b)
     build_hierarchy: bool = True
+    construction: str = "batched"  # "batched" | "sequential" (DESIGN.md §5)
     seed: int = 0
 
 
@@ -50,6 +58,9 @@ class BuildArtifacts:
     partition: PartitionResult
     hierarchy: Optional[HierarchyResult]
     timings: Dict[str, float]
+    # execution-strategy counters (DESIGN.md §5): device dispatches / rounds
+    # per learned phase, for the batched-vs-sequential A/B
+    counters: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 def cluster_query_labels(index_or_clusters, workload: Workload) -> np.ndarray:
@@ -103,7 +114,9 @@ def build_wisk(
     q_entries, q_signs = expand_queries(
         train_wl, itemsets, dataset.vocab_size, use_itemsets=cfg.use_itemsets
     )
-    part = generate_bottom_clusters(dataset, train_wl, bank, q_entries, q_signs, cfg.partition)
+    part = generate_bottom_clusters(
+        dataset, train_wl, bank, q_entries, q_signs, cfg.partition, mode=cfg.construction
+    )
     timings["partitioning"] = time.perf_counter() - t0
 
     hierarchy = None
@@ -117,7 +130,7 @@ def build_wisk(
         pk = cfg.packing
         if cfg.accelerated:
             pk = dataclasses.replace(pk, spectral_ratio=cfg.cluster_ratio)
-        hierarchy = build_hierarchy(labels, part.clusters.mbrs, pk)
+        hierarchy = build_hierarchy(labels, part.clusters.mbrs, pk, mode=cfg.construction)
         timings["packing"] = time.perf_counter() - t0
 
     t0 = time.perf_counter()
@@ -134,4 +147,19 @@ def build_wisk(
     )
     timings["assembly"] = time.perf_counter() - t0
     timings["total"] = sum(timings.values())
-    return BuildArtifacts(index=index, bank=bank, partition=part, hierarchy=hierarchy, timings=timings)
+    counters = dict(
+        partition_rounds=part.n_rounds,
+        partition_dispatches=part.n_dispatches,
+        partition_problems=part.n_sgd_calls,
+        packing_dispatches=hierarchy.n_dispatches if hierarchy else 0,
+        packing_env_steps=hierarchy.n_env_steps if hierarchy else 0,
+        construction_dispatches=part.n_dispatches + (hierarchy.n_dispatches if hierarchy else 0),
+    )
+    return BuildArtifacts(
+        index=index,
+        bank=bank,
+        partition=part,
+        hierarchy=hierarchy,
+        timings=timings,
+        counters=counters,
+    )

@@ -147,3 +147,35 @@ def dqn_train_step(ts: TrainState, buf: Replay, key: jax.Array, cfg: DQNConfig) 
 def greedy_action(params: Dict, s: jax.Array, mask: jax.Array) -> jax.Array:
     q = q_apply(params, s)
     return jnp.argmax(jnp.where(mask, q, -jnp.inf))
+
+
+def masked_random_action(key: jax.Array, mask: jax.Array) -> jax.Array:
+    """Uniform action over the True entries of ``mask`` (scan/cond-safe).
+
+    Draws j ~ U[0, #valid) with ``key`` and returns the j-th valid slot --
+    the traced twin of the host path's ``valid[randint(key, 0, len(valid))]``
+    (same key, same draw, same action), which is what makes the scan-compiled
+    packing rollout RNG-parity-exact with the Python episode loop
+    (DESIGN.md §5; tests/test_build_parity.py).
+    """
+    nvalid = jnp.sum(mask.astype(jnp.int32))
+    j = jax.random.randint(key, (), 0, jnp.maximum(nvalid, 1))
+    return jnp.argmax((jnp.cumsum(mask.astype(jnp.int32)) - 1 == j) & mask).astype(jnp.int32)
+
+
+def train_step_if_ready(
+    ts: TrainState, buf: Replay, key: jax.Array, cfg: DQNConfig
+) -> Tuple[TrainState, jax.Array, jax.Array]:
+    """``dqn_train_step`` gated on replay occupancy, usable inside lax.scan.
+
+    Mirrors the host loop's ``if buf.size >= batch_size: train`` without the
+    per-step device->host size sync. Returns (ts, loss, trained?); when the
+    buffer is not warm yet the state passes through and loss is 0.
+    """
+    ready = buf.size >= cfg.batch_size
+    ts2, loss = jax.lax.cond(
+        ready,
+        lambda: dqn_train_step(ts, buf, key, cfg),
+        lambda: (ts, jnp.float32(0.0)),
+    )
+    return ts2, loss, ready

@@ -10,10 +10,24 @@ empty-slot actions are masked (§6 "Action mask in RL").
 Accelerations from §6 are implemented here too: stratified sampling of the
 training queries (``data/workloads.py``) and spectral-clustering grouping of
 bottom clusters before packing.
+
+Two rollout strategies drive each episode (DESIGN.md §5):
+
+* ``mode="batched"`` (default) -- the episode loop is a single
+  ``jax.lax.scan`` with the env state (upper-slot label bitmaps, counts,
+  step index) as jnp arrays: epsilon-greedy action selection, duplicate-slot
+  masking, the Eq. 5 reward, replay insertion, and the conditional
+  ``dqn_train_step`` all run inside the scan body -- one device dispatch per
+  episode instead of ~4 per env step. ``PackingConfig.parallel_episodes``
+  additionally vmaps exploration episodes per epoch.
+* ``mode="sequential"`` -- the original Python-loop episode with per-step
+  host syncs, kept for A/B benchmarking; the scan rollout reproduces it
+  exactly under matched RNG streams (tests/test_build_parity.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -26,10 +40,12 @@ from .dqn import (
     TrainState,
     dqn_train_step,
     greedy_action,
+    masked_random_action,
     q_apply,
     replay_add,
     replay_init,
     train_state_init,
+    train_step_if_ready,
 )
 
 
@@ -42,6 +58,10 @@ class PackingConfig:
     max_levels: int = 6
     action_mask: bool = True
     spectral_ratio: float = 1.0  # <1.0 groups bottom clusters first (accel §6)
+    # batched mode only: >1 vmaps this many exploration episodes per epoch
+    # (transitions are absorbed episode-major afterwards, so the training
+    # schedule differs from the sequential one-episode-at-a-time loop)
+    parallel_episodes: int = 1
     seed: int = 0
 
 
@@ -94,24 +114,30 @@ class _Env:
         done = self.t >= self.N
         return self.state(), before - after, done
 
-    def assignment(self) -> np.ndarray:
-        raise NotImplementedError
-
 
 def _run_episode(env: _Env, ts: TrainState, buf, key, eps: float, cfg: PackingConfig, train: bool):
-    """Play one packing episode; returns (assignment, sum_rewards, buf, ts, losses)."""
+    """Play one packing episode with the original per-step host loop.
+
+    Returns (assignment, sum_rewards, buf, ts, losses, n_dispatches) where
+    ``n_dispatches`` counts the jitted device calls issued (uniform draw,
+    action selection, replay insertion, train step) -- the quantity the
+    scan-compiled rollout collapses to 1 per episode (DESIGN.md §5).
+    """
     s = env.reset()
     assign = np.zeros(env.N, dtype=np.int32)
     total_r = 0.0
     losses = []
+    n_disp = 0
     for t in range(env.N):
         mask = env.mask()
         key, k1, k2, k3 = jax.random.split(key, 4)
         if train and float(jax.random.uniform(k1)) < eps:
             valid = np.nonzero(mask)[0]
             a = int(valid[int(jax.random.randint(k2, (), 0, valid.size))])
+            n_disp += 2  # uniform + randint
         else:
             a = int(greedy_action(ts.params, jnp.asarray(s), jnp.asarray(mask)))
+            n_disp += 2 if train else 1  # uniform (train only) + greedy
         s2, r, done = env.step(a)
         assign[t] = a
         total_r += r
@@ -126,11 +152,146 @@ def _run_episode(env: _Env, ts: TrainState, buf, key, eps: float, cfg: PackingCo
                 jnp.asarray(mask2),
                 jnp.bool_(done),
             )
+            n_disp += 1
             if int(buf.size) >= cfg.dqn.batch_size:
                 ts, loss = dqn_train_step(ts, buf, k3, cfg.dqn)
                 losses.append(float(loss))
+                n_disp += 1
         s = s2
-    return assign, total_r, buf, ts, losses
+    return assign, total_r, buf, ts, losses, n_disp
+
+
+# ------------------------------------------------- scan-compiled rollout path
+def _env_math(labels: jnp.ndarray, use_mask: bool):
+    """Traced twins of _Env.state/.mask/.avg_accesses over jnp env state,
+    plus the shared epsilon-greedy transition both rollout paths scan over
+    (one step body -- a fix to masking/reward/key order fixes both)."""
+    N, m = labels.shape
+    denom = jnp.float32(max(m, 1))
+
+    def state_vec(upper, counts, t):
+        nxt = jnp.where(t < N, labels[jnp.minimum(t, N - 1)], jnp.zeros((m,), bool))
+        per_upper = jnp.concatenate(
+            [upper.astype(jnp.float32), (counts > 0)[:, None].astype(jnp.float32)], axis=1
+        )
+        return jnp.concatenate([per_upper.reshape(-1), nxt.astype(jnp.float32)])
+
+    def mask_of(counts):
+        used = counts > 0
+        if not use_mask:
+            return jnp.ones((N,), bool)
+        has_empty = jnp.any(~used)
+        first_empty = jnp.argmax(~used)  # expose exactly one empty slot
+        return used.at[first_empty].set(used[first_empty] | has_empty)
+
+    def access_count(upper, counts):
+        # integer numerator of avg_accesses: reward = (before-after)/m exactly
+        return jnp.sum(jnp.where((counts > 0)[:, None], upper, False).astype(jnp.int32))
+
+    def transition(params, upper, counts, t, k1, k2, eps, explore: bool):
+        """One env step: act (epsilon-greedy when ``explore``), apply, score.
+        Returns (s, a, r, upper2, counts2, s2, mask2, done); unused outputs
+        are dead-code-eliminated by XLA in the eval rollout."""
+        s = state_vec(upper, counts, t)
+        msk = mask_of(counts)
+        a = jnp.argmax(jnp.where(msk, q_apply(params, s), -jnp.inf)).astype(jnp.int32)
+        if explore:
+            take_random = jax.random.uniform(k1) < eps
+            a = jnp.where(take_random, masked_random_action(k2, msk), a)
+        before = access_count(upper, counts)
+        upper2 = upper.at[a].set(upper[a] | labels[t])
+        counts2 = counts.at[a].add(1)
+        after = access_count(upper2, counts2)
+        r = (before - after).astype(jnp.float32) / denom
+        done = t + 1 >= N
+        s2 = state_vec(upper2, counts2, t + 1)
+        mask2 = jnp.where(done, jnp.zeros((N,), bool), mask_of(counts2))
+        return s, a, r, upper2, counts2, s2, mask2, done
+
+    return N, m, transition
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "train", "use_mask"))
+def _rollout_episode(
+    labels: jnp.ndarray,  # (N, m) bool
+    ts: TrainState,
+    buf,
+    key: jax.Array,
+    eps,
+    cfg: DQNConfig,
+    train: bool,
+    use_mask: bool,
+):
+    """One packing episode as a single lax.scan (DESIGN.md §5).
+
+    Per step: epsilon-greedy action (same key-split order as _run_episode,
+    so the RNG streams match bit-for-bit), duplicate-slot masking, the Eq. 5
+    access-delta reward, replay insertion, and the occupancy-gated
+    dqn_train_step -- all inside the scan body. Returns
+    (actions, rewards, buf, ts, losses, trained) with per-step arrays.
+    """
+    N, m, transition = _env_math(labels, use_mask)
+
+    def step(carry, t):
+        upper, counts, key, buf, ts = carry
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        s, a, r, upper2, counts2, s2, mask2, done = transition(
+            ts.params, upper, counts, t, k1, k2, eps, train
+        )
+        loss = jnp.float32(0.0)
+        trained = jnp.bool_(False)
+        if train:
+            buf = replay_add(buf, s, a, r, s2, mask2, done)
+            ts, loss, trained = train_step_if_ready(ts, buf, k3, cfg)
+        return (upper2, counts2, key, buf, ts), (a, r, loss, trained)
+
+    carry0 = (jnp.zeros((N, m), bool), jnp.zeros((N,), jnp.int32), key, buf, ts)
+    (_, _, _, buf, ts), (acts, rewards, losses, trained) = jax.lax.scan(
+        step, carry0, jnp.arange(N)
+    )
+    return acts, rewards, buf, ts, losses, trained
+
+
+@functools.partial(jax.jit, static_argnames=("use_mask",))
+def _rollout_collect(labels: jnp.ndarray, params: Dict, keys: jax.Array, eps, use_mask: bool):
+    """vmapped parallel exploration (PackingConfig.parallel_episodes > 1):
+    each key plays one epsilon-greedy episode against frozen ``params`` and
+    returns its transitions; training happens afterwards in
+    ``_absorb_and_train`` (an intentionally different schedule from the
+    sequential loop -- more exploration per parameter refresh)."""
+    N, m, transition = _env_math(labels, use_mask)
+
+    def one(key):
+        def step(carry, t):
+            upper, counts, key = carry
+            key, k1, k2, _ = jax.random.split(key, 4)
+            s, a, r, upper2, counts2, s2, mask2, done = transition(
+                params, upper, counts, t, k1, k2, eps, True
+            )
+            return (upper2, counts2, key), (s, a, r, s2, mask2, done)
+
+        carry0 = (jnp.zeros((N, m), bool), jnp.zeros((N,), jnp.int32), key)
+        _, trans = jax.lax.scan(step, carry0, jnp.arange(N))
+        return trans, jnp.sum(trans[2])
+
+    return jax.vmap(one)(keys)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _absorb_and_train(ts: TrainState, buf, trans, key: jax.Array, cfg: DQNConfig):
+    """Insert collected transitions episode-major and run the occupancy-gated
+    train step after each insertion (one dispatch for the whole epoch)."""
+
+    def step(carry, x):
+        ts, buf, key = carry
+        s, a, r, s2, m2, dn = x
+        buf = replay_add(buf, s, a, r, s2, m2, dn)
+        key, k = jax.random.split(key)
+        ts, loss, trained = train_step_if_ready(ts, buf, k, cfg)
+        return (ts, buf, key), (loss, trained)
+
+    (ts, buf, _), (losses, trained) = jax.lax.scan(step, (ts, buf, key), trans)
+    return ts, buf, losses, trained
 
 
 @dataclasses.dataclass
@@ -140,12 +301,35 @@ class LevelPackResult:
     sum_rewards: float
     losses: List[float]
     reward_curve: List[float]
+    n_dispatches: int = 0  # jitted device calls issued for this level
+    n_env_steps: int = 0  # env transitions played (incl. parallel episodes)
+    mode: str = "sequential"
 
 
 def pack_one_level(
-    labels: np.ndarray, cfg: PackingConfig, seed: int = 0
+    labels: np.ndarray, cfg: PackingConfig, seed: int = 0, mode: str = "batched"
 ) -> LevelPackResult:
-    """Train a DQN for one level and return the greedy packing."""
+    """Train a DQN for one level and return the greedy packing.
+
+    ``mode="batched"`` compiles each episode into one lax.scan dispatch;
+    ``mode="sequential"`` is the original per-step host loop (DESIGN.md §5).
+    Both share the RNG stream layout, so matched seeds yield matched episodes
+    (tests/test_build_parity.py).
+    """
+    if mode == "sequential":
+        return _pack_one_level_sequential(labels, cfg, seed)
+    if mode == "batched":
+        return _pack_one_level_batched(labels, cfg, seed)
+    raise ValueError(f"unknown packing mode {mode!r}")
+
+
+def _compact_assign(assign: np.ndarray) -> Tuple[np.ndarray, int]:
+    used = np.unique(assign)
+    remap = {int(u): i for i, u in enumerate(used)}
+    return np.array([remap[int(a)] for a in assign], dtype=np.int32), len(used)
+
+
+def _pack_one_level_sequential(labels: np.ndarray, cfg: PackingConfig, seed: int) -> LevelPackResult:
     N, m = labels.shape
     env = _Env(labels, cfg.action_mask)
     state_dim = (m + 1) * N + m
@@ -156,19 +340,70 @@ def pack_one_level(
     eps = cfg.dqn.eps_start
     losses: List[float] = []
     curve: List[float] = []
+    n_disp = 0
     for ep in range(cfg.epochs):
         key, k = jax.random.split(key)
-        _, total_r, buf, ts, ls = _run_episode(env, ts, buf, k, eps, cfg, train=True)
+        _, total_r, buf, ts, ls, d = _run_episode(env, ts, buf, k, eps, cfg, train=True)
         losses.extend(ls)
         curve.append(total_r)
+        n_disp += d
         eps = max(cfg.dqn.eps_end, eps * cfg.dqn.eps_decay)
     key, k = jax.random.split(key)
-    assign, total_r, _, _, _ = _run_episode(env, ts, buf, k, 0.0, cfg, train=False)
-    # compact slot ids
-    used = np.unique(assign)
-    remap = {int(u): i for i, u in enumerate(used)}
-    assign = np.array([remap[int(a)] for a in assign], dtype=np.int32)
-    return LevelPackResult(assign, len(used), total_r, losses, curve)
+    assign, total_r, _, _, _, d = _run_episode(env, ts, buf, k, 0.0, cfg, train=False)
+    n_disp += d
+    assign, n_upper = _compact_assign(assign)
+    return LevelPackResult(
+        assign, n_upper, total_r, losses, curve,
+        n_dispatches=n_disp, n_env_steps=(cfg.epochs + 1) * N, mode="sequential",
+    )
+
+
+def _pack_one_level_batched(labels: np.ndarray, cfg: PackingConfig, seed: int) -> LevelPackResult:
+    N, m = labels.shape
+    labels_j = jnp.asarray(labels.astype(bool))
+    state_dim = (m + 1) * N + m
+    key = jax.random.PRNGKey(seed)
+    key, k0 = jax.random.split(key)
+    ts = train_state_init(k0, state_dim, N, cfg.dqn)
+    buf = replay_init(cfg.dqn.capacity, state_dim, N)
+    eps = cfg.dqn.eps_start
+    losses: List[float] = []
+    curve: List[float] = []
+    n_disp = 0
+    n_env = 0
+    P = max(1, int(cfg.parallel_episodes))
+    for ep in range(cfg.epochs):
+        key, k = jax.random.split(key)
+        if P == 1:
+            _, rewards, buf, ts, ls, trained = _rollout_episode(
+                labels_j, ts, buf, k, eps, cfg.dqn, True, cfg.action_mask
+            )
+            n_disp += 1
+            n_env += N
+            curve.append(float(jnp.sum(rewards)))
+        else:
+            ks = jax.random.split(k, P)
+            trans, totals = _rollout_collect(labels_j, ts.params, ks, eps, cfg.action_mask)
+            flat = jax.tree.map(lambda x: x.reshape((P * N,) + x.shape[2:]), trans)
+            key, k2 = jax.random.split(key)
+            ts, buf, ls, trained = _absorb_and_train(ts, buf, flat, k2, cfg.dqn)
+            n_disp += 2
+            n_env += P * N
+            curve.extend(np.asarray(totals, dtype=np.float64).tolist())
+        ls_np, tr_np = np.asarray(ls), np.asarray(trained)
+        losses.extend(ls_np[tr_np].tolist())
+        eps = max(cfg.dqn.eps_end, eps * cfg.dqn.eps_decay)
+    key, k = jax.random.split(key)
+    acts, rewards, _, _, _, _ = _rollout_episode(
+        labels_j, ts, buf, k, 0.0, cfg.dqn, False, cfg.action_mask
+    )
+    n_disp += 1
+    n_env += N
+    assign, n_upper = _compact_assign(np.asarray(acts))
+    return LevelPackResult(
+        assign, n_upper, float(jnp.sum(rewards)), losses, curve,
+        n_dispatches=n_disp, n_env_steps=n_env, mode="batched",
+    )
 
 
 def spectral_group(mbrs: np.ndarray, n_groups: int, seed: int = 0) -> np.ndarray:
@@ -213,12 +448,15 @@ class HierarchyResult:
     parents: List[np.ndarray]  # per built level: parent slot of each lower node
     level_labels: List[np.ndarray]
     packs: List[LevelPackResult]
+    n_dispatches: int = 0  # summed over packed levels
+    n_env_steps: int = 0
 
 
 def build_hierarchy(
     bottom_labels: np.ndarray,  # (K, m) bool: bottom cluster x sampled-query label
     bottom_mbrs: np.ndarray,
     cfg: Optional[PackingConfig] = None,
+    mode: str = "batched",
 ) -> HierarchyResult:
     """Pack levels bottom-up until few nodes remain or packing stops helping."""
     cfg = cfg or PackingConfig()
@@ -238,14 +476,14 @@ def build_hierarchy(
             glabels[g] |= labels[i]
         labels = glabels
         level_labels.append(labels)
-        packs.append(LevelPackResult(gids, int(ng), 0.0, [], []))
+        packs.append(LevelPackResult(gids, int(ng), 0.0, [], [], mode=mode))
 
     seed = cfg.seed
     for lvl in range(cfg.max_levels):
         N = labels.shape[0]
         if N <= cfg.min_nodes:
             break
-        res = pack_one_level(labels, cfg, seed=seed + lvl + 1)
+        res = pack_one_level(labels, cfg, seed=seed + lvl + 1, mode=mode)
         if res.n_upper >= N or res.sum_rewards <= -float(N):
             break  # packing stopped reducing accesses (paper's -N termination)
         parents.append(res.assign)
@@ -255,4 +493,10 @@ def build_hierarchy(
             new_labels[a] |= labels[i]
         labels = new_labels
         level_labels.append(labels)
-    return HierarchyResult(parents=parents, level_labels=level_labels, packs=packs)
+    return HierarchyResult(
+        parents=parents,
+        level_labels=level_labels,
+        packs=packs,
+        n_dispatches=sum(p.n_dispatches for p in packs),
+        n_env_steps=sum(p.n_env_steps for p in packs),
+    )

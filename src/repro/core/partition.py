@@ -14,6 +14,17 @@ verification saving beats the added filtering cost:
 The optimizer runs multi-restart Adam on both dimensions at once inside one
 jitted function; queries are padded to a fixed width per call site bucket to
 bound recompilation.
+
+Two execution strategies drive the split recursion (DESIGN.md §5):
+
+* ``mode="batched"`` (default) -- frontier-parallel rounds: every currently
+  splittable subspace is learned in one ``vmap``-over-subspaces dispatch per
+  (n_subspaces, query_pad) power-of-two bucket, so device calls scale with
+  tree *depth*, not node *count*. Accept/split bookkeeping replays the
+  sequential priority-heap walk on host, so the learned cluster set is
+  identical to the sequential mode's (tests/test_build_parity.py).
+* ``mode="sequential"`` -- the original heap loop (one jitted ``_learn_split``
+  per subspace), kept for A/B benchmarking and parity testing.
 """
 from __future__ import annotations
 
@@ -29,6 +40,7 @@ import jax.numpy as jnp
 
 from .cdf import CDFBank, est_count_rect
 from .cost import DEFAULT_W1, DEFAULT_W2
+from .query import round_up_bucket
 from .types import ClusterSet, GeoTextDataset, Workload, rects_intersect
 
 
@@ -49,6 +61,9 @@ class PartitionConfig:
     indicator_scale: float = 64.0
     consistent_init_cost: bool = True  # see DESIGN.md: keyword-conditioned C_s
     query_pad: int = 64  # pad workload slices to multiples of this
+    # batched mode: cap the vmapped subspace batch per dispatch so the set of
+    # compiled (B, Q) shapes stays small and each compile stays cheap
+    max_split_batch: int = 16
 
 
 def _pad_to(a: np.ndarray, size: int, fill) -> np.ndarray:
@@ -58,8 +73,7 @@ def _pad_to(a: np.ndarray, size: int, fill) -> np.ndarray:
     return np.pad(a, pad, constant_values=fill)
 
 
-@functools.partial(jax.jit, static_argnames=("n_steps", "n_restarts", "beta"))
-def _learn_split(
+def _learn_split_impl(
     bank_tables: Dict[str, jax.Array],
     nn_params,
     space: jax.Array,  # (4,)
@@ -67,10 +81,10 @@ def _learn_split(
     q_entries: jax.Array,  # (Q, E) int32 padded -1
     q_signs: jax.Array,  # (Q, E) float32
     q_valid: jax.Array,  # (Q,) bool
-    lr: float = 0.03,
-    n_steps: int = 120,
-    n_restarts: int = 4,
-    beta: float = 3.0,
+    lr: float,
+    n_steps: int,
+    n_restarts: int,
+    beta: float,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Returns (best_cost (2,), best_value (2,), base_cost ()) for dims x,y.
 
@@ -140,6 +154,51 @@ def _learn_split(
     return jnp.stack([c0, c1]), jnp.stack([v0, v1]), base
 
 
+@functools.partial(jax.jit, static_argnames=("n_steps", "n_restarts", "beta"))
+def _learn_split(
+    bank_tables,
+    nn_params,
+    space,
+    q_rects,
+    q_entries,
+    q_signs,
+    q_valid,
+    lr: float = 0.03,
+    n_steps: int = 120,
+    n_restarts: int = 4,
+    beta: float = 3.0,
+):
+    """One-subspace jitted entry point (sequential mode)."""
+    return _learn_split_impl(
+        bank_tables, nn_params, space, q_rects, q_entries, q_signs, q_valid, lr, n_steps, n_restarts, beta
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps", "n_restarts", "beta"))
+def _learn_split_batched(
+    bank_tables,
+    nn_params,
+    spaces,  # (B, 4)
+    q_rects,  # (B, Q, 4)
+    q_entries,  # (B, Q, E)
+    q_signs,  # (B, Q, E)
+    q_valid,  # (B, Q)
+    lr: float = 0.03,
+    n_steps: int = 120,
+    n_restarts: int = 4,
+    beta: float = 3.0,
+):
+    """vmap-over-subspaces twin of ``_learn_split``: one dispatch learns the
+    split of every subspace in the round's bucket (DESIGN.md §5). Padded
+    subspaces carry all-False ``q_valid`` rows, so their loss (and Adam
+    trajectory) is identically zero and they are discarded on host."""
+
+    def one(space, qr, qe, qs, qv):
+        return _learn_split_impl(bank_tables, nn_params, space, qr, qe, qs, qv, lr, n_steps, n_restarts, beta)
+
+    return jax.vmap(one)(spaces, q_rects, q_entries, q_signs, q_valid)
+
+
 @dataclasses.dataclass
 class _SubSpace:
     rect: np.ndarray  # (4,)
@@ -151,24 +210,62 @@ class _SubSpace:
 class PartitionResult:
     clusters: ClusterSet
     n_splits: int
-    n_sgd_calls: int
+    n_sgd_calls: int  # split-learning problem instances solved
     history: List[Dict]
+    # execution-strategy counters (DESIGN.md §5): rounds of frontier-parallel
+    # processing and actual jitted device dispatches issued. In sequential
+    # mode n_dispatches == n_sgd_calls (one call per subspace) and n_rounds
+    # degenerates to the same count.
+    n_rounds: int = 0
+    n_dispatches: int = 0
+    mode: str = "sequential"
 
 
-def generate_bottom_clusters(
-    dataset: GeoTextDataset,
-    workload: Workload,
-    bank: CDFBank,
-    q_entries: np.ndarray,
-    q_signs: np.ndarray,
-    config: Optional[PartitionConfig] = None,
-) -> PartitionResult:
-    """Alg. 2: returns the learned flat partition (bottom clusters)."""
-    cfg = config or PartitionConfig()
-    tables = bank.jax_tables()
-    nn_params = bank.nn_params
+def _pad_queries(workload: Workload, q_entries, q_signs, s: _SubSpace, Q: int):
+    """Pad one subspace's query slice to width Q (validity-masked)."""
+    nq = s.query_ids.size
+    qr = _pad_to(workload.rects[s.query_ids], Q, 0.0)
+    qe = _pad_to(q_entries[s.query_ids], Q, -1)
+    qs = _pad_to(q_signs[s.query_ids], Q, 0.0)
+    qv = np.zeros(Q, dtype=bool)
+    qv[: min(nq, Q)] = True
+    return qr, qe, qs, qv
 
-    m = workload.m
+
+def _split_children(
+    dataset: GeoTextDataset, workload: Workload, s: _SubSpace, d: int, val: float
+) -> Optional[Tuple[_SubSpace, _SubSpace]]:
+    """Materialize the two children of an accepted split, or None when one
+    side would be empty (the subspace is finalized instead, per Alg. 2)."""
+    locs = dataset.locs[s.obj_ids]
+    left_mask = locs[:, d] <= val
+    lids, rids = s.obj_ids[left_mask], s.obj_ids[~left_mask]
+    if not (lids.size and rids.size):
+        return None
+    lrect = s.rect.copy()
+    lrect[2 + d] = val
+    rrect = s.rect.copy()
+    rrect[d] = val
+    qrects = workload.rects[s.query_ids]
+    lq = s.query_ids[rects_intersect(qrects, lrect[None, :]).astype(bool).reshape(-1)]
+    rq = s.query_ids[rects_intersect(qrects, rrect[None, :]).astype(bool).reshape(-1)]
+    return _SubSpace(lrect, lids, lq), _SubSpace(rrect, rids, rq)
+
+
+def _decide(cfg: PartitionConfig, m: int, costs, values, base, nq: int, no: int):
+    """Alg. 2 line 10 accept test on one learned result; returns history row."""
+    d = int(np.argmin(costs))
+    best_cost, best_val = float(costs[d]), float(values[d])
+    if cfg.consistent_init_cost:
+        c_s = cfg.w2 * float(base)
+    else:
+        c_s = cfg.w2 * no * nq  # paper-literal |O_s| * |W_s| * w2
+    gain = c_s - cfg.w2 * best_cost
+    loss = cfg.w1 * m
+    return d, best_val, gain, loss
+
+
+def _root_subspace(dataset: GeoTextDataset, m: int) -> _SubSpace:
     space0 = np.array([0.0, 0.0, 1.0, 1.0], dtype=np.float32)
     # shrink to data MBR
     if dataset.n:
@@ -181,7 +278,55 @@ def generate_bottom_clusters(
             ],
             dtype=np.float32,
         )
-    root = _SubSpace(space0, np.arange(dataset.n), np.arange(m))
+    return _SubSpace(space0, np.arange(dataset.n), np.arange(m))
+
+
+def _finalize(dataset: GeoTextDataset, final: List[_SubSpace]) -> ClusterSet:
+    assign = np.zeros(dataset.n, dtype=np.int32)
+    keep = [s for s in final if s.obj_ids.size > 0]
+    for ci, s in enumerate(keep):
+        assign[s.obj_ids] = ci
+    return ClusterSet.from_assignment(dataset, assign)
+
+
+def generate_bottom_clusters(
+    dataset: GeoTextDataset,
+    workload: Workload,
+    bank: CDFBank,
+    q_entries: np.ndarray,
+    q_signs: np.ndarray,
+    config: Optional[PartitionConfig] = None,
+    mode: str = "batched",
+) -> PartitionResult:
+    """Alg. 2: returns the learned flat partition (bottom clusters).
+
+    ``mode="batched"`` runs frontier-parallel rounds (device dispatches scale
+    with tree depth); ``mode="sequential"`` is the original one-subspace-per-
+    call heap loop (DESIGN.md §5). The batched mode replays the sequential
+    heap walk over batch-learned decisions, so both modes accept/reject
+    identical splits and produce the identical cluster set -- including when
+    the ``max_clusters`` budget binds (tests/test_build_parity.py).
+    """
+    cfg = config or PartitionConfig()
+    if mode == "sequential":
+        return _generate_sequential(dataset, workload, bank, q_entries, q_signs, cfg)
+    if mode == "batched":
+        return _generate_batched(dataset, workload, bank, q_entries, q_signs, cfg)
+    raise ValueError(f"unknown partition mode {mode!r}")
+
+
+def _generate_sequential(
+    dataset: GeoTextDataset,
+    workload: Workload,
+    bank: CDFBank,
+    q_entries: np.ndarray,
+    q_signs: np.ndarray,
+    cfg: PartitionConfig,
+) -> PartitionResult:
+    tables = bank.jax_tables()
+    nn_params = bank.nn_params
+    m = workload.m
+    root = _root_subspace(dataset, m)
 
     heap: List[Tuple[int, int, _SubSpace]] = []
     counter = 0
@@ -201,11 +346,7 @@ def generate_bottom_clusters(
         )
         if not done:
             Q = int(np.ceil(max(nq, 1) / cfg.query_pad) * cfg.query_pad)
-            qr = _pad_to(workload.rects[s.query_ids], Q, 0.0)
-            qe = _pad_to(q_entries[s.query_ids], Q, -1)
-            qs = _pad_to(q_signs[s.query_ids], Q, 0.0)
-            qv = np.zeros(Q, dtype=bool)
-            qv[: min(nq, Q)] = True
+            qr, qe, qs, qv = _pad_queries(workload, q_entries, q_signs, s, Q)
             costs, values, base = _learn_split(
                 tables,
                 nn_params,
@@ -220,46 +361,189 @@ def generate_bottom_clusters(
                 beta=cfg.sigmoid_beta * cfg.indicator_scale,
             )
             n_sgd += 1
-            costs = np.asarray(costs)
-            values = np.asarray(values)
-            d = int(np.argmin(costs))
-            best_cost, best_val = float(costs[d]), float(values[d])
-            if cfg.consistent_init_cost:
-                c_s = cfg.w2 * float(base)
-            else:
-                c_s = cfg.w2 * no * nq  # paper-literal |O_s| * |W_s| * w2
-            gain = c_s - cfg.w2 * best_cost
-            loss = cfg.w1 * m
+            d, best_val, gain, loss = _decide(
+                cfg, m, np.asarray(costs), np.asarray(values), base, nq, no
+            )
             history.append(
                 dict(rect=s.rect.tolist(), nq=nq, no=no, dim=d, val=best_val, gain=gain, loss=loss)
             )
             if gain > loss:
-                # split
-                locs = dataset.locs[s.obj_ids]
-                left_mask = locs[:, d] <= best_val
-                lids, rids = s.obj_ids[left_mask], s.obj_ids[~left_mask]
-                if lids.size and rids.size:
-                    lrect = s.rect.copy()
-                    lrect[2 + d] = best_val
-                    rrect = s.rect.copy()
-                    rrect[d] = best_val
-                    qrects = workload.rects[s.query_ids]
-                    lq = s.query_ids[
-                        rects_intersect(qrects, lrect[None, :]).astype(bool).reshape(-1)
-                    ]
-                    rq = s.query_ids[
-                        rects_intersect(qrects, rrect[None, :]).astype(bool).reshape(-1)
-                    ]
+                children = _split_children(dataset, workload, s, d, best_val)
+                if children is not None:
                     n_splits += 1
-                    for rect, oids, qids in ((lrect, lids, lq), (rrect, rids, rq)):
+                    for child in children:
                         counter += 1
-                        heapq.heappush(heap, (-qids.size, counter, _SubSpace(rect, oids, qids)))
+                        heapq.heappush(heap, (-child.query_ids.size, counter, child))
                     continue
         final.append(s)
 
-    assign = np.zeros(dataset.n, dtype=np.int32)
-    keep = [s for s in final if s.obj_ids.size > 0]
-    for ci, s in enumerate(keep):
-        assign[s.obj_ids] = ci
-    clusters = ClusterSet.from_assignment(dataset, assign)
-    return PartitionResult(clusters=clusters, n_splits=n_splits, n_sgd_calls=n_sgd, history=history)
+    clusters = _finalize(dataset, final)
+    return PartitionResult(
+        clusters=clusters,
+        n_splits=n_splits,
+        n_sgd_calls=n_sgd,
+        history=history,
+        n_rounds=n_sgd,
+        n_dispatches=n_sgd,
+        mode="sequential",
+    )
+
+
+def _learn_frontier(
+    workload: Workload,
+    q_entries: np.ndarray,
+    q_signs: np.ndarray,
+    cfg: PartitionConfig,
+    tables,
+    nn_params,
+    batch: List[_SubSpace],
+) -> Tuple[Dict[int, Tuple[np.ndarray, np.ndarray, float]], int]:
+    """Learn every subspace in ``batch`` with vmapped dispatches over
+    power-of-two (n_subspaces, query_pad) buckets (DESIGN.md §5). Returns
+    ``{id(subspace): (costs, values, base)}`` plus the dispatch count."""
+    E = q_entries.shape[1]
+    results: Dict[int, Tuple[np.ndarray, np.ndarray, float]] = {}
+    n_dispatches = 0
+    by_q: Dict[int, List[_SubSpace]] = {}
+    for s in batch:
+        Q = round_up_bucket(max(int(s.query_ids.size), 1), cfg.query_pad)
+        by_q.setdefault(Q, []).append(s)
+    for Q, group in sorted(by_q.items()):
+        for lo_i in range(0, len(group), cfg.max_split_batch):
+            chunk = group[lo_i : lo_i + cfg.max_split_batch]
+            B = round_up_bucket(len(chunk), 1)
+            spaces = np.zeros((B, 4), np.float32)
+            spaces[:, 2:] = 1.0  # inert unit-square pad subspaces
+            qr = np.zeros((B, Q, 4), np.float32)
+            qe = np.full((B, Q, E), -1, np.int32)
+            qs = np.zeros((B, Q, E), np.float32)
+            qv = np.zeros((B, Q), bool)
+            for bi, s in enumerate(chunk):
+                spaces[bi] = s.rect
+                qr[bi], qe[bi], qs[bi], qv[bi] = _pad_queries(workload, q_entries, q_signs, s, Q)
+            costs_b, values_b, base_b = _learn_split_batched(
+                tables,
+                nn_params,
+                jnp.asarray(spaces),
+                jnp.asarray(qr),
+                jnp.asarray(qe),
+                jnp.asarray(qs),
+                jnp.asarray(qv),
+                lr=cfg.lr,
+                n_steps=cfg.n_steps,
+                n_restarts=cfg.n_restarts,
+                beta=cfg.sigmoid_beta * cfg.indicator_scale,
+            )
+            n_dispatches += 1
+            costs_b = np.asarray(costs_b)
+            values_b = np.asarray(values_b)
+            base_b = np.asarray(base_b)
+            for bi, s in enumerate(chunk):
+                results[id(s)] = (costs_b[bi], values_b[bi], float(base_b[bi]))
+    return results, n_dispatches
+
+
+def _generate_batched(
+    dataset: GeoTextDataset,
+    workload: Workload,
+    bank: CDFBank,
+    q_entries: np.ndarray,
+    q_signs: np.ndarray,
+    cfg: PartitionConfig,
+) -> PartitionResult:
+    """Frontier-parallel Alg. 2 (DESIGN.md §5).
+
+    Each round learns the splits of *all* currently splittable heap
+    residents in vmapped power-of-two buckets, then replays the sequential
+    priority-heap walk over the learned decisions -- identical pop order,
+    identical pop-time ``max_clusters`` check -- so the accepted cluster set
+    matches the sequential mode exactly (even under a binding budget), while
+    device dispatches scale with the walk's blocking depth (~tree depth)
+    instead of node count.
+    """
+    tables = bank.jax_tables()
+    nn_params = bank.nn_params
+    m = workload.m
+    root = _root_subspace(dataset, m)
+
+    heap: List[Tuple[int, int, _SubSpace]] = []
+    counter = 0
+    heapq.heappush(heap, (-root.query_ids.size, counter, root))
+    final: List[_SubSpace] = []
+    decided: Dict[int, Tuple[np.ndarray, np.ndarray, float]] = {}
+    n_splits = 0
+    n_sgd = 0
+    n_rounds = 0
+    n_dispatches = 0
+    history: List[Dict] = []
+
+    while heap:
+        # ---- learning round: every undecided, non-size-terminal resident.
+        # (Residents the budget later finalizes are learned speculatively;
+        # that waste is bounded by one heap's width.)
+        batch = [
+            s
+            for (_, _, s) in heap
+            if id(s) not in decided
+            and s.query_ids.size >= cfg.min_queries
+            and s.obj_ids.size > cfg.min_objects
+        ]
+        if batch:
+            n_rounds += 1
+            n_sgd += len(batch)
+            results, nd = _learn_frontier(
+                workload, q_entries, q_signs, cfg, tables, nn_params, batch
+            )
+            decided.update(results)
+            n_dispatches += nd
+
+        # ---- replay the sequential heap walk until an unlearned child
+        # reaches the top (next round) or the heap drains
+        progressed = False
+        while heap:
+            _, _, s = heap[0]
+            nq, no = s.query_ids.size, s.obj_ids.size
+            # pop-time check identical to the sequential loop's (the peeked
+            # node is still in the heap, hence no +1 here)
+            terminal = (
+                nq < cfg.min_queries
+                or no <= cfg.min_objects
+                or len(final) + len(heap) >= cfg.max_clusters
+            )
+            if not terminal and id(s) not in decided:
+                break
+            heapq.heappop(heap)
+            progressed = True
+            if terminal:
+                # drop any speculative decision: keeps the id()-keyed cache
+                # covering live heap residents only (no stale-id hazard)
+                decided.pop(id(s), None)
+                final.append(s)
+                continue
+            costs, values, base = decided.pop(id(s))
+            d, best_val, gain, loss = _decide(cfg, m, costs, values, base, nq, no)
+            history.append(
+                dict(rect=s.rect.tolist(), nq=nq, no=no, dim=d, val=best_val, gain=gain, loss=loss)
+            )
+            children = _split_children(dataset, workload, s, d, best_val) if gain > loss else None
+            if children is None:
+                final.append(s)
+            else:
+                n_splits += 1
+                for child in children:
+                    counter += 1
+                    heapq.heappush(heap, (-child.query_ids.size, counter, child))
+        if heap and not progressed and not batch:  # defensive: cannot happen
+            _, _, s = heapq.heappop(heap)
+            final.append(s)
+
+    clusters = _finalize(dataset, final)
+    return PartitionResult(
+        clusters=clusters,
+        n_splits=n_splits,
+        n_sgd_calls=n_sgd,
+        history=history,
+        n_rounds=n_rounds,
+        n_dispatches=n_dispatches,
+        mode="batched",
+    )

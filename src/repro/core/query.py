@@ -38,6 +38,23 @@ class QueryStats:
 
 
 # ------------------------------------------------------- CSR / frontier helpers
+def round_up_bucket(n: int, minimum: int = 8) -> int:
+    """Next power-of-two >= n (>= minimum): the shared width-bucket discipline.
+
+    Bucketing dynamic widths to powers of two bounds the number of distinct
+    shapes any jitted step ever sees (log2 of the largest width), so
+    recompiles stay O(log(width)) for the lifetime of the process. Used by
+    the serving frontier/batch buckets (serve.engine, launch.wisk_serve) and
+    by the batched construction pipeline's (n_subspaces, query_pad) buckets
+    (core.partition; DESIGN.md §3 and §5).
+    """
+    n = max(int(n), 1)
+    b = int(minimum)
+    while b < n:
+        b <<= 1
+    return b
+
+
 def padded_child_table(level) -> np.ndarray:
     """(n, max_fanout) int32 child table from a level's CSR, padded with -1.
 

@@ -40,23 +40,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..core.query import padded_child_table
+# round_up_bucket moved to core.query so construction (core.partition) can
+# share the exact same bucket discipline; re-exported here for callers
+# (launch.wisk_serve, tests) that address it through the serving engine.
+from ..core.query import padded_child_table, round_up_bucket  # noqa: F401
 from ..core.types import GeoTextDataset, WiskIndex, Workload
 from ..kernels import ops
-
-
-def round_up_bucket(n: int, minimum: int = 8) -> int:
-    """Next power-of-two >= n (>= minimum): the frontier/batch width buckets.
-
-    Bucketing dynamic widths to powers of two bounds the number of distinct
-    shapes the jitted level steps ever see (log2 of the largest level), so
-    recompiles stay O(levels * log(width)) for the lifetime of the server.
-    """
-    n = max(int(n), 1)
-    b = int(minimum)
-    while b < n:
-        b <<= 1
-    return b
 
 
 @dataclasses.dataclass

@@ -1,0 +1,276 @@
+"""Construction-path parity: batched (device-resident) vs sequential loops.
+
+The construction refactor (frontier-parallel split learning + scan-compiled
+RL packing, DESIGN.md §5) is only acceptable if it is provably equivalent:
+
+* the lax.scan packing rollout must reproduce the Python-loop episode under
+  matched RNG streams -- same actions, rewards, replay contents, and final
+  DQN parameters;
+* batched split learning must accept/reject the same splits as the
+  sequential heap loop on a deterministic fixture -- with non-binding AND
+  binding cluster budgets -- yielding the identical bottom partition;
+* the batched pipeline must issue >= 5x fewer device dispatches than the
+  sequential one (the counters bench_construction.py reports);
+* `build_wisk` must be deterministic under a fixed seed.
+
+Everything here is sized tiny so the suite stays in the CI fast lane -- the
+end-to-end build checks double as the batched-construction smoke test.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.build import BuildConfig, build_wisk
+from repro.core.cdf import build_cdf_bank
+from repro.core.cost import exact_query_results
+from repro.core.dqn import DQNConfig, replay_init, train_state_init
+from repro.core.itemsets import expand_queries
+from repro.core.packing import (
+    PackingConfig,
+    _Env,
+    _rollout_episode,
+    _run_episode,
+    pack_one_level,
+)
+from repro.core.partition import PartitionConfig, generate_bottom_clusters
+from repro.core.query import execute_serial
+from repro.data.synth import make_dataset
+from repro.data.workloads import make_workload
+
+
+def _tiny_build_config(**over) -> BuildConfig:
+    cfg = BuildConfig(
+        # min_objects terminates the recursion well before max_clusters, so
+        # the budget is non-binding and both modes accept identical splits
+        partition=PartitionConfig(
+            max_clusters=64, n_steps=20, n_restarts=2, min_objects=64,
+            query_pad=16, max_split_batch=8,
+        ),
+        packing=PackingConfig(epochs=2, max_label_queries=8, dqn=DQNConfig()),
+        cdf_train_steps=40,
+        use_itemsets=False,
+    )
+    for k, v in over.items():
+        setattr(cfg, k, v)
+    return cfg
+
+
+@pytest.fixture(scope="module")
+def tiny_builds():
+    """One tiny dataset/workload built batched (twice) and sequential (once)."""
+    ds = make_dataset("fs", n=600, seed=21)
+    wl = make_workload(ds, m=16, dist="MIX", seed=22)
+    arts = {
+        "batched": build_wisk(ds, wl, _tiny_build_config(construction="batched")),
+        "batched2": build_wisk(ds, wl, _tiny_build_config(construction="batched")),
+        "sequential": build_wisk(ds, wl, _tiny_build_config(construction="sequential")),
+    }
+    return ds, wl, arts
+
+
+# ------------------------------------------------------------ packing parity
+def _episode_fixture(seed=0, N=6, m=5):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 2, (N, m)).astype(bool)
+    cfg = PackingConfig(epochs=4, dqn=DQNConfig(batch_size=8, capacity=64))
+    state_dim = (m + 1) * N + m
+    key = jax.random.PRNGKey(seed)
+    key, k0 = jax.random.split(key)
+    ts = train_state_init(k0, state_dim, N, cfg.dqn)
+    buf = replay_init(cfg.dqn.capacity, state_dim, N)
+    return labels, cfg, ts, buf, key
+
+
+@pytest.mark.parametrize("eps,train", [(0.7, True), (0.0, True), (0.0, False)])
+def test_scan_rollout_matches_python_episode(eps, train):
+    """The scan-compiled rollout reproduces the host-loop episode: same
+    actions, rewards, replay contents, and final params under one RNG key."""
+    labels, cfg, ts, buf, key = _episode_fixture()
+    key, k = jax.random.split(key)
+    env = _Env(labels, cfg.action_mask)
+    a_s, tot_s, buf_s, ts_s, loss_s, _ = _run_episode(env, ts, buf, k, eps, cfg, train=train)
+    a_b, r_b, buf_b, ts_b, loss_b, trained_b = _rollout_episode(
+        jnp.asarray(labels), ts, buf, k, eps, cfg.dqn, train, cfg.action_mask
+    )
+    np.testing.assert_array_equal(a_s, np.asarray(a_b))
+    np.testing.assert_allclose(tot_s, float(jnp.sum(r_b)), atol=1e-6)
+    if train:
+        for name in ("s", "a", "r", "s2", "mask2", "done", "ptr", "size"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(buf_s, name)), np.asarray(getattr(buf_b, name)),
+                atol=1e-6, err_msg=f"replay field {name}",
+            )
+        for ls, lb in zip(
+            jax.tree.leaves(ts_s.params), jax.tree.leaves(ts_b.params)
+        ):
+            np.testing.assert_allclose(np.asarray(ls), np.asarray(lb), atol=1e-5)
+        np.testing.assert_allclose(
+            loss_s, np.asarray(loss_b)[np.asarray(trained_b)], atol=1e-5
+        )
+
+
+def test_multi_episode_training_parity():
+    """Across several episodes (replay warm, train steps firing) the two
+    rollout paths keep producing the same actions and the same parameters."""
+    labels, cfg, ts, buf, key = _episode_fixture(seed=3, N=8, m=6)
+    env = _Env(labels, cfg.action_mask)
+    ts_b, buf_b = ts, buf
+    eps = 1.0
+    trained_any = False
+    for ep in range(6):
+        key, k = jax.random.split(key)
+        a_s, _, buf, ts, loss_s, _ = _run_episode(env, ts, buf, k, eps, cfg, train=True)
+        a_b, _, buf_b, ts_b, _, trained = _rollout_episode(
+            jnp.asarray(labels), ts_b, buf_b, k, eps, cfg.dqn, True, cfg.action_mask
+        )
+        np.testing.assert_array_equal(a_s, np.asarray(a_b), err_msg=f"episode {ep}")
+        trained_any = trained_any or bool(np.asarray(trained).any())
+        eps = max(cfg.dqn.eps_end, eps * 0.7)
+    assert trained_any, "fixture must actually exercise dqn_train_step"
+    for ls, lb in zip(jax.tree.leaves(ts.params), jax.tree.leaves(ts_b.params)):
+        np.testing.assert_allclose(np.asarray(ls), np.asarray(lb), atol=1e-5)
+
+
+def test_pack_one_level_modes_agree():
+    rng = np.random.default_rng(7)
+    labels = rng.integers(0, 2, (10, 8)).astype(bool)
+    cfg = PackingConfig(epochs=6, dqn=DQNConfig(batch_size=16, capacity=128))
+    seq = pack_one_level(labels, cfg, seed=1, mode="sequential")
+    bat = pack_one_level(labels, cfg, seed=1, mode="batched")
+    np.testing.assert_array_equal(seq.assign, bat.assign)
+    assert seq.n_upper == bat.n_upper
+    np.testing.assert_allclose(seq.reward_curve, bat.reward_curve, atol=1e-5)
+    # the dispatch collapse is the point of the refactor
+    assert bat.n_dispatches * 5 <= seq.n_dispatches
+    assert seq.n_env_steps == bat.n_env_steps
+
+
+def test_parallel_episode_exploration_knob():
+    """parallel_episodes > 1 is a schedule change, not a correctness change:
+    the packing still returns a valid compacted assignment."""
+    rng = np.random.default_rng(9)
+    labels = rng.integers(0, 2, (8, 6)).astype(bool)
+    cfg = PackingConfig(
+        epochs=3, parallel_episodes=4, dqn=DQNConfig(batch_size=16, capacity=128)
+    )
+    res = pack_one_level(labels, cfg, seed=2, mode="batched")
+    assert res.assign.shape == (8,)
+    assert res.assign.min() == 0 and res.assign.max() == res.n_upper - 1
+    assert np.unique(res.assign).size == res.n_upper
+    assert res.n_env_steps == (3 * 4 + 1) * 8
+
+
+# ---------------------------------------------------------- partition parity
+def _partition_fixture():
+    ds = make_dataset("fs", n=500, seed=31)
+    wl = make_workload(ds, m=16, dist="MIX", seed=32)
+    bank = build_cdf_bank(ds, n_steps=50)
+    qe, qs = expand_queries(wl, [], ds.vocab_size, use_itemsets=False)
+    return ds, wl, bank, qe, qs
+
+
+def _partition_sets(res):
+    a = res.clusters.assign
+    return sorted(tuple(np.nonzero(a == c)[0]) for c in range(res.clusters.k))
+
+
+def _decisions(res):
+    return [
+        (h["nq"], h["no"], h["dim"], round(h["val"], 5), h["gain"] > h["loss"])
+        for h in res.history
+    ]
+
+
+def test_batched_split_decisions_match_sequential():
+    """Frontier-parallel rounds accept and reject exactly the splits the
+    sequential heap loop does -- in the same walk order -- and produce the
+    identical bottom partition (cluster numbering aside)."""
+    ds, wl, bank, qe, qs = _partition_fixture()
+    cfg = PartitionConfig(
+        max_clusters=64, n_steps=20, n_restarts=2, min_objects=32,
+        query_pad=16, max_split_batch=8,
+    )
+    seq = generate_bottom_clusters(ds, wl, bank, qe, qs, cfg, mode="sequential")
+    bat = generate_bottom_clusters(ds, wl, bank, qe, qs, cfg, mode="batched")
+    assert seq.n_splits == bat.n_splits
+    # budget non-binding here: no speculative learning, identical work
+    assert seq.n_sgd_calls == bat.n_sgd_calls
+    assert seq.clusters.k == bat.clusters.k
+    assert _partition_sets(seq) == _partition_sets(bat)
+    # the heap-walk replay preserves decision *order*, not just the set
+    assert _decisions(seq) == _decisions(bat)
+    # rounds scale with depth, not node count
+    assert bat.n_rounds < seq.n_sgd_calls
+    assert bat.n_dispatches < seq.n_dispatches
+
+    # binding budget: the pop-time max_clusters check is replayed exactly,
+    # so the (truncated) cluster sets still agree
+    cfg_b = PartitionConfig(
+        max_clusters=5, n_steps=20, n_restarts=2, min_objects=32,
+        query_pad=16, max_split_batch=8,
+    )
+    seq_b = generate_bottom_clusters(ds, wl, bank, qe, qs, cfg_b, mode="sequential")
+    bat_b = generate_bottom_clusters(ds, wl, bank, qe, qs, cfg_b, mode="batched")
+    assert seq_b.clusters.k == bat_b.clusters.k <= 5
+    assert _partition_sets(seq_b) == _partition_sets(bat_b)
+    assert _decisions(seq_b) == _decisions(bat_b)
+
+
+# ----------------------------------------------- end-to-end smoke + counters
+def test_batched_construction_smoke(tiny_builds):
+    """Tiny-size batched build exercised on every PR (CI fast lane): the
+    pipeline must produce a real partition and exact query results."""
+    ds, wl, arts = tiny_builds
+    art = arts["batched"]
+    assert art.partition.mode == "batched"
+    assert art.partition.clusters.k > 1
+    st = execute_serial(art.index, ds, wl)
+    gt = exact_query_results(ds, wl)
+    np.testing.assert_array_equal(np.array([len(r) for r in st.results]), gt)
+    assert art.counters["partition_rounds"] >= 1
+    assert art.counters["construction_dispatches"] >= 1
+
+
+def test_construction_dispatch_reduction(tiny_builds):
+    """Acceptance gate: batched mode issues >= 5x fewer device dispatches
+    than sequential mode for the same build."""
+    _, _, arts = tiny_builds
+    seq = arts["sequential"].counters
+    bat = arts["batched"].counters
+    assert seq["partition_problems"] == bat["partition_problems"]
+    assert bat["construction_dispatches"] * 5 <= seq["construction_dispatches"], (
+        f"batched={bat} sequential={seq}"
+    )
+
+
+def test_modes_agree_end_to_end(tiny_builds):
+    """Both construction modes learn the same bottom partition end-to-end
+    and return exact query results."""
+    ds, wl, arts = tiny_builds
+
+    def partition_sets(art):
+        a = art.partition.clusters.assign
+        return sorted(tuple(np.nonzero(a == c)[0]) for c in range(art.partition.clusters.k))
+
+    assert partition_sets(arts["batched"]) == partition_sets(arts["sequential"])
+    st = execute_serial(arts["sequential"].index, ds, wl)
+    gt = exact_query_results(ds, wl)
+    np.testing.assert_array_equal(np.array([len(r) for r in st.results]), gt)
+
+
+def test_build_determinism(tiny_builds):
+    """Same seed twice -> identical cluster assignments and hierarchy parents
+    (guards the RNG threading through the scan rollout)."""
+    _, _, arts = tiny_builds
+    a, b = arts["batched"], arts["batched2"]
+    np.testing.assert_array_equal(a.partition.clusters.assign, b.partition.clusters.assign)
+    assert (a.hierarchy is None) == (b.hierarchy is None)
+    if a.hierarchy is not None:
+        assert len(a.hierarchy.parents) == len(b.hierarchy.parents)
+        for pa, pb in zip(a.hierarchy.parents, b.hierarchy.parents):
+            np.testing.assert_array_equal(pa, pb)
+    assert a.index.height == b.index.height
+    for la, lb in zip(a.index.levels, b.index.levels):
+        np.testing.assert_allclose(la.mbrs, lb.mbrs)

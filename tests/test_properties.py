@@ -143,6 +143,32 @@ def test_csr_frontier_propagation_matches_dense_matmul(n_down, m, seed):
     np.testing.assert_array_equal(got, (hit @ adj) > 0)
 
 
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 30),
+    n_groups=st.integers(1, 35),
+    seed=st.integers(0, 1000),
+)
+def test_spectral_group_properties(n, n_groups, seed):
+    """spectral_group (packing accel §6) contracts: deterministic under a
+    fixed seed, group ids compact in 0..G-1, and identity when n_groups >= n."""
+    from repro.core.packing import spectral_group
+
+    rng = np.random.default_rng(seed)
+    lo = rng.uniform(0, 1, (n, 2))
+    mbrs = np.concatenate([lo, lo + rng.uniform(0, 0.2, (n, 2))], axis=1).astype(np.float32)
+    g1 = spectral_group(mbrs, n_groups, seed=seed)
+    g2 = spectral_group(mbrs, n_groups, seed=seed)
+    np.testing.assert_array_equal(g1, g2)  # determinism under a fixed seed
+    assert g1.shape == (n,) and g1.dtype == np.int32
+    # compact ids: every group in 0..G-1 is used
+    G = int(g1.max()) + 1
+    assert G <= min(max(n_groups, 1), n)
+    np.testing.assert_array_equal(np.unique(g1), np.arange(G))
+    if n_groups >= n:  # no grouping requested: identity assignment
+        np.testing.assert_array_equal(g1, np.arange(n, dtype=np.int32))
+
+
 def test_error_feedback_recovers_dropped_mass():
     rng = np.random.default_rng(0)
     g = {"w": jnp.asarray(rng.normal(0, 1, 64).astype(np.float32))}
