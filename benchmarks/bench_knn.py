@@ -1,35 +1,146 @@
-"""Fig. 23 (appendix): Boolean kNN query support."""
+"""Fig. 23 (appendix): Boolean kNN -- host vs device serving paths.
+
+For k in {1, 10, 100} reports, per path, mean per-query wall clock plus the
+Eq.1-style cost counters (nodes checked, objects verified) and the device
+path's leaf pruning ratio: exhaustive-leaf-scan blocks / leaf blocks the
+distance-bounded descent actually verified (> 1 means the bound fired).
+
+``--quick`` (the CI fast-lane smoke) swaps the DQN-built index for a tiny
+deterministic grid hierarchy, runs k=4 only, and asserts device/host parity
+and pruning ratio > 1 so the workflow catches kNN-path breakage cheaply.
+"""
+import argparse
 import time
 
 import numpy as np
 
 from . import common as C
-from repro.core.query import knn_query
+from repro.core.index import assemble_index
+from repro.core.packing import HierarchyResult
+from repro.core.query import knn_level_sync, knn_query
+from repro.core.types import ClusterSet
+from repro.launch.wisk_serve import serve_knn_batch
+from repro.serve.engine import BatchedWisk
+
+QUICK_N = 600
+QUICK_M = 8
+QUICK_K = 4
 
 
-def run():
+def _query_points(wl) -> np.ndarray:
+    return np.stack(
+        [(wl.rects[:, 0] + wl.rects[:, 2]) / 2, (wl.rects[:, 1] + wl.rects[:, 3]) / 2], 1
+    ).astype(np.float32)
+
+
+def _tiny_grid_index(ds, g: int = 5):
+    """Deterministic 2-level hierarchy (grid leaves grouped spatially) --
+    the smoke's stand-in for the DQN build, mirroring the parity suite's."""
+    cell = np.minimum((ds.locs * g).astype(np.int32), g - 1)
+    assign = cell[:, 0] * g + cell[:, 1]
+    _, assign = np.unique(assign, return_inverse=True)
+    clusters = ClusterSet.from_assignment(ds, assign.astype(np.int32))
+    cent = np.clip((clusters.mbrs[:, :2] + clusters.mbrs[:, 2:]) / 2, 0.0, 1.0)
+    gg = max(2, g // 2)
+    pcell = np.minimum((cent * gg).astype(np.int32), gg - 1)
+    pid = pcell[:, 0] * gg + pcell[:, 1]
+    _, pid = np.unique(pid, return_inverse=True)
+    hier = None
+    if pid.max() + 1 < clusters.k:
+        hier = HierarchyResult(parents=[pid.astype(np.int32)], level_labels=[], packs=[])
+    return assemble_index(ds, clusters, hier)
+
+
+def _bench_path(fn, m: int, reps: int = 3) -> float:
+    fn()  # warm (device: compile + learn frontier widths)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps / m * 1e6
+
+
+def run(quick: bool = False):
     rows = []
-    ds = C.dataset()
-    art = C.wisk_index()
-    rng = np.random.default_rng(0)
-    test = C.workload("fs", C.DEFAULT_N, 16, "MIX", 0.0005, 5, 23)
-    for k in (5, 15, 30):
-        t0 = time.perf_counter()
-        for qi in range(test.m):
-            point = np.array([
-                (test.rects[qi, 0] + test.rects[qi, 2]) / 2,
-                (test.rects[qi, 1] + test.rects[qi, 3]) / 2,
-            ])
-            knn_query(art.index, ds, point, test.kw_bitmap[qi], k)
-        dt = (time.perf_counter() - t0) / test.m * 1e6
-        rows.append(C.row(f"fig23/k{k}/wisk", dt, ""))
-        # brute force reference
-        t0 = time.perf_counter()
-        for qi in range(test.m):
-            match = np.any(ds.kw_bitmap & test.kw_bitmap[qi][None], axis=1)
-            d2 = ((ds.locs - ds.locs[qi % ds.n]) ** 2).sum(1)
-            d2[~match] = np.inf
-            np.argsort(d2)[:k]
-        dt = (time.perf_counter() - t0) / test.m * 1e6
-        rows.append(C.row(f"fig23/k{k}/bruteforce", dt, ""))
+    if quick:
+        ds = C.dataset("fs", QUICK_N)
+        index = _tiny_grid_index(ds)
+        test = C.workload("fs", QUICK_N, QUICK_M, "MIX", 0.0005, 5, 23)
+        ks = (QUICK_K,)
+    else:
+        ds = C.dataset()
+        index = C.wisk_index().index
+        test = C.workload("fs", C.DEFAULT_N, 32, "MIX", 0.0005, 5, 23)
+        ks = (1, 10, 100)
+    points = _query_points(test)
+    bw = BatchedWisk.build(index, ds)
+    m = test.m
+    n_leaf = index.levels[-1].n
+    tag = "fig23q" if quick else "fig23"
+    for k in ks:
+        # serial best-first (paper appendix A reference)
+        res = [knn_query(index, ds, points[qi], test.kw_bitmap[qi], k) for qi in range(m)]
+        us = _bench_path(
+            lambda: [knn_query(index, ds, points[qi], test.kw_bitmap[qi], k) for qi in range(m)],
+            m,
+        )
+        nodes = np.mean([r.nodes_accessed for r in res])
+        ver = np.mean([r.verified for r in res])
+        rows.append(C.row(f"{tag}/k{k}/serial_bestfirst", us, f"nodes={nodes:.1f};verified={ver:.1f}"))
+
+        # vectorized host mirror of the device descent
+        sync = knn_level_sync(index, ds, points, test.kw_bitmap, k)
+        us = _bench_path(lambda: knn_level_sync(index, ds, points, test.kw_bitmap, k), m)
+        rows.append(
+            C.row(
+                f"{tag}/k{k}/host_levelsync",
+                us,
+                f"nodes={sync['nodes_checked'].mean():.1f};verified={sync['verified'].mean():.1f}"
+                f";leaves={sync['leaves_verified'].mean():.1f}",
+            )
+        )
+
+        # device distance-bounded frontier descent (via the bucketed front door)
+        dev = serve_knn_batch(bw, points, test.kw_bitmap, k)
+        us = _bench_path(lambda: serve_knn_batch(bw, points, test.kw_bitmap, k), m)
+        prune_ratio = (m * n_leaf) / max(float(dev["leaves_verified"].sum()), 1.0)
+        rows.append(
+            C.row(
+                f"{tag}/k{k}/device_frontier",
+                us,
+                f"nodes={dev['nodes_checked'].mean():.1f};verified={dev['verified'].mean():.1f}"
+                f";leaves={dev['leaves_verified'].mean():.1f};pruning_ratio={prune_ratio:.2f}",
+            )
+        )
+
+        # brute force over the whole dataset (external ground truth)
+        def brute():
+            for qi in range(m):
+                match = np.any(ds.kw_bitmap & test.kw_bitmap[qi][None], axis=1)
+                d2 = ((ds.locs - points[qi]) ** 2).sum(1)
+                d2[~match] = np.inf
+                np.argsort(d2)[:k]
+
+        rows.append(C.row(f"{tag}/k{k}/bruteforce", _bench_path(brute, m), ""))
+
+        # cross-path result parity (id sequences, not just sets) + pruning gate
+        for qi in range(m):
+            got = dev["ids"][qi]
+            got = got[got >= 0]
+            assert np.array_equal(got, res[qi].ids), f"k={k} q={qi}: device != serial"
+            hs = sync["ids"][qi]
+            assert np.array_equal(hs[hs >= 0], res[qi].ids), f"k={k} q={qi}: levelsync != serial"
+        assert prune_ratio > 1.0, f"k={k}: bounded descent did not prune ({prune_ratio:.2f})"
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="tiny-index CI smoke (k=4)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for r in run(quick=args.quick):
+        print(r, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,9 +9,20 @@ Three execution paths:
 * ``execute_level_sync`` -- vectorized (numpy) level-synchronous traversal:
   an (M, n_level) active mask descends the levels. Mirrors the TPU execution
   strategy (see DESIGN.md §3); used to validate the JAX/Pallas serving path.
-* kNN (Boolean kNN, paper appendix A): best-first search.
+* ``knn_query`` -- Boolean kNN (paper appendix A): serial best-first search,
+  ground truth for the kNN serving paths. Ties at equal distance break by
+  smallest object id -- the convention shared by every kNN path (DESIGN.md
+  §6), so the returned k-set is independent of traversal order.
+* ``knn_level_sync`` -- vectorized (numpy) distance-bounded kNN: kw-filtered
+  level descent, then per-query leaf sweeps in ascending MBR min-distance
+  order, pruned against the running k-th best. Mirrors the device
+  ``serve.engine.retrieve_knn`` descent.
 
 All paths return per-query result ids plus Eq.1-style cost counters.
+Distances are computed in float32 throughout, matching the device paths so
+equal-distance ties (identical coordinates) resolve identically everywhere;
+XLA's FMA fusion may still drift distinct distances by 1 ULP, which the
+lexicographic (dist, id) ordering tolerates.
 """
 from __future__ import annotations
 
@@ -162,8 +173,6 @@ def execute_serial(
                 nxt = np.zeros(0, dtype=np.int32)
             active = nxt
             if active.size == 0:
-                for _ in range(li + 1, len(index.levels)):
-                    pass
                 break
         results.append(
             np.unique(np.concatenate(res_parts)) if res_parts else np.zeros(0, dtype=np.int32)
@@ -224,48 +233,171 @@ def execute_level_sync(
     return QueryStats(nodes_accessed=nodes, verified=verified, results=res, cost=cost)
 
 
+@dataclasses.dataclass
+class KnnResult:
+    """One query's Boolean kNN answer plus Eq.1-style cost counters.
+
+    ids/dist2 are sorted ascending by (distance, object id) -- the shared
+    tie-break convention of every kNN path (DESIGN.md §6). ``ids`` may hold
+    fewer than k entries when fewer objects match the query keywords.
+    """
+
+    ids: np.ndarray  # (k',) int32, k' <= k
+    dist2: np.ndarray  # (k',) float32 squared distances
+    nodes_accessed: int  # nodes popped & examined (MBR dist / bitmap checked)
+    verified: int  # keyword-matching objects whose distance was computed
+
+
+def _mbr_dist2_f32(mbrs: np.ndarray, point: np.ndarray) -> np.ndarray:
+    """Squared point-to-MBR min-distance, float32 (matches the device kernel
+    op-for-op so cross-path distance ties resolve identically)."""
+    mbrs = np.asarray(mbrs, np.float32)
+    point = np.asarray(point, np.float32)
+    dx = np.maximum(np.maximum(mbrs[..., 0] - point[..., 0], point[..., 0] - mbrs[..., 2]), 0.0)
+    dy = np.maximum(np.maximum(mbrs[..., 1] - point[..., 1], point[..., 1] - mbrs[..., 3]), 0.0)
+    return (dx * dx + dy * dy).astype(np.float32)
+
+
 def knn_query(
     index: WiskIndex,
     dataset: GeoTextDataset,
     point: np.ndarray,
     kw_bitmap: np.ndarray,
     k: int,
-) -> np.ndarray:
-    """Boolean kNN (appendix A): best-first search over the hierarchy."""
+) -> KnnResult:
+    """Boolean kNN (appendix A): best-first search over the hierarchy.
 
-    def mbr_dist2(mb):
-        dx = np.maximum(np.maximum(mb[0] - point[0], point[0] - mb[2]), 0.0)
-        dy = np.maximum(np.maximum(mb[1] - point[1], point[1] - mb[3]), 0.0)
-        return dx * dx + dy * dy
-
+    Equal-distance objects break ties by smallest object id, so the returned
+    k-set is a pure function of (dataset, query) -- independent of heap
+    insertion / traversal order -- and matches the serving paths exactly.
+    """
+    empty = KnnResult(
+        ids=np.zeros(0, np.int32), dist2=np.zeros(0, np.float32), nodes_accessed=0, verified=0
+    )
+    if k <= 0 or not np.any(kw_bitmap):
+        return empty
+    point = np.asarray(point, np.float32)
     heap: List[Tuple[float, int, int, int]] = []  # (dist, tie, level, node)
     tie = 0
+    root_d = _mbr_dist2_f32(index.levels[0].mbrs, point)
     for u in range(index.levels[0].n):
-        heapq.heappush(heap, (float(mbr_dist2(index.levels[0].mbrs[u])), tie, 0, u))
+        heapq.heappush(heap, (float(root_d[u]), tie, 0, u))
         tie += 1
-    out: List[Tuple[float, int]] = []  # max-heap by -dist of selected objects
+    # selected objects: a max-heap on (-dist, -oid); its root is the entry to
+    # evict -- the lexicographically largest (dist, oid), so equal-distance
+    # ties evict the largest id first (smallest-id-wins convention)
+    out: List[Tuple[float, int]] = []
+    nodes = 0
+    verified = 0
     clusters = index.clusters
     while heap:
         d, _, li, u = heapq.heappop(heap)
-        if len(out) >= k and d >= -out[0][0]:
+        # strict bound: a node at exactly the k-th distance may still hold an
+        # equal-distance object with a smaller id, so only d > bound stops
+        if len(out) >= k and d > -out[0][0]:
             break
+        nodes += 1
         level = index.levels[li]
         if not np.any(level.bitmaps[u] & kw_bitmap):
             continue
         if li == len(index.levels) - 1:
             ids = clusters.order[clusters.offsets[u] : clusters.offsets[u + 1]]
             match = np.any(dataset.kw_bitmap[ids] & kw_bitmap[None, :], axis=1)
-            for oid in ids[match]:
-                dd = float(((dataset.locs[oid] - point) ** 2).sum())
+            sel = ids[match]
+            verified += int(sel.size)
+            dx = dataset.locs[sel, 0] - point[0]
+            dy = dataset.locs[sel, 1] - point[1]
+            dd_all = (dx * dx + dy * dy).astype(np.float32)
+            for oid, dd in zip(sel, dd_all):
+                key = (-float(dd), -int(oid))
                 if len(out) < k:
-                    heapq.heappush(out, (-dd, int(oid)))
-                elif dd < -out[0][0]:
-                    heapq.heapreplace(out, (-dd, int(oid)))
+                    heapq.heappush(out, key)
+                elif key > out[0]:  # (dd, oid) < worst (dist, oid) kept
+                    heapq.heapreplace(out, key)
         else:
-            for c in level.child[level.child_ptr[u] : level.child_ptr[u + 1]]:
-                heapq.heappush(
-                    heap, (float(mbr_dist2(index.levels[li + 1].mbrs[c])), tie, li + 1, int(c))
-                )
+            ch = level.child[level.child_ptr[u] : level.child_ptr[u + 1]]
+            ch_d = _mbr_dist2_f32(index.levels[li + 1].mbrs[ch], point)
+            for c, cd in zip(ch, ch_d):
+                heapq.heappush(heap, (float(cd), tie, li + 1, int(c)))
                 tie += 1
-    out.sort(key=lambda t: -t[0])
-    return np.array([oid for _, oid in out], dtype=np.int32)
+    out.sort(key=lambda t: (-t[0], -t[1]))  # ascending (dist, oid)
+    return KnnResult(
+        ids=np.array([-oid for _, oid in out], dtype=np.int32),
+        dist2=np.array([-dd for dd, _ in out], dtype=np.float32),
+        nodes_accessed=nodes,
+        verified=verified,
+    )
+
+
+def knn_level_sync(
+    index: WiskIndex,
+    dataset: GeoTextDataset,
+    points: np.ndarray,
+    kw_bitmaps: np.ndarray,
+    k: int,
+) -> dict:
+    """Vectorized distance-bounded Boolean kNN -- the host mirror of the
+    device descent (``serve.engine.retrieve_knn``, DESIGN.md §6).
+
+    Descends the levels with keyword-only masks (kNN has no rectangle), then
+    sweeps each query's surviving leaves in ascending squared MBR
+    min-distance, maintaining the k best (dist, id) pairs and stopping as
+    soon as the next leaf's min-distance exceeds the current k-th best.
+    Returns a dict shaped like ``retrieve_knn``'s (ids padded with -1).
+    """
+    m = int(np.asarray(points).shape[0])
+    points = np.asarray(points, np.float32)
+    kw_bitmaps = np.asarray(kw_bitmaps, np.uint32)
+    out = dict(
+        ids=np.full((m, max(k, 0)), -1, np.int32),
+        dist2=np.full((m, max(k, 0)), np.inf, np.float32),
+        nodes_checked=np.zeros(m, np.int64),
+        verified=np.zeros(m, np.int64),
+        leaves_verified=np.zeros(m, np.int64),
+        pruned=np.zeros(m, np.int64),
+    )
+    if k <= 0:
+        return out
+    # keyword-filtered level descent (an object's keywords are contained in
+    # every ancestor bitmap, so this never prunes a leaf holding a match)
+    active = np.ones((m, index.levels[0].n), dtype=bool)
+    for li, level in enumerate(index.levels):
+        out["nodes_checked"] += active.sum(axis=1)
+        kw = np.any(level.bitmaps[None, :, :] & kw_bitmaps[:, None, :], axis=2)
+        hit = active & kw
+        if li == len(index.levels) - 1:
+            leaf_hit = hit
+            break
+        active = propagate_hits(hit, padded_child_table(level), index.levels[li + 1].n)
+    leaves = index.levels[-1]
+    d2 = np.where(leaf_hit, _mbr_dist2_f32(leaves.mbrs[None, :, :], points[:, None, :]), np.inf)
+    clusters = index.clusters
+    id_sentinel = np.int64(np.iinfo(np.int32).max)
+    for qi in range(m):
+        order = np.argsort(d2[qi], kind="stable")  # ties: smallest leaf id first
+        best_d = np.full(k, np.inf, np.float32)
+        best_id = np.full(k, id_sentinel, np.int64)
+        for pos, leaf in enumerate(order):
+            dq = d2[qi, leaf]
+            if not np.isfinite(dq):
+                break
+            if dq > best_d[k - 1]:
+                out["pruned"][qi] += int(np.isfinite(d2[qi, order[pos:]]).sum())
+                break
+            ids = clusters.order[clusters.offsets[leaf] : clusters.offsets[leaf + 1]]
+            kwm = np.any(dataset.kw_bitmap[ids] & kw_bitmaps[qi][None, :], axis=1)
+            sel = ids[kwm]
+            out["leaves_verified"][qi] += 1
+            out["verified"][qi] += int(sel.size)
+            if sel.size:
+                dx = dataset.locs[sel, 0] - points[qi, 0]
+                dy = dataset.locs[sel, 1] - points[qi, 1]
+                od = (dx * dx + dy * dy).astype(np.float32)
+                alld = np.concatenate([best_d, od])
+                allid = np.concatenate([best_id, sel.astype(np.int64)])
+                keep = np.lexsort((allid, alld))[:k]
+                best_d, best_id = alld[keep], allid[keep]
+        fin = np.isfinite(best_d)
+        out["ids"][qi] = np.where(fin, best_id, -1).astype(np.int32)
+        out["dist2"][qi] = best_d
+    return out

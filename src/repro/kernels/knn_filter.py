@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: Boolean-kNN frontier distance filtering (DESIGN.md §6).
+
+The distance-bounded descent generalizes the range frontier filter
+(``kernels/frontier.py``): instead of an intersect/bitmap boolean, each
+(query, frontier-slot) pair needs the *squared min-distance* from the query
+point to the slot's MBR, fused with the keyword-bitmap test, so the serving
+engine can prune a slot against the query's current k-th best distance in
+one VMEM-resident pass. Slots that fail the bitmap AND (or are ``-1``
+padding) come back as ``+inf`` -- the natural "never survives a distance
+bound" sentinel, mirroring the NEVER_RECT padding of the range path.
+
+Layout notes (TPU): identical tiling to ``frontier_filter`` -- the minor
+dimension is the frontier width (BF = 128 lanes by default), the bitmap
+plane ``(BM, BF, W)`` streams through VMEM one word-plane at a time via the
+static W unroll, and only the (BM, BF) distance/keyword accumulators stay
+live.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _knn_kernel(q_pts_ref, q_bm_ref, f_mbrs_ref, f_bm_ref, f_valid_ref, out_ref):
+    qp = q_pts_ref[...]  # (BM, 2)
+    fm = f_mbrs_ref[...]  # (BM, BF, 4)
+    px = qp[:, 0:1]
+    py = qp[:, 1:2]
+    # squared min-distance from point to (closed) MBR: clamp the outside gap
+    dx = jnp.maximum(jnp.maximum(fm[:, :, 0] - px, px - fm[:, :, 2]), 0.0)
+    dy = jnp.maximum(jnp.maximum(fm[:, :, 1] - py, py - fm[:, :, 3]), 0.0)
+    d2 = dx * dx + dy * dy  # (BM, BF)
+    qb = q_bm_ref[...]  # (BM, W) uint32
+    fb = f_bm_ref[...]  # (BM, BF, W) uint32
+    W = qb.shape[1]
+    kw = jnp.zeros(d2.shape, dtype=jnp.bool_)
+    for w in range(W):  # static unroll over bitmap words (frontier_filter inner loop)
+        kw = kw | ((fb[:, :, w] & qb[:, w][:, None]) != 0)
+    ok = kw & (f_valid_ref[...] > 0)
+    out_ref[...] = jnp.where(ok, d2, jnp.inf).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bf", "interpret"))
+def knn_filter(
+    q_pts: jax.Array,  # (M, 2)
+    q_bm: jax.Array,  # (M, W)
+    f_mbrs: jax.Array,  # (M, F, 4)
+    f_bm: jax.Array,  # (M, F, W)
+    f_valid: jax.Array,  # (M, F) int8
+    bm: int = 8,
+    bf: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """(M, F) f32 squared MBR min-distances (+inf where the slot is invalid
+    or shares no keyword bit). Inputs padded to tile multiples by ops.py."""
+    M, F = f_valid.shape
+    W = q_bm.shape[1]
+    bm = min(bm, M)
+    bf = min(bf, F)
+    grid = (pl.cdiv(M, bm), pl.cdiv(F, bf))
+    return pl.pallas_call(
+        _knn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 2), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, W), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, bf, 4), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bm, bf, W), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bm, bf), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bf), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, F), jnp.float32),
+        interpret=interpret,
+    )(q_pts, q_bm, f_mbrs, f_bm, f_valid)

@@ -16,6 +16,7 @@ import numpy as np
 
 from .cdf_mlp import cdf_mlp_bank
 from .frontier import frontier_filter
+from .knn_filter import knn_filter
 from .skr_filter import skr_filter
 from .skr_verify import skr_verify
 from . import ref
@@ -88,6 +89,26 @@ def filter_frontier(
     return out[:M, :F]
 
 
+def knn_frontier_dist(
+    q_pts, q_bm, f_mbrs, f_bm, f_valid, bm: int = 8, bf: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """(M, F) f32 squared frontier MBR min-distances via the Pallas kNN kernel
+    (+inf at invalid / keyword-miss slots, including the padding added here)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    M, F = f_valid.shape
+    bm_ = min(bm, max(M, 1))
+    bf_ = min(bf, max(F, 1))
+    qp = _pad_dim(jnp.asarray(q_pts, jnp.float32), 0, bm_)
+    qb = _pad_dim(jnp.asarray(q_bm, jnp.uint32), 0, bm_)
+    fm = _pad_dim(_pad_dim(jnp.asarray(f_mbrs, jnp.float32), 0, bm_), 1, bf_)
+    fb = _pad_dim(_pad_dim(jnp.asarray(f_bm, jnp.uint32), 0, bm_), 1, bf_)
+    fv = _pad_dim(_pad_dim(jnp.asarray(f_valid, jnp.int8), 0, bm_), 1, bf_)
+    out = knn_filter(qp, qb, fm, fb, fv, bm=bm_, bf=bf_, interpret=interpret)
+    return out[:M, :F]
+
+
 def verify_candidates(
     q_rects, q_bm, cand_x, cand_y, cand_bm, cand_valid, bm: int = 8, bc: int = 512,
     interpret: Optional[bool] = None,
@@ -125,4 +146,11 @@ def cdf_bank_forward(
     return out[:N, :B]
 
 
-__all__ = ["filter_pairs", "filter_frontier", "verify_candidates", "cdf_bank_forward", "ref"]
+__all__ = [
+    "filter_pairs",
+    "filter_frontier",
+    "knn_frontier_dist",
+    "verify_candidates",
+    "cdf_bank_forward",
+    "ref",
+]

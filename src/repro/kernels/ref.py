@@ -51,6 +51,25 @@ def frontier_filter_ref(
     return (inter & kw & (f_valid > 0)).astype(jnp.int8)
 
 
+def knn_filter_ref(
+    q_pts: jax.Array,  # (M, 2) f32
+    q_bm: jax.Array,  # (M, W) uint32
+    f_mbrs: jax.Array,  # (M, F, 4) f32 -- MBRs gathered at each frontier slot
+    f_bm: jax.Array,  # (M, F, W) uint32
+    f_valid: jax.Array,  # (M, F) int8 (1 = slot holds a real node)
+) -> jax.Array:
+    """(M, F) f32 squared point-to-MBR min-distance; +inf where the slot is
+    invalid or its bitmap shares no bit with the query's (the kNN twin of
+    ``frontier_filter_ref`` -- DESIGN.md §6)."""
+    px = q_pts[:, 0:1]
+    py = q_pts[:, 1:2]
+    dx = jnp.maximum(jnp.maximum(f_mbrs[:, :, 0] - px, px - f_mbrs[:, :, 2]), 0.0)
+    dy = jnp.maximum(jnp.maximum(f_mbrs[:, :, 1] - py, py - f_mbrs[:, :, 3]), 0.0)
+    d2 = dx * dx + dy * dy
+    kw = jnp.any((f_bm & q_bm[:, None, :]) != 0, axis=-1)
+    return jnp.where(kw & (f_valid > 0), d2, jnp.inf).astype(jnp.float32)
+
+
 def skr_verify_ref(
     q_rects: jax.Array,  # (M, 4) f32
     q_bm: jax.Array,  # (M, W) uint32

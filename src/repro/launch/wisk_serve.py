@@ -24,7 +24,7 @@ from ..sharding.compat import shard_map
 from ..configs.wisk import WiskServeConfig
 from ..kernels.ops import NEVER_RECT
 from ..kernels.ref import skr_filter_ref, skr_verify_ref
-from ..serve.engine import BatchedWisk, retrieve, round_up_bucket
+from ..serve.engine import BatchedWisk, retrieve, retrieve_knn, round_up_bucket
 from ..sharding.rules import dp_axes
 
 OBJ_PER_LEAF = 512
@@ -68,6 +68,43 @@ def serve_batch(
     out = retrieve(bw, jnp.asarray(rects), jnp.asarray(bms), max_leaves, mode=mode)
     per_query = ("ids", "counts", "nodes_checked", "nodes_scanned", "verified", "overflow")
     return {k: (v[:m] if k in per_query else v) for k, v in out.items()}
+
+
+def pad_knn_queries_to_bucket(points, q_bm, minimum: int = 8):
+    """kNN twin of ``pad_queries_to_bucket``. Pad queries are inert because
+    their all-zero bitmap fails the keyword AND, so every frontier slot
+    scores +inf -- they verify nothing and return all ``-1`` ids. (The
+    out-of-square pad point is only defensive: distance alone would NOT
+    exclude a pad query.)"""
+    points = np.asarray(points, np.float32)
+    q_bm = np.asarray(q_bm, np.uint32)
+    m = points.shape[0]
+    bucket = round_up_bucket(m, minimum)
+    if bucket == m:
+        return points, q_bm, m
+    pad = bucket - m
+    pts = np.concatenate([points, np.full((pad, 2), 2.0, np.float32)], 0)
+    bms = np.concatenate([q_bm, np.zeros((pad, q_bm.shape[1]), np.uint32)], 0)
+    return pts, bms, m
+
+
+def serve_knn_batch(
+    bw: BatchedWisk,
+    points,
+    q_bm,
+    k: int,
+    minimum_bucket: int = 8,
+):
+    """Bucketed front door for batched Boolean kNN: pad -> retrieve -> slice.
+
+    Batch widths bucket to powers of two exactly like ``serve_batch``; ``k``
+    stays a static argument (each served k compiles its own descent, the
+    workload classes of LIST-style top-k serving are few and fixed).
+    """
+    pts, bms, m = pad_knn_queries_to_bucket(points, q_bm, minimum_bucket)
+    out = retrieve_knn(bw, jnp.asarray(pts), jnp.asarray(bms), k)
+    per_query = ("ids", "dist2", "nodes_checked", "verified", "leaves_verified", "pruned")
+    return {key: (v[:m] if key in per_query else v) for key, v in out.items()}
 
 
 def wisk_serve_step(q_rects, q_bm, leaf_mbrs, leaf_bm, obj_x, obj_y, obj_bm, obj_valid,

@@ -1,7 +1,7 @@
 """Serving engine: WISK retrieval front-end + batched LM decode.
 
 The WISK half is the TPU-execution path of the paper (DESIGN.md §3). Two
-traversal modes share the leaf verification stage:
+range-query traversal modes share the leaf verification stage:
 
 * ``mode="frontier"`` (default) -- sparse frontier descent: each query
   carries a padded int32 frontier of candidate node ids; per level the
@@ -15,8 +15,26 @@ traversal modes share the leaf verification stage:
   child matrices; per-level work is O(M * n_level) regardless of
   selectivity.
 
-Both modes return exact SKR results (validated against core.query in
-tests/test_query_parity.py) plus Eq.1-style cost counters:
+Frontier expansion widths come from a per-``BatchedWisk`` monotone width
+cache: the descent runs at cached per-level widths and fetches every
+level's actual child-count maximum in ONE batched device->host sync at the
+end; if any level overflowed its cached width the (rare, at most
+log2(level width) times ever) lossless retry re-descends with exact
+per-level syncs and grows the cache. Steady state therefore has no
+per-level blocking syncs (DESIGN.md §3.2).
+
+``retrieve_knn`` is the third execution path (DESIGN.md §6): Boolean kNN as
+a distance-bounded frontier descent. Each query carries a padded on-device
+top-k buffer of (dist^2, object id) pairs; a beam-1 probe descent seeds the
+buffer, the bounded sweep prunes frontier nodes whose squared MBR
+min-distance (Pallas ``knn_filter`` kernel) exceeds the current k-th best
+before expansion, and surviving leaves are verified in ascending
+min-distance chunks inside one ``lax.scan``, re-tightening the bound after
+every chunk until the remaining leaves are bounded out.
+
+All modes return exact results (validated against core.query in
+tests/test_query_parity.py and tests/test_knn_parity.py) plus Eq.1-style
+cost counters:
 
 * ``nodes_checked`` -- nodes whose MBR/bitmap were examined for the query
   (frontier-resident nodes only; matches ``execute_serial``'s
@@ -25,7 +43,7 @@ tests/test_query_parity.py) plus Eq.1-style cost counters:
   widths, or full level widths in dense mode) -- the honest device-work
   measure the benchmark compares,
 * ``verified``/``overflow`` -- Eq.1 verification cost and ``max_leaves``
-  spill accounting.
+  spill accounting (kNN: ``verified``/``leaves_verified``/``pruned``).
 
 The LM half is a simple batched greedy decoder over any arch bundle.
 """
@@ -64,6 +82,10 @@ class BatchedWisk:
     leaf_obj_bm: jnp.ndarray  # (K, OBJ, W)
     leaf_obj_id: jnp.ndarray  # (K, OBJ) int32, -1 pad
     obj_per_leaf: int
+    # monotone per-(path, level) frontier expansion widths: grown from
+    # observed batch maxima, so steady-state descents need no per-level
+    # host syncs (see _descend_frontier / DESIGN.md §3.2)
+    width_cache: Dict[Tuple[str, int], int] = dataclasses.field(default_factory=dict)
 
     @property
     def n_levels(self) -> int:
@@ -191,30 +213,98 @@ def _verify_leaves(bw: BatchedWisk, q_rects, q_bm, top_leaf, leaf_ok):
     return ids, counts, kw_scanned
 
 
-def _retrieve_frontier(
-    bw: BatchedWisk, q_rects: jnp.ndarray, q_bm: jnp.ndarray, max_leaves: int
-) -> Dict[str, np.ndarray]:
-    M = q_rects.shape[0]
+# ------------------------------------------- frontier width-cache discipline
+def _root_frontier(bw: BatchedWisk, M: int) -> jnp.ndarray:
     n_root = int(bw.level_mbrs[0].shape[0])
-    width = round_up_bucket(n_root)
-    root = np.full((width,), -1, np.int32)
+    root = np.full((round_up_bucket(n_root),), -1, np.int32)
     root[:n_root] = np.arange(n_root, dtype=np.int32)
-    frontier = jnp.tile(jnp.asarray(root)[None, :], (M, 1))
+    return jnp.tile(jnp.asarray(root)[None, :], (M, 1))
 
+
+def _cached_widths(bw: BatchedWisk, tag: str, n_links: int) -> Optional[List[int]]:
+    """The cached per-level expansion widths for a descent path, or None if
+    any level is still unlearned (first descent: exact per-level sync)."""
+    ws = [bw.width_cache.get((tag, li)) for li in range(n_links)]
+    return None if any(w is None for w in ws) else ws  # type: ignore[return-value]
+
+
+def _grow_width_cache(bw: BatchedWisk, tag: str, maxima) -> None:
+    """Monotone growth keeps the compiled shape family log-bounded: each
+    (path, level) slot can only double, at most log2(level width) times."""
+    for li, mx in enumerate(maxima):
+        w = round_up_bucket(int(mx))
+        if w > bw.width_cache.get((tag, li), 0):
+            bw.width_cache[(tag, li)] = w
+
+
+def _check_and_retry(bw, tag, widths, needs, descend):
+    """The single batched sync of a cached-width descent: fetch all levels'
+    observed child-count maxima at once; on overflow (a cached width was too
+    narrow -- children were dropped) re-descend in exact per-level-sync mode
+    so the result stays lossless, and grow the cache either way."""
+    if widths is None:
+        _grow_width_cache(bw, tag, needs)  # exact descent: needs are host ints
+        return None
+    if needs:
+        maxima = np.asarray(jax.device_get(jnp.stack(needs)))
+        if np.any(maxima > np.asarray(widths)):
+            _grow_width_cache(bw, tag, maxima)
+            out = descend(None)
+            _grow_width_cache(bw, tag, out[-1])
+            return out
+    return None
+
+
+def _pick_width(need, widths: Optional[List[int]], li: int, needs: List) -> int:
+    """Per-level expansion width under the shared sync discipline: exact
+    mode (widths=None) blocks on the batch max and buckets it; cached mode
+    records the max as a device scalar for the caller's single batched
+    overflow check and uses the cached width."""
+    if widths is None:
+        mx = int(jnp.max(need))
+        needs.append(mx)
+        return round_up_bucket(mx)
+    needs.append(jnp.max(need))
+    return widths[li]
+
+
+def _descend_frontier(bw: BatchedWisk, q_rects, q_bm, widths: Optional[List[int]]):
+    """Shared range-query frontier descent.
+
+    ``widths=None``: exact mode -- bucket each next frontier on the batch's
+    actual occupancy, one blocking host sync per level (first descent and
+    overflow retries). ``widths=[...]``: cached mode -- no per-level syncs;
+    per-level child-count maxima are returned as device scalars for the
+    caller's single batched overflow check.
+    """
+    M = q_rects.shape[0]
+    frontier = _root_frontier(bw, M)
     nodes_checked = jnp.zeros((M,), jnp.int32)
-    widths: List[int] = []
+    used: List[int] = []
+    needs: List = []
     surv = None
     for li in range(bw.n_levels):
-        widths.append(int(frontier.shape[1]))
+        used.append(int(frontier.shape[1]))
         surv, n_valid = _filter_frontier_level(
             bw.level_mbrs[li], bw.level_bms[li], q_rects, q_bm, frontier
         )
         nodes_checked = nodes_checked + n_valid
         if li < bw.n_levels - 1:
-            # bucket the next frontier width on the batch's actual occupancy
             need = _frontier_child_counts(bw.child_counts[li], frontier, surv)
-            f_next = round_up_bucket(int(jnp.max(need)))
+            f_next = _pick_width(need, widths, li, needs)
             frontier = _expand_frontier(bw.child_table[li], frontier, surv, f_next)
+    return frontier, surv, nodes_checked, used, needs
+
+
+def _retrieve_frontier(
+    bw: BatchedWisk, q_rects: jnp.ndarray, q_bm: jnp.ndarray, max_leaves: int
+) -> Dict[str, np.ndarray]:
+    M = q_rects.shape[0]
+    widths = _cached_widths(bw, "skr", bw.n_levels - 1)
+    descend = lambda w: _descend_frontier(bw, q_rects, q_bm, w)
+    out = descend(widths)
+    retried = _check_and_retry(bw, "skr", widths, out[-1], descend)
+    frontier, surv, nodes_checked, used, _ = retried or out
 
     n_leaf = bw.n_leaves
     take = min(max_leaves, n_leaf, int(frontier.shape[1]))
@@ -224,10 +314,224 @@ def _retrieve_frontier(
         ids=np.asarray(ids),
         counts=np.asarray(counts),
         nodes_checked=np.asarray(nodes_checked, np.int64),
-        nodes_scanned=np.full((M,), sum(widths), np.int64),
+        nodes_scanned=np.full((M,), sum(used), np.int64),
         verified=np.asarray(kw_scanned),
         overflow=np.asarray(overflow),
-        frontier_widths=np.asarray(widths, np.int32),
+        frontier_widths=np.asarray(used, np.int32),
+    )
+
+
+# ------------------------------------------------------- kNN (Boolean, §6)
+_ID_SENTINEL = np.int32(np.iinfo(np.int32).max)
+
+
+def _merge_topk(top_d, top_id, cand_d, cand_id, kb: int):
+    """Merge candidates into the padded top-k buffer: lexicographic sort on
+    (dist^2, object id) keeps equal-distance ties smallest-id-first -- the
+    convention shared with the host paths (core.query)."""
+    d_all = jnp.concatenate([top_d, cand_d], axis=1)
+    id_all = jnp.concatenate([top_id, cand_id], axis=1)
+    d_s, id_s = jax.lax.sort((d_all, id_all), dimension=1, num_keys=2)
+    return d_s[:, :kb], id_s[:, :kb]
+
+
+@jax.jit
+def _knn_dist_level(mbrs, bms, points, q_bm, frontier):
+    """Gather frontier node tiles and run the Pallas kNN distance kernel."""
+    valid = frontier >= 0
+    safe = jnp.clip(frontier, 0, mbrs.shape[0] - 1)
+    d = ops.knn_frontier_dist(points, q_bm, mbrs[safe], bms[safe], valid.astype(jnp.int8))
+    return d, jnp.sum(valid, axis=1).astype(jnp.int32)
+
+
+@jax.jit
+def _probe_children(child_table, cur):
+    safe = jnp.clip(cur, 0, child_table.shape[0] - 1)
+    return jnp.where(cur[:, None] >= 0, child_table[safe], -1)
+
+
+@jax.jit
+def _probe_select(d, cand):
+    best = jnp.argmin(d, axis=1)  # ties: lowest slot == smallest node id
+    bd = jnp.take_along_axis(d, best[:, None], axis=1)[:, 0]
+    nxt = jnp.take_along_axis(cand, best[:, None], axis=1)[:, 0]
+    return jnp.where(jnp.isfinite(bd), nxt, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("kb",))
+def _knn_probe_verify(points, q_bm, obj_x, obj_y, obj_bm, obj_id, leaf, top_d, top_id, kb: int):
+    """Verify the probe leaf's object block and seed the top-k buffer."""
+    safe = jnp.clip(leaf, 0, obj_x.shape[0] - 1)
+    ox, oy = obj_x[safe], obj_y[safe]  # (M, OBJ)
+    obm, oid = obj_bm[safe], obj_id[safe]
+    dx = ox - points[:, 0:1]
+    dy = oy - points[:, 1:2]
+    od2 = dx * dx + dy * dy
+    kw = jnp.any((obm & q_bm[:, None, :]) != 0, axis=-1)
+    valid = (oid >= 0) & kw & (leaf >= 0)[:, None]
+    cd = jnp.where(valid, od2, jnp.inf)
+    cid = jnp.where(valid, oid, _ID_SENTINEL)
+    top_d, top_id = _merge_topk(top_d, top_id, cd, cid, kb)
+    return top_d, top_id, jnp.sum(valid, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _bound_prune(d, top_d, k: int):
+    """Frontier slots that survive the current k-th-best bound. ``<=`` keeps
+    nodes at exactly the bound: they may hold an equal-distance object with
+    a smaller id (the tie-break can still swap it in)."""
+    bound = top_d[:, k - 1]
+    alive = jnp.isfinite(d) & (d <= bound[:, None])
+    pruned = jnp.sum(jnp.isfinite(d) & ~alive, axis=1).astype(jnp.int32)
+    return alive.astype(jnp.int8), pruned
+
+
+@functools.partial(jax.jit, static_argnames=("k", "kb", "ch"))
+def _knn_leaf_phase(
+    points, q_bm, leaf_d, frontier, probe_leaf,
+    obj_x, obj_y, obj_bm, obj_id, top_d, top_id, k: int, kb: int, ch: int,
+):
+    """Distance-ordered chunked leaf verification in one lax.scan.
+
+    Leaves are sorted ascending by (min-dist, leaf id); each chunk of ``ch``
+    leaves is re-checked against the bound as tightened by every previous
+    chunk, so later (farther) chunks are usually bounded out entirely. The
+    probe leaf is masked to +inf -- its objects are already in the buffer.
+    """
+    M, F = leaf_d.shape
+    d = jnp.where(frontier == probe_leaf[:, None], jnp.inf, leaf_d)
+    d_s, leaf_s = jax.lax.sort((d, frontier), dimension=1, num_keys=2)
+    nch = F // ch  # callers pick ch dividing F (power-of-two bucket widths)
+    d_ch = jnp.moveaxis(d_s.reshape(M, nch, ch), 1, 0)
+    l_ch = jnp.moveaxis(leaf_s.reshape(M, nch, ch), 1, 0)
+
+    def step(carry, inp):
+        top_d, top_id, lv, ver, pr = carry
+        dc, lc = inp  # (M, ch)
+        bound = top_d[:, k - 1]
+        active = jnp.isfinite(dc) & (dc <= bound[:, None])
+        safe = jnp.clip(lc, 0, obj_x.shape[0] - 1)
+        ox, oy = obj_x[safe], obj_y[safe]  # (M, ch, OBJ)
+        obm, oid = obj_bm[safe], obj_id[safe]
+        dx = ox - points[:, 0][:, None, None]
+        dy = oy - points[:, 1][:, None, None]
+        od2 = dx * dx + dy * dy
+        kw = jnp.any((obm & q_bm[:, None, None, :]) != 0, axis=-1)
+        valid = (oid >= 0) & kw & active[:, :, None]
+        cd = jnp.where(valid, od2, jnp.inf).reshape(M, -1)
+        cid = jnp.where(valid, oid, _ID_SENTINEL).reshape(M, -1)
+        top_d2, top_id2 = _merge_topk(top_d, top_id, cd, cid, kb)
+        lv = lv + jnp.sum(active, axis=1).astype(jnp.int32)
+        ver = ver + jnp.sum(valid, axis=(1, 2)).astype(jnp.int32)
+        pr = pr + jnp.sum(jnp.isfinite(dc) & ~active, axis=1).astype(jnp.int32)
+        return (top_d2, top_id2, lv, ver, pr), None
+
+    z = jnp.zeros((M,), jnp.int32)
+    (top_d, top_id, lv, ver, pr), _ = jax.lax.scan(step, (top_d, top_id, z, z, z), (d_ch, l_ch))
+    return top_d, top_id, lv, ver, pr
+
+
+def _descend_knn(bw: BatchedWisk, points, q_bm, k: int, kb: int, widths: Optional[List[int]]):
+    """Distance-bounded kNN descent (probe -> bounded sweep -> leaf chunks).
+
+    Width discipline is identical to ``_descend_frontier``: ``widths=None``
+    syncs per level (exact mode), a width list runs sync-free and returns
+    device maxima for the caller's batched overflow check.
+    """
+    M = int(points.shape[0])
+    L = bw.n_levels
+    top_d = jnp.full((M, kb), jnp.inf, jnp.float32)
+    top_id = jnp.full((M, kb), _ID_SENTINEL, jnp.int32)
+    nodes_checked = jnp.zeros((M,), jnp.int32)
+    pruned = jnp.zeros((M,), jnp.int32)
+
+    # probe: beam-1 greedy descent to a leaf seeds the buffer, so the sweep
+    # below starts with a finite bound and can prune before expansion
+    cand = _root_frontier(bw, M)
+    cur = None
+    for li in range(L):
+        if li > 0:
+            cand = _probe_children(bw.child_table[li - 1], cur)
+        d, nv = _knn_dist_level(bw.level_mbrs[li], bw.level_bms[li], points, q_bm, cand)
+        nodes_checked = nodes_checked + nv
+        cur = _probe_select(d, cand)
+    probe_leaf = cur
+    top_d, top_id, ver0 = _knn_probe_verify(
+        points, q_bm, bw.leaf_obj_x, bw.leaf_obj_y, bw.leaf_obj_bm, bw.leaf_obj_id,
+        probe_leaf, top_d, top_id, kb,
+    )
+    verified = ver0
+    leaves_verified = (probe_leaf >= 0).astype(jnp.int32)
+
+    # bounded sweep: full frontier descent, pruning against the k-th best
+    frontier = _root_frontier(bw, M)
+    used: List[int] = []
+    needs: List = []
+    leaf_d = None
+    for li in range(L):
+        used.append(int(frontier.shape[1]))
+        d, nv = _knn_dist_level(bw.level_mbrs[li], bw.level_bms[li], points, q_bm, frontier)
+        nodes_checked = nodes_checked + nv
+        if li < L - 1:
+            alive, pr = _bound_prune(d, top_d, k)
+            pruned = pruned + pr
+            need = _frontier_child_counts(bw.child_counts[li], frontier, alive)
+            f_next = _pick_width(need, widths, li, needs)
+            frontier = _expand_frontier(bw.child_table[li], frontier, alive, f_next)
+        else:
+            leaf_d = d
+
+    F = int(frontier.shape[1])
+    ch = 4 if F % 4 == 0 else 1
+    top_d, top_id, lv, ver, pr = _knn_leaf_phase(
+        points, q_bm, leaf_d, frontier, probe_leaf,
+        bw.leaf_obj_x, bw.leaf_obj_y, bw.leaf_obj_bm, bw.leaf_obj_id,
+        top_d, top_id, k, kb, ch,
+    )
+    result = (
+        top_d, top_id, nodes_checked, verified + ver,
+        leaves_verified + lv, pruned + pr, used,
+    )
+    return result, needs
+
+
+def retrieve_knn(
+    bw: BatchedWisk, points, q_bm, k: int, min_topk_bucket: int = 8
+) -> Dict[str, np.ndarray]:
+    """Batched Boolean kNN over the device-resident index (DESIGN.md §6).
+
+    Returns per-query ``ids``/``dist2`` of the exact k nearest keyword-
+    matching objects (ascending (dist^2, id); ``-1``-padded when fewer than
+    k objects match) plus cost counters: ``nodes_checked``, ``verified``
+    (kw-matching objects scored), ``leaves_verified`` (leaf blocks
+    verified), and ``pruned`` (kw-matching frontier slots bounded out).
+    """
+    points = jnp.asarray(points, jnp.float32)
+    q_bm = jnp.asarray(q_bm, jnp.uint32)
+    M = int(points.shape[0])
+    if k <= 0:
+        z = np.zeros(M, np.int64)
+        return dict(
+            ids=np.zeros((M, 0), np.int32), dist2=np.zeros((M, 0), np.float32),
+            nodes_checked=z, verified=z.copy(), leaves_verified=z.copy(),
+            pruned=z.copy(), frontier_widths=np.zeros(0, np.int32),
+        )
+    kb = round_up_bucket(k, min_topk_bucket)
+    widths = _cached_widths(bw, "knn", bw.n_levels - 1)
+    descend = lambda w: _descend_knn(bw, points, q_bm, k, kb, w)
+    out = descend(widths)
+    retried = _check_and_retry(bw, "knn", widths, out[-1], descend)
+    top_d, top_id, nodes_checked, verified, leaves_verified, pruned, used = (retried or out)[0]
+    fin = jnp.isfinite(top_d[:, :k])
+    ids = jnp.where(fin, top_id[:, :k], -1)
+    return dict(
+        ids=np.asarray(ids),
+        dist2=np.asarray(top_d[:, :k]),
+        nodes_checked=np.asarray(nodes_checked, np.int64),
+        verified=np.asarray(verified, np.int64),
+        leaves_verified=np.asarray(leaves_verified, np.int64),
+        pruned=np.asarray(pruned, np.int64),
+        frontier_widths=np.asarray(used, np.int32),
     )
 
 

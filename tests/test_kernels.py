@@ -83,6 +83,50 @@ def test_frontier_filter_sweep(m, f, w):
     np.testing.assert_array_equal(out, exp)
 
 
+@pytest.mark.parametrize(
+    "m,f,w",
+    [
+        (1, 1, 1),  # degenerate single-slot frontier
+        (5, 37, 3),  # nothing a multiple of the 128-lane tile
+        (9, 130, 4),  # frontier just past one lane tile
+        (33, 257, 8),  # queries and frontier both off-tile
+        (8, 128, 16),  # exact tile for contrast
+    ],
+)
+def test_knn_filter_sweep(m, f, w):
+    """Pallas kNN distance kernel (interpret) vs jnp oracle, incl. the +inf
+    sentinel at invalid / keyword-miss slots and points inside MBRs (d=0)."""
+    rng = np.random.default_rng(m * 613 + f * 17 + w)
+    qp = rng.uniform(0, 1, (m, 2)).astype(np.float32)
+    qb = (rng.integers(0, 2 ** 32, (m, w), dtype=np.uint32)
+          * rng.integers(0, 2, (m, w), dtype=np.uint32))
+    fm = _rand_rects(rng, m * f).reshape(m, f, 4).astype(np.float32)
+    fb = (rng.integers(0, 2 ** 32, (m, f, w), dtype=np.uint32)
+          * rng.integers(0, 2, (m, f, w), dtype=np.uint32))
+    fv = rng.integers(0, 2, (m, f)).astype(np.int8)
+    out = np.asarray(ops.knn_frontier_dist(qp, qb, fm, fb, fv))
+    exp = np.asarray(ref.knn_filter_ref(*map(jnp.asarray, (qp, qb, fm, fb, fv))))
+    # float kernel: +inf sentinel pattern must match exactly, finite
+    # distances to float tolerance (FMA fusion may differ by 1 ULP)
+    np.testing.assert_array_equal(np.isinf(out), np.isinf(exp))
+    np.testing.assert_allclose(out[np.isfinite(out)], exp[np.isfinite(exp)], rtol=1e-6)
+    assert np.isinf(out[(fv == 0)]).all()
+
+
+def test_knn_filter_block_size_invariance():
+    rng = np.random.default_rng(3)
+    m, f, w = 21, 70, 5
+    qp = rng.uniform(0, 1, (m, 2)).astype(np.float32)
+    qb = rng.integers(0, 2 ** 32, (m, w), dtype=np.uint32)
+    fm = _rand_rects(rng, m * f).reshape(m, f, 4).astype(np.float32)
+    fb = rng.integers(0, 2 ** 32, (m, f, w), dtype=np.uint32)
+    fv = rng.integers(0, 2, (m, f)).astype(np.int8)
+    a = np.asarray(ops.knn_frontier_dist(qp, qb, fm, fb, fv, bm=4, bf=16))
+    b = np.asarray(ops.knn_frontier_dist(qp, qb, fm, fb, fv, bm=8, bf=128))
+    np.testing.assert_array_equal(np.isinf(a), np.isinf(b))
+    np.testing.assert_allclose(a[np.isfinite(a)], b[np.isfinite(b)], rtol=1e-6)
+
+
 def test_frontier_filter_block_size_invariance():
     rng = np.random.default_rng(1)
     m, f, w = 21, 70, 5

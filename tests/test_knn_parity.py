@@ -1,0 +1,159 @@
+"""Cross-path Boolean kNN parity: serial best-first / level-sync / device.
+
+The kNN serving path (DESIGN.md §6) is the third execution path pinned by
+the cross-path parity contract: on seeded randomized datasets and indexes,
+``knn_query`` (serial best-first), ``knn_level_sync`` (vectorized numpy
+distance-bounded sweep) and ``serve.engine.retrieve_knn`` (device
+distance-bounded frontier descent) must return *identical* id sequences --
+not just sets -- because all three share the (dist^2, object id)
+lexicographic tie-break. Brute force over the whole dataset is the external
+ground truth. Also covered: distance ties, k larger than the number of
+matching objects, empty-keyword queries, padded batches, and the pruning
+gate (the bounded descent verifies fewer leaf blocks than an exhaustive
+leaf scan).
+"""
+import numpy as np
+import pytest
+
+from repro.core.query import knn_level_sync, knn_query
+from repro.core.types import GeoTextDataset
+from repro.data.synth import make_dataset
+from repro.data.workloads import make_workload
+from repro.launch.wisk_serve import pad_knn_queries_to_bucket, serve_knn_batch
+from repro.serve.engine import BatchedWisk, retrieve_knn
+
+from test_query_parity import _build_index, _grid_clusters, flat_index
+
+
+def _points_from(wl) -> np.ndarray:
+    return np.stack(
+        [(wl.rects[:, 0] + wl.rects[:, 2]) / 2, (wl.rects[:, 1] + wl.rects[:, 3]) / 2], 1
+    ).astype(np.float32)
+
+
+def _brute_knn(ds, point, kw_bm, k):
+    match = np.any(ds.kw_bitmap & kw_bm[None, :], axis=1)
+    dx = ds.locs[:, 0] - np.float32(point[0])
+    dy = ds.locs[:, 1] - np.float32(point[1])
+    d2 = (dx * dx + dy * dy).astype(np.float32)
+    d2[~match] = np.inf
+    order = np.lexsort((np.arange(ds.n), d2))[:k]
+    return order[np.isfinite(d2[order])].astype(np.int32)
+
+
+def _trim(row):
+    return row[row >= 0]
+
+
+@pytest.mark.parametrize("seed,levels,k", [(0, 2, 1), (1, 3, 10), (2, 2, 33), (3, 1, 5)])
+def test_knn_all_paths_identical(seed, levels, k):
+    ds = make_dataset("fs", n=1500, seed=seed)
+    if levels == 1:
+        index = flat_index(ds, _grid_clusters(ds, 5))
+    else:
+        index, _ = _build_index(ds, g=6, levels=levels)
+    wl = make_workload(ds, m=16, dist="MIX", seed=seed + 20)
+    points = _points_from(wl)
+    bw = BatchedWisk.build(index, ds)
+    sync = knn_level_sync(index, ds, points, wl.kw_bitmap, k)
+    dev = retrieve_knn(bw, points, wl.kw_bitmap, k)
+    for qi in range(wl.m):
+        serial = knn_query(index, ds, points[qi], wl.kw_bitmap[qi], k)
+        want = _brute_knn(ds, points[qi], wl.kw_bitmap[qi], k)
+        np.testing.assert_array_equal(serial.ids, want)
+        np.testing.assert_array_equal(_trim(sync["ids"][qi]), want)
+        np.testing.assert_array_equal(_trim(dev["ids"][qi]), want)
+        # distances ride along sorted ascending on every path (XLA may fuse
+        # dx*dx+dy*dy into an FMA, so allow 1-ULP drift vs the numpy host)
+        assert np.all(np.diff(serial.dist2) >= 0)
+        np.testing.assert_allclose(dev["dist2"][qi][: want.size], serial.dist2, rtol=1e-6)
+
+
+def test_knn_distance_ties_break_by_smallest_id():
+    """Clusters of objects at *identical* coordinates straddling the k
+    boundary: every path must keep the smallest object ids."""
+    ds0 = make_dataset("fs", n=1200, seed=7)
+    locs = ds0.locs.copy()
+    locs[100:140] = locs[100]  # 40 objects, one exact location
+    locs[300:310] = locs[300]
+    ds = GeoTextDataset.from_ids(locs, ds0.kw_ids, ds0.vocab_size)
+    index, _ = _build_index(ds, g=6, levels=2)
+    bw = BatchedWisk.build(index, ds)
+    point = locs[100].astype(np.float32)
+    kw_bm = np.bitwise_or.reduce(ds.kw_bitmap[100:140], axis=0)[None, :]
+    pts = np.tile(point, (1, 1))
+    for k in (3, 10, 39):
+        serial = knn_query(index, ds, point, kw_bm[0], k)
+        sync = knn_level_sync(index, ds, pts, kw_bm, k)
+        dev = retrieve_knn(bw, pts, kw_bm, k)
+        want = _brute_knn(ds, point, kw_bm[0], k)
+        np.testing.assert_array_equal(serial.ids, want)
+        np.testing.assert_array_equal(_trim(sync["ids"][0]), want)
+        np.testing.assert_array_equal(_trim(dev["ids"][0]), want)
+        # the tied block forces smallest-id selection at the boundary
+        assert np.array_equal(np.sort(want), want)
+
+
+def test_knn_k_exceeds_matches_and_edge_ks():
+    ds = make_dataset("fs", n=900, seed=9)
+    index, _ = _build_index(ds, g=5, levels=2)
+    bw = BatchedWisk.build(index, ds)
+    wl = make_workload(ds, m=6, dist="UNI", n_keywords=2, seed=11)
+    points = _points_from(wl)
+    k = ds.n + 50  # more than any query can match
+    dev = retrieve_knn(bw, points, wl.kw_bitmap, k)
+    sync = knn_level_sync(index, ds, points, wl.kw_bitmap, k)
+    for qi in range(wl.m):
+        serial = knn_query(index, ds, points[qi], wl.kw_bitmap[qi], k)
+        want = _brute_knn(ds, points[qi], wl.kw_bitmap[qi], k)
+        assert want.size < k  # genuinely short results
+        np.testing.assert_array_equal(serial.ids, want)
+        np.testing.assert_array_equal(_trim(sync["ids"][qi]), want)
+        np.testing.assert_array_equal(_trim(dev["ids"][qi]), want)
+    # k <= 0 returns empty everywhere, no errors
+    assert knn_query(index, ds, points[0], wl.kw_bitmap[0], 0).ids.size == 0
+    assert retrieve_knn(bw, points, wl.kw_bitmap, 0)["ids"].shape == (wl.m, 0)
+    assert knn_level_sync(index, ds, points, wl.kw_bitmap, -1)["ids"].shape == (wl.m, 0)
+
+
+def test_knn_empty_keyword_queries_and_padded_batch():
+    """serve_knn_batch pads the batch to its power-of-two bucket; pad queries
+    and empty-keyword queries must verify nothing and return all -1."""
+    ds = make_dataset("fs", n=1100, seed=13)
+    index, _ = _build_index(ds, g=5, levels=2)
+    bw = BatchedWisk.build(index, ds)
+    wl = make_workload(ds, m=13, dist="MIX", seed=14)  # not a power of two
+    points = _points_from(wl)
+    bms = wl.kw_bitmap.copy()
+    bms[4] = 0  # empty-keyword query inside the batch
+    pts, pbms, m = pad_knn_queries_to_bucket(points, bms)
+    assert m == 13 and pts.shape[0] == 16
+    out = serve_knn_batch(bw, points, bms, k=7)
+    assert out["ids"].shape == (13, 7)
+    direct = retrieve_knn(bw, points, bms, 7)
+    np.testing.assert_array_equal(out["ids"], direct["ids"][:13])
+    np.testing.assert_array_equal(out["nodes_checked"], direct["nodes_checked"][:13])
+    assert (out["ids"][4] == -1).all()
+    assert out["verified"][4] == 0 and out["leaves_verified"][4] == 0
+    for qi in range(13):
+        serial = knn_query(index, ds, points[qi], bms[qi], 7)
+        np.testing.assert_array_equal(_trim(out["ids"][qi]), serial.ids)
+
+
+def test_knn_bounded_descent_prunes_leaves():
+    """The acceptance gate of the kNN rewrite: the distance-bounded descent
+    verifies strictly fewer leaf blocks than an exhaustive leaf scan, and the
+    pruned counter shows the bound firing."""
+    ds = make_dataset("fs", n=2500, seed=5)
+    index, _ = _build_index(ds, g=8, levels=3)
+    bw = BatchedWisk.build(index, ds)
+    wl = make_workload(ds, m=24, dist="MIX", seed=6)
+    points = _points_from(wl)
+    out = retrieve_knn(bw, points, wl.kw_bitmap, 10)
+    n_leaf = index.levels[-1].n
+    assert out["leaves_verified"].sum() < wl.m * n_leaf / 2  # pruning ratio > 2
+    assert out["pruned"].sum() > 0
+    # and the counters stay consistent with the host mirror's verify set
+    sync = knn_level_sync(index, ds, points, wl.kw_bitmap, 10)
+    for a, b in zip(out["ids"], sync["ids"]):
+        np.testing.assert_array_equal(_trim(a), _trim(b))

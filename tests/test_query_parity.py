@@ -164,6 +164,36 @@ def test_csr_propagation_matches_dense_matmul():
         np.testing.assert_array_equal(got, (hit @ adj) > 0)
 
 
+def test_frontier_width_cache_stays_lossless():
+    """The batched-sync width discipline (DESIGN.md §3.2): the first descent
+    learns per-level widths with exact syncs; cached descents run sync-free;
+    a deliberately-poisoned (too narrow) cache must trigger the lossless
+    overflow retry and still return exact results and counters."""
+    ds = make_dataset("fs", n=2500, seed=5)
+    index, clusters = _build_index(ds, g=8, levels=3)
+    wl = make_workload(ds, m=16, dist="UNI", region_frac=0.2, n_keywords=4, seed=9)
+    st = execute_serial(index, ds, wl)
+    bw = BatchedWisk.build(index, ds)
+    first = retrieve_workload(bw, wl, max_leaves=clusters.k, mode="frontier")
+    learned = dict(bw.width_cache)
+    assert learned  # exact first descent populated the cache
+    # cached descent: identical results, widths from the cache
+    cached = retrieve_workload(bw, wl, max_leaves=clusters.k, mode="frontier")
+    for a, b in zip(_result_sets(first), _result_sets(cached)):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(cached["nodes_checked"], st.nodes_accessed)
+    # poison every width to the minimum bucket: children would be dropped,
+    # so the batched overflow check must fire and re-descend exactly
+    for key in list(bw.width_cache):
+        bw.width_cache[key] = 8
+    retried = retrieve_workload(bw, wl, max_leaves=clusters.k, mode="frontier")
+    for got, want in zip(_result_sets(retried), st.results):
+        np.testing.assert_array_equal(got, np.sort(want))
+    np.testing.assert_array_equal(retried["nodes_checked"], st.nodes_accessed)
+    np.testing.assert_array_equal(retried["verified"], st.verified)
+    assert dict(bw.width_cache) == learned  # retry re-learned the real widths
+
+
 def test_bucketing_pads_are_inert():
     """serve_batch pads the batch to its power-of-two bucket; pad queries
     must not change real queries' results or counters."""

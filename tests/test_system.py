@@ -113,9 +113,10 @@ def test_knn_matches_bruteforce(built):
         point = rng.uniform(0.2, 0.8, 2).astype(np.float32)
         kw_bm = test_wl.kw_bitmap[qi]
         k = 10
-        got = knn_query(art.index, ds, point, kw_bm, k)
+        res = knn_query(art.index, ds, point, kw_bm, k)
         match = np.any(ds.kw_bitmap & kw_bm[None, :], axis=1)
         d2 = ((ds.locs - point) ** 2).sum(1)
         d2[~match] = np.inf
         want = np.argsort(d2)[:k]
-        np.testing.assert_allclose(np.sort(d2[got]), np.sort(d2[want]), rtol=1e-6)
+        np.testing.assert_allclose(np.sort(d2[res.ids]), np.sort(d2[want]), rtol=1e-6)
+        assert res.nodes_accessed > 0 and res.verified >= res.ids.size
