@@ -20,7 +20,7 @@ from repro.core.packing import HierarchyResult
 from repro.core.query import knn_level_sync, knn_query
 from repro.core.types import ClusterSet
 from repro.launch.wisk_serve import serve_knn_batch
-from repro.serve.engine import BatchedWisk
+from repro.serve.engine import IndexSnapshot
 
 QUICK_N = 600
 QUICK_M = 8
@@ -72,7 +72,7 @@ def run(quick: bool = False):
         test = C.workload("fs", C.DEFAULT_N, 32, "MIX", 0.0005, 5, 23)
         ks = (1, 10, 100)
     points = _query_points(test)
-    bw = BatchedWisk.build(index, ds)
+    bw = IndexSnapshot.build(index, ds)
     m = test.m
     n_leaf = index.levels[-1].n
     tag = "fig23q" if quick else "fig23"

@@ -11,7 +11,8 @@ from repro.core.build import BuildConfig, build_wisk
 from repro.core.partition import PartitionConfig
 from repro.data.synth import make_dataset
 from repro.data.workloads import make_workload
-from repro.serve.engine import BatchedWisk, greedy_generate, retrieve_workload
+from repro.serve.engine import IndexSnapshot, retrieve_workload
+from repro.train.decode import greedy_generate
 from repro.train.step import build_steps
 
 
@@ -20,7 +21,7 @@ def main():
     ds = make_dataset("fs", n=3000, seed=0)
     train = make_workload(ds, m=48, dist="MIX", seed=1)
     art = build_wisk(ds, train, BuildConfig(partition=PartitionConfig(max_clusters=24, n_steps=40)))
-    bw = BatchedWisk.build(art.index, ds)
+    bw = IndexSnapshot.build(art.index, ds)
     queries = make_workload(ds, m=4, dist="MIX", seed=9)
     hits = retrieve_workload(bw, queries, max_leaves=art.partition.clusters.k)
     print("retrieved per query:", hits["counts"].tolist())

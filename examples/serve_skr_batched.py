@@ -13,14 +13,14 @@ from repro.core.partition import PartitionConfig
 from repro.core.query import execute_serial
 from repro.data.synth import make_dataset
 from repro.data.workloads import make_workload
-from repro.serve.engine import BatchedWisk, retrieve_workload
+from repro.serve.engine import IndexSnapshot, retrieve_workload
 
 
 def main():
     ds = make_dataset("fs", n=4000, seed=0)
     train = make_workload(ds, m=64, dist="MIX", seed=1)
     art = build_wisk(ds, train, BuildConfig(partition=PartitionConfig(max_clusters=32, n_steps=50)))
-    bw = BatchedWisk.build(art.index, ds)
+    bw = IndexSnapshot.build(art.index, ds)
 
     test = make_workload(ds, m=64, dist="MIX", seed=3)
     out = retrieve_workload(bw, test, max_leaves=art.partition.clusters.k)

@@ -66,6 +66,17 @@ def round_up_bucket(n: int, minimum: int = 8) -> int:
     return b
 
 
+def sharded_bucket(m: int, shards: int, minimum: int = 8) -> int:
+    """Padded batch size for ``m`` queries split evenly over ``shards``
+    devices: each per-device shard is a power-of-two bucket, so the data-
+    parallel serving path (launch.wisk_serve.serve_sharded) retraces with the
+    same log-bounded shape discipline as the single-device engine. With
+    ``shards=1`` this degenerates to ``round_up_bucket``."""
+    shards = max(int(shards), 1)
+    per_shard = -(-max(int(m), 1) // shards)
+    return shards * round_up_bucket(per_shard, minimum)
+
+
 def padded_child_table(level) -> np.ndarray:
     """(n, max_fanout) int32 child table from a level's CSR, padded with -1.
 

@@ -27,7 +27,7 @@ def _on_cpu() -> bool:
 
 
 # sentinel rectangle that intersects nothing under the closed-rect predicate
-# (xlo > xhi): used for node/query padding here and in launch.wisk_serve
+# (xlo > xhi): used for node/query padding here and in serve.plan
 NEVER_RECT = (2.0, 2.0, -2.0, -2.0)
 
 

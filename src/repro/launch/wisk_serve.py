@@ -1,17 +1,37 @@
-"""WISK serving on the production mesh: the paper's own dry-run cell.
+"""WISK serving on the production mesh (DESIGN.md §3.4).
 
-The batched SKR pipeline distributes queries over the data axes and index
-leaves (with their object blocks) over ``model``; each device filters its
-local leaves against its local queries, verifies the capacity-bounded
-candidates of its best local leaves, and per-query counts are ``psum``-ed
-over ``model``. This is exactly the Eq.1 filter/verify split mapped onto
-jax-native collectives (DESIGN.md §3). On TPU the two inner loops are the
-Pallas kernels; the dry-run lowers the jnp reference math (identical
-semantics -- Mosaic kernels cannot target the CPU placeholder backend).
+Two distribution regimes share this front door:
+
+* **Query-parallel, replicated index** (``serve_sharded`` /
+  ``serve_knn_sharded``) -- the default and the throughput-scaling path.
+  The ``IndexSnapshot`` pytree is replicated over the mesh with one
+  ``device_put`` (``snapshot.replicate``); the query batch is padded to
+  per-shard power-of-two buckets and sharded over the data axes; and the
+  REAL hierarchical engine -- the frontier SKR descent and the
+  distance-bounded kNN descent of serve/engine.py -- runs per shard inside
+  ``shard_map``, returning per-query result ids and Eq.1 cost counters
+  (identical to the single-device engine, pinned by
+  tests/test_sharded_parity.py). Frontier widths cannot block on per-level
+  host syncs inside a traced region, so the sharded path runs at
+  ``PlanCache.seeded_plan`` widths, cross-shard-maxes the observed per-level
+  child counts (``lax.pmax``), and loops grow-and-redescend to the fixed
+  point -- lossless for the same reason the §3.2 overflow retry is, and
+  sync-free in steady state.
+
+* **Leaf-sharded flat fallback** (``wisk_serve_step`` / ``lower_wisk_serve``)
+  -- the original one-level scan kept for indexes too large to replicate:
+  leaves (with object blocks) shard over ``model``, every device filters its
+  local leaves against the replicated queries, and per-query counts /
+  scanned / overflow are ``psum``-ed over ``model``. On TPU the inner loops
+  are the Pallas kernels; the dry-run lowers the jnp reference math
+  (identical semantics -- Mosaic kernels cannot target the CPU placeholder
+  backend).
 """
 from __future__ import annotations
 
-from typing import Dict
+import functools
+import weakref
+from typing import Dict, Optional
 
 import numpy as np
 
@@ -22,78 +42,58 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..sharding.compat import shard_map
 
 from ..configs.wisk import WiskServeConfig
-from ..kernels.ops import NEVER_RECT
 from ..kernels.ref import skr_filter_ref, skr_verify_ref
-from ..serve.engine import BatchedWisk, retrieve, retrieve_knn, round_up_bucket
-from ..sharding.rules import dp_axes
+from ..serve.engine import (
+    IndexSnapshot,
+    _descend_frontier,
+    _descend_knn,
+    _select_leaves_frontier,
+    _verify_leaves,
+    retrieve,
+    retrieve_knn,
+    round_up_bucket,
+)
+from ..serve.plan import (
+    ExecutionPlan,
+    PlanCache,
+    default_plan_cache,
+    pad_knn_queries_to_bucket,  # noqa: F401  (re-export: historical home)
+    pad_queries_to_bucket,  # noqa: F401  (re-export: historical home)
+)
+from ..sharding.rules import default_rules, dp_axes, spec_for
+from .mesh import make_host_mesh
 
 OBJ_PER_LEAF = 512
 TOP_LEAVES_LOCAL = 4
 
 
-# ------------------------------------------------- batch/frontier bucketing
-def pad_queries_to_bucket(q_rects, q_bm, minimum: int = 8):
-    """Pad an incoming query batch to its power-of-two bucket.
-
-    The frontier descent (serve.engine) retraces per (batch, frontier-width)
-    shape; bucketing the batch dimension here -- like the engine buckets
-    frontier widths -- keeps the set of compiled shapes logarithmic in the
-    largest batch ever seen. Pad queries use never-intersecting rects and
-    empty bitmaps, so they survive no filter and verify nothing.
-    """
-    q_rects = np.asarray(q_rects, np.float32)
-    q_bm = np.asarray(q_bm, np.uint32)
-    m = q_rects.shape[0]
-    bucket = round_up_bucket(m, minimum)
-    if bucket == m:
-        return q_rects, q_bm, m
-    pad = bucket - m
-    rects = np.concatenate(
-        [q_rects, np.tile(np.array([NEVER_RECT], np.float32), (pad, 1))], 0
-    )
-    bms = np.concatenate([q_bm, np.zeros((pad, q_bm.shape[1]), np.uint32)], 0)
-    return rects, bms, m
-
-
+# --------------------------------------------------- single-device front door
 def serve_batch(
-    bw: BatchedWisk,
+    snap: IndexSnapshot,
     q_rects,
     q_bm,
     max_leaves: int = 32,
     mode: str = "frontier",
     minimum_bucket: int = 8,
+    plan_cache: Optional[PlanCache] = None,
 ):
     """Bucketed front door for the batched engine: pad -> retrieve -> slice."""
     rects, bms, m = pad_queries_to_bucket(q_rects, q_bm, minimum_bucket)
-    out = retrieve(bw, jnp.asarray(rects), jnp.asarray(bms), max_leaves, mode=mode)
+    out = retrieve(
+        snap, jnp.asarray(rects), jnp.asarray(bms), max_leaves, mode=mode,
+        plan_cache=plan_cache,
+    )
     per_query = ("ids", "counts", "nodes_checked", "nodes_scanned", "verified", "overflow")
     return {k: (v[:m] if k in per_query else v) for k, v in out.items()}
 
 
-def pad_knn_queries_to_bucket(points, q_bm, minimum: int = 8):
-    """kNN twin of ``pad_queries_to_bucket``. Pad queries are inert because
-    their all-zero bitmap fails the keyword AND, so every frontier slot
-    scores +inf -- they verify nothing and return all ``-1`` ids. (The
-    out-of-square pad point is only defensive: distance alone would NOT
-    exclude a pad query.)"""
-    points = np.asarray(points, np.float32)
-    q_bm = np.asarray(q_bm, np.uint32)
-    m = points.shape[0]
-    bucket = round_up_bucket(m, minimum)
-    if bucket == m:
-        return points, q_bm, m
-    pad = bucket - m
-    pts = np.concatenate([points, np.full((pad, 2), 2.0, np.float32)], 0)
-    bms = np.concatenate([q_bm, np.zeros((pad, q_bm.shape[1]), np.uint32)], 0)
-    return pts, bms, m
-
-
 def serve_knn_batch(
-    bw: BatchedWisk,
+    snap: IndexSnapshot,
     points,
     q_bm,
     k: int,
     minimum_bucket: int = 8,
+    plan_cache: Optional[PlanCache] = None,
 ):
     """Bucketed front door for batched Boolean kNN: pad -> retrieve -> slice.
 
@@ -102,14 +102,225 @@ def serve_knn_batch(
     workload classes of LIST-style top-k serving are few and fixed).
     """
     pts, bms, m = pad_knn_queries_to_bucket(points, q_bm, minimum_bucket)
-    out = retrieve_knn(bw, jnp.asarray(pts), jnp.asarray(bms), k)
+    out = retrieve_knn(snap, jnp.asarray(pts), jnp.asarray(bms), k, plan_cache=plan_cache)
     per_query = ("ids", "dist2", "nodes_checked", "verified", "leaves_verified", "pruned")
     return {key: (v[:m] if key in per_query else v) for key, v in out.items()}
 
 
+# ------------------------------------- query-parallel sharded serving (§3.4)
+def default_serving_mesh() -> Mesh:
+    """All local devices on the data axis (query-parallel serving)."""
+    return make_host_mesh(data=len(jax.devices()), model=1)
+
+
+def mesh_dp_size(mesh: Mesh) -> int:
+    """Number of query shards: the product of the mesh's data axes."""
+    dp = dp_axes(mesh)
+    return int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+
+# Replicated-snapshot memo: broadcasting a production-scale index to every
+# mesh device is the expensive part of the query-parallel path, so it must
+# happen once per (snapshot, mesh), not once per served batch. Weakly keyed
+# like plan.default_plan_cache: dropping the snapshot drops its replicas.
+_REPLICATED: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _replicated(snap: IndexSnapshot, mesh: Mesh) -> IndexSnapshot:
+    per_mesh = _REPLICATED.get(snap)
+    if per_mesh is None:
+        per_mesh = {}
+        _REPLICATED[snap] = per_mesh
+    got = per_mesh.get(mesh)
+    if got is None:
+        got = snap.replicate(mesh)
+        per_mesh[mesh] = got
+    return got
+
+
+def _converge_widths(snap: IndexSnapshot, cache: PlanCache, tag: str, run):
+    """Shared grow-and-redescend driver of the sharded front doors: descend
+    at the cache's seeded widths, max the observed per-level child counts
+    across shards, grow the cache, and repeat until nothing overflowed --
+    lossless for the same reason the §3.2 overflow retry is (a descent that
+    finishes without overflow dropped no children), and convergent because
+    widths grow monotonically in power-of-two steps. ``run(widths)`` must
+    return a tuple whose LAST element is the pmax'd per-level maxima."""
+    n_links = snap.n_levels - 1
+    while True:
+        widths = cache.seeded_plan(tag, n_links).widths
+        out = run(widths)
+        maxima = np.asarray(jax.device_get(out[-1]))
+        cache.observe(tag, maxima)
+        if not n_links or not np.any(maxima > np.asarray(widths)):
+            return widths, out
+
+
+def _shard_queries(mesh: Mesh, *arrays):
+    qspec = spec_for(("query", None), default_rules(mesh))
+    sharding = NamedSharding(mesh, qspec)
+    return tuple(jax.device_put(jnp.asarray(a), sharding) for a in arrays)
+
+
+def _pmax_needs(needs, dp):
+    """Stack per-level observed child-count maxima and max them across the
+    query shards: the plan cache must learn widths that fit EVERY shard."""
+    if not needs:
+        return jnp.zeros((0,), jnp.int32)
+    arr = jnp.stack(list(needs)).astype(jnp.int32)
+    return jax.lax.pmax(arr, dp) if dp else arr
+
+
+def _skr_shard_body(snap, q_rects, q_bm, *, widths, take, dp):
+    """Per-shard SKR serving: the real frontier descent on the local query
+    shard against the replicated snapshot (no cross-shard collectives except
+    the width-maxima pmax)."""
+    plan = ExecutionPlan(tag="skr", widths=widths)
+    frontier, surv, nodes_checked, _, needs = _descend_frontier(snap, q_rects, q_bm, plan)
+    top_leaf, leaf_ok, overflow = _select_leaves_frontier(
+        frontier, surv, take, snap.n_leaves
+    )
+    ids, counts, kw_scanned = _verify_leaves(snap, q_rects, q_bm, top_leaf, leaf_ok)
+    return ids, counts, nodes_checked, kw_scanned, overflow, _pmax_needs(needs, dp)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "widths", "take"))
+def _skr_sharded_exec(snap, q_rects, q_bm, mesh, widths, take):
+    dp = dp_axes(mesh)
+    body = functools.partial(_skr_shard_body, widths=widths, take=take, dp=dp)
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(), P(dp, None), P(dp, None)),  # snapshot replicated (prefix)
+        out_specs=(P(dp, None), P(dp), P(dp), P(dp), P(dp), P()),
+        check_vma=False,
+    )
+    return fn(snap, q_rects, q_bm)
+
+
+def serve_sharded(
+    snap: IndexSnapshot,
+    q_rects,
+    q_bm,
+    max_leaves: int = 32,
+    mesh: Optional[Mesh] = None,
+    plan_cache: Optional[PlanCache] = None,
+    minimum_bucket: int = 8,
+) -> Dict[str, np.ndarray]:
+    """Data-parallel SKR serving of the real hierarchical engine.
+
+    Pads the batch to ``n_shards`` equal power-of-two buckets, replicates the
+    snapshot, shard_maps the frontier descent over the mesh's data axes, and
+    converges the plan cache by grow-and-redescend (see module docstring).
+    Returns the same per-query dict as the single-device ``retrieve`` --
+    identical ids and counters (tests/test_sharded_parity.py).
+    """
+    mesh = mesh if mesh is not None else default_serving_mesh()
+    cache = plan_cache if plan_cache is not None else default_plan_cache(snap)
+    rects, bms, m = pad_queries_to_bucket(
+        q_rects, q_bm, minimum_bucket, shards=mesh_dp_size(mesh)
+    )
+    rects, bms = _shard_queries(mesh, rects, bms)
+    snap_r = _replicated(snap, mesh)
+
+    def run(widths):
+        leaf_width = widths[-1] if widths else snap.root_width()
+        take = min(max_leaves, snap.n_leaves, leaf_width)
+        return _skr_sharded_exec(snap_r, rects, bms, mesh, widths, take)
+
+    widths, out = _converge_widths(snap, cache, "skr", run)
+    ids, counts, nodes_checked, kw_scanned, overflow, _ = out
+    used = [snap.root_width(), *widths]
+    return dict(
+        ids=np.asarray(ids)[:m],
+        counts=np.asarray(counts)[:m],
+        nodes_checked=np.asarray(nodes_checked, np.int64)[:m],
+        nodes_scanned=np.full((m,), sum(used), np.int64),
+        verified=np.asarray(kw_scanned)[:m],
+        overflow=np.asarray(overflow)[:m],
+        frontier_widths=np.asarray(used, np.int32),
+    )
+
+
+def _knn_shard_body(snap, points, q_bm, *, widths, k, kb, dp):
+    """Per-shard Boolean kNN: the real distance-bounded descent on the local
+    query shard against the replicated snapshot."""
+    plan = ExecutionPlan(tag="knn", widths=widths)
+    result, needs = _descend_knn(snap, points, q_bm, k, kb, plan)
+    top_d, top_id, nodes_checked, verified, leaves_verified, pruned, _ = result
+    fin = jnp.isfinite(top_d[:, :k])
+    ids = jnp.where(fin, top_id[:, :k], -1)
+    return (
+        ids, top_d[:, :k], nodes_checked, verified, leaves_verified, pruned,
+        _pmax_needs(needs, dp),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "widths", "k", "kb"))
+def _knn_sharded_exec(snap, points, q_bm, mesh, widths, k, kb):
+    dp = dp_axes(mesh)
+    body = functools.partial(_knn_shard_body, widths=widths, k=k, kb=kb, dp=dp)
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(), P(dp, None), P(dp, None)),  # snapshot replicated (prefix)
+        out_specs=(
+            P(dp, None), P(dp, None), P(dp), P(dp), P(dp), P(dp), P(),
+        ),
+        check_vma=False,
+    )
+    return fn(snap, points, q_bm)
+
+
+def serve_knn_sharded(
+    snap: IndexSnapshot,
+    points,
+    q_bm,
+    k: int,
+    mesh: Optional[Mesh] = None,
+    plan_cache: Optional[PlanCache] = None,
+    minimum_bucket: int = 8,
+    min_topk_bucket: int = 8,
+) -> Dict[str, np.ndarray]:
+    """Data-parallel Boolean kNN serving of the real bounded descent.
+
+    Same regime as ``serve_sharded``: replicated snapshot, query batch
+    sharded over the data axes, seeded-width descent with grow-and-redescend
+    convergence. Identical ids/dist2/counters to ``retrieve_knn``.
+    """
+    if k <= 0:  # delegate: one source of truth for the degenerate shape
+        return retrieve_knn(snap, points, q_bm, k)
+    mesh = mesh if mesh is not None else default_serving_mesh()
+    cache = plan_cache if plan_cache is not None else default_plan_cache(snap)
+    pts, bms, m = pad_knn_queries_to_bucket(
+        points, q_bm, minimum_bucket, shards=mesh_dp_size(mesh)
+    )
+    pts, bms = _shard_queries(mesh, pts, bms)
+    snap_r = _replicated(snap, mesh)
+    kb = round_up_bucket(k, min_topk_bucket)
+
+    widths, out = _converge_widths(
+        snap, cache, "knn",
+        lambda widths: _knn_sharded_exec(snap_r, pts, bms, mesh, widths, k, kb),
+    )
+    ids, dist2, nodes_checked, verified, leaves_verified, pruned, _ = out
+    used = [snap.root_width(), *widths]
+    return dict(
+        ids=np.asarray(ids)[:m],
+        dist2=np.asarray(dist2)[:m],
+        nodes_checked=np.asarray(nodes_checked, np.int64)[:m],
+        verified=np.asarray(verified, np.int64)[:m],
+        leaves_verified=np.asarray(leaves_verified, np.int64)[:m],
+        pruned=np.asarray(pruned, np.int64)[:m],
+        frontier_widths=np.asarray(used, np.int32),
+    )
+
+
+# ----------------------------------------- leaf-sharded flat fallback (§3.4)
 def wisk_serve_step(q_rects, q_bm, leaf_mbrs, leaf_bm, obj_x, obj_y, obj_bm, obj_valid,
                     two_stage: bool = False, stage2_cap: int = 512):
-    """Local (per-device) filter + verify; counts psum'd over 'model'.
+    """Local (per-device) filter + verify; counts/scanned/overflow psum'd
+    over 'model'.
 
     q_*: local query shard; leaf_*/obj_*: local leaf shard.
 
@@ -117,6 +328,9 @@ def wisk_serve_step(q_rects, q_bm, leaf_mbrs, leaf_bm, obj_x, obj_y, obj_bm, obj
     first and gather the 512-byte keyword bitmaps only for the (capacity-
     bounded) spatial survivors -- the memory-roofline hillclimb of
     EXPERIMENTS.md section Perf (bitmap traffic drops ~C/stage2_cap).
+    ``overflow`` counts the spatial survivors beyond ``stage2_cap`` whose
+    matches the capacity bound dropped -- callers must surface it (counts
+    are a lower bound whenever it is nonzero).
     """
     M = q_rects.shape[0]
     rel = skr_filter_ref(q_rects, q_bm, leaf_mbrs, leaf_bm)  # (Mloc, Kloc) int8
@@ -149,14 +363,15 @@ def wisk_serve_step(q_rects, q_bm, leaf_mbrs, leaf_bm, obj_x, obj_y, obj_bm, obj
         match = (kw & (val2 > 0)).astype(jnp.int32)
         counts = jnp.sum(match, axis=1)
         overflow = jnp.maximum(jnp.sum(inr.astype(jnp.int32), axis=1) - cap, 0)
-        counts = counts + 0 * overflow  # overflow tracked by caller via scanned
     else:
         cbm = obj_bm[top_leaf].reshape(M, -1, q_bm.shape[1])
         match = skr_verify_ref(q_rects, q_bm, cx, cy, cbm, cval)  # (Mloc, C) int8
         counts = jnp.sum(match.astype(jnp.int32), axis=1)
+        overflow = jnp.zeros_like(counts)
     counts = jax.lax.psum(counts, "model")
     scanned = jax.lax.psum(jnp.sum(rel.astype(jnp.int32), axis=1), "model")
-    return counts, scanned
+    overflow = jax.lax.psum(overflow, "model")
+    return counts, scanned, overflow
 
 
 def make_inputs(cfg: WiskServeConfig):
@@ -176,13 +391,13 @@ def make_inputs(cfg: WiskServeConfig):
 
 def lower_wisk_serve(mesh: Mesh, cfg: WiskServeConfig = None, two_stage: bool = False):
     cfg = cfg or WiskServeConfig()
+    rules = default_rules(mesh)
     dp = dp_axes(mesh)
-    qspec = P(dp, None)
-    lspec = P("model", None)
-    in_specs = (qspec, qspec, lspec, lspec, lspec, lspec, P("model", None, None), lspec)
-    out_specs = (P(dp), P(dp))
-
-    import functools
+    qspec = spec_for(("query", None), rules)
+    lspec = spec_for(("leaf", None), rules)
+    ospec = spec_for(("leaf", "obj_slot", "word"), rules)
+    in_specs = (qspec, qspec, lspec, lspec, lspec, lspec, ospec, lspec)
+    out_specs = (P(dp), P(dp), P(dp))
 
     fn = shard_map(
         functools.partial(wisk_serve_step, two_stage=two_stage),
@@ -196,13 +411,13 @@ def lower_wisk_serve(mesh: Mesh, cfg: WiskServeConfig = None, two_stage: bool = 
         leaf_bm=NamedSharding(mesh, lspec),
         obj_x=NamedSharding(mesh, lspec),
         obj_y=NamedSharding(mesh, lspec),
-        obj_bm=NamedSharding(mesh, P("model", None, None)),
+        obj_bm=NamedSharding(mesh, ospec),
         obj_valid=NamedSharding(mesh, lspec),
     )
     order = list(inputs.keys())
     jitted = jax.jit(
         lambda *args: fn(*args),
         in_shardings=tuple(shardings[k] for k in order),
-        out_shardings=(NamedSharding(mesh, P(dp)), NamedSharding(mesh, P(dp))),
+        out_shardings=tuple(NamedSharding(mesh, P(dp)) for _ in range(3)),
     )
     return jitted.lower(*[inputs[k] for k in order])

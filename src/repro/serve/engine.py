@@ -1,7 +1,15 @@
-"""Serving engine: WISK retrieval front-end + batched LM decode.
+"""Executor layer: batched WISK retrieval over an ``IndexSnapshot``.
 
-The WISK half is the TPU-execution path of the paper (DESIGN.md §3). Two
-range-query traversal modes share the leaf verification stage:
+The serving stack is three explicit layers (DESIGN.md §3.4):
+
+* **snapshot** (serve/snapshot.py) -- the immutable pytree of device-resident
+  index arrays,
+* **plan** (serve/plan.py) -- batch bucketing plus the monotone frontier
+  width cache, handed to descents as per-call ``ExecutionPlan``s,
+* **executors** (this module) -- the jitted descent/verify pipelines that
+  consume ``(snapshot, plan)`` and return exact results + Eq.1 counters.
+
+Two range-query traversal modes share the leaf verification stage:
 
 * ``mode="frontier"`` (default) -- sparse frontier descent: each query
   carries a padded int32 frontier of candidate node ids; per level the
@@ -15,13 +23,13 @@ range-query traversal modes share the leaf verification stage:
   child matrices; per-level work is O(M * n_level) regardless of
   selectivity.
 
-Frontier expansion widths come from a per-``BatchedWisk`` monotone width
-cache: the descent runs at cached per-level widths and fetches every
-level's actual child-count maximum in ONE batched device->host sync at the
-end; if any level overflowed its cached width the (rare, at most
-log2(level width) times ever) lossless retry re-descends with exact
-per-level syncs and grows the cache. Steady state therefore has no
-per-level blocking syncs (DESIGN.md §3.2).
+Frontier expansion widths come from the caller's ``PlanCache`` (default: a
+per-snapshot cache, ``plan.default_plan_cache``): the descent runs at cached
+per-level widths and fetches every level's actual child-count maximum in ONE
+batched device->host sync at the end; if any level overflowed its cached
+width the (rare, at most log2(level width) times ever) lossless retry
+re-descends with exact per-level syncs and grows the cache. Steady state
+therefore has no per-level blocking syncs (DESIGN.md §3.2).
 
 ``retrieve_knn`` is the third execution path (DESIGN.md §6): Boolean kNN as
 a distance-bounded frontier descent. Each query carries a padded on-device
@@ -45,101 +53,28 @@ cost counters:
 * ``verified``/``overflow`` -- Eq.1 verification cost and ``max_leaves``
   spill accounting (kNN: ``verified``/``leaves_verified``/``pruned``).
 
-The LM half is a simple batched greedy decoder over any arch bundle.
+The data-parallel distributed front doors (``serve_sharded`` /
+``serve_knn_sharded``) live in launch/wisk_serve.py; they shard_map the
+same per-level steps over the mesh's data axes with the snapshot replicated.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-# round_up_bucket moved to core.query so construction (core.partition) can
+# round_up_bucket lives in core.query so construction (core.partition) can
 # share the exact same bucket discipline; re-exported here for callers
 # (launch.wisk_serve, tests) that address it through the serving engine.
-from ..core.query import padded_child_table, round_up_bucket  # noqa: F401
-from ..core.types import GeoTextDataset, WiskIndex, Workload
+from ..core.query import round_up_bucket  # noqa: F401
+from ..core.types import Workload
 from ..kernels import ops
-
-
-@dataclasses.dataclass
-class BatchedWisk:
-    """Device-resident arrays for batched query execution over a WiskIndex."""
-
-    level_mbrs: List[jnp.ndarray]
-    level_bms: List[jnp.ndarray]
-    # CSR children per non-leaf level, padded-table form (frontier path)
-    child_table: List[jnp.ndarray]  # (n_up, max_fanout) int32, -1 padded
-    child_counts: List[jnp.ndarray]  # (n_up,) int32
-    # dense adjacency per non-leaf level (A/B dense path; [] if not built)
-    child_matrix: List[jnp.ndarray]  # (n_up, n_down) int8
-    leaf_obj_x: jnp.ndarray  # (K, OBJ) padded per-leaf object blocks
-    leaf_obj_y: jnp.ndarray
-    leaf_obj_bm: jnp.ndarray  # (K, OBJ, W)
-    leaf_obj_id: jnp.ndarray  # (K, OBJ) int32, -1 pad
-    obj_per_leaf: int
-    # monotone per-(path, level) frontier expansion widths: grown from
-    # observed batch maxima, so steady-state descents need no per-level
-    # host syncs (see _descend_frontier / DESIGN.md §3.2)
-    width_cache: Dict[Tuple[str, int], int] = dataclasses.field(default_factory=dict)
-
-    @property
-    def n_levels(self) -> int:
-        return len(self.level_mbrs)
-
-    @property
-    def n_leaves(self) -> int:
-        return int(self.level_mbrs[-1].shape[0])
-
-    @staticmethod
-    def build(index: WiskIndex, dataset: GeoTextDataset, dense: bool = False) -> "BatchedWisk":
-        """``dense=True`` additionally materializes the O(n_up * n_down)
-        child matrices the A/B ``mode="dense"`` path needs; the default
-        frontier path only builds the CSR arrays."""
-        mbrs = [jnp.asarray(l.mbrs) for l in index.levels]
-        bms = [jnp.asarray(l.bitmaps) for l in index.levels]
-        child_table, child_counts, child_matrix = [], [], []
-        for li in range(len(index.levels) - 1):
-            l = index.levels[li]
-            child_table.append(jnp.asarray(padded_child_table(l)))
-            child_counts.append(jnp.asarray(np.diff(l.child_ptr), jnp.int32))
-            if dense:
-                n_down = index.levels[li + 1].n
-                m = np.zeros((l.n, n_down), dtype=np.int8)
-                for u in range(l.n):
-                    m[u, l.child[l.child_ptr[u] : l.child_ptr[u + 1]]] = 1
-                child_matrix.append(jnp.asarray(m))
-        clusters = index.clusters
-        sizes = np.diff(clusters.offsets)
-        OBJ = round_up_bucket(int(sizes.max()))
-        K = clusters.k
-        W = dataset.words
-        ox = np.zeros((K, OBJ), np.float32)
-        oy = np.zeros((K, OBJ), np.float32)
-        obm = np.zeros((K, OBJ, W), np.uint32)
-        oid = np.full((K, OBJ), -1, np.int32)
-        for c in range(K):
-            ids = clusters.order[clusters.offsets[c] : clusters.offsets[c + 1]]
-            ox[c, : ids.size] = dataset.locs[ids, 0]
-            oy[c, : ids.size] = dataset.locs[ids, 1]
-            obm[c, : ids.size] = dataset.kw_bitmap[ids]
-            oid[c, : ids.size] = ids
-        return BatchedWisk(
-            level_mbrs=mbrs,
-            level_bms=bms,
-            child_table=child_table,
-            child_counts=child_counts,
-            child_matrix=child_matrix,
-            leaf_obj_x=jnp.asarray(ox),
-            leaf_obj_y=jnp.asarray(oy),
-            leaf_obj_bm=jnp.asarray(obm),
-            leaf_obj_id=jnp.asarray(oid),
-            obj_per_leaf=OBJ,
-        )
+from .plan import ExecutionPlan, PlanCache, default_plan_cache
+from .snapshot import BatchedWisk, IndexSnapshot  # noqa: F401  (re-export)
 
 
 # ------------------------------------------------------------ frontier steps
@@ -165,7 +100,7 @@ def _expand_frontier(child_table, frontier, surv, f_next: int):
 
     The hierarchy is a tree, so gathered child rows are disjoint and the
     compacted frontier has no duplicates. ``f_next`` must be >= the max
-    per-query child count (guaranteed by the caller's bucketing), so the
+    per-query child count (guaranteed by the caller's planning), so the
     descent is lossless.
     """
     M, F = frontier.shape
@@ -195,14 +130,14 @@ def _select_leaves_frontier(frontier, surv, take: int, n_leaf: int):
     return top_leaf, leaf_ok, overflow
 
 
-def _verify_leaves(bw: BatchedWisk, q_rects, q_bm, top_leaf, leaf_ok):
+def _verify_leaves(snap: IndexSnapshot, q_rects, q_bm, top_leaf, leaf_ok):
     """Capacity-bounded verification of the selected leaves (shared by modes)."""
     M = q_rects.shape[0]
-    cx = bw.leaf_obj_x[top_leaf].reshape(M, -1)
-    cy = bw.leaf_obj_y[top_leaf].reshape(M, -1)
-    cbm = bw.leaf_obj_bm[top_leaf].reshape(M, -1, q_bm.shape[1])
-    cid = bw.leaf_obj_id[top_leaf].reshape(M, -1)
-    cval = (cid >= 0) & jnp.repeat(leaf_ok, bw.obj_per_leaf, axis=1)
+    cx = snap.leaf_obj_x[top_leaf].reshape(M, -1)
+    cy = snap.leaf_obj_y[top_leaf].reshape(M, -1)
+    cbm = snap.leaf_obj_bm[top_leaf].reshape(M, -1, q_bm.shape[1])
+    cid = snap.leaf_obj_id[top_leaf].reshape(M, -1)
+    cval = (cid >= 0) & jnp.repeat(leaf_ok, snap.obj_per_leaf, axis=1)
     match = ops.verify_candidates(q_rects, q_bm, cx, cy, cbm, cval.astype(jnp.int8))
     counts = jnp.sum(match.astype(jnp.int32), axis=1)
     # keyword-matching candidates scanned (Eq.1 verification cost)
@@ -213,103 +148,59 @@ def _verify_leaves(bw: BatchedWisk, q_rects, q_bm, top_leaf, leaf_ok):
     return ids, counts, kw_scanned
 
 
-# ------------------------------------------- frontier width-cache discipline
-def _root_frontier(bw: BatchedWisk, M: int) -> jnp.ndarray:
-    n_root = int(bw.level_mbrs[0].shape[0])
-    root = np.full((round_up_bucket(n_root),), -1, np.int32)
+def _root_frontier(snap: IndexSnapshot, M: int) -> jnp.ndarray:
+    n_root = int(snap.level_mbrs[0].shape[0])
+    root = np.full((snap.root_width(),), -1, np.int32)
     root[:n_root] = np.arange(n_root, dtype=np.int32)
     return jnp.tile(jnp.asarray(root)[None, :], (M, 1))
 
 
-def _cached_widths(bw: BatchedWisk, tag: str, n_links: int) -> Optional[List[int]]:
-    """The cached per-level expansion widths for a descent path, or None if
-    any level is still unlearned (first descent: exact per-level sync)."""
-    ws = [bw.width_cache.get((tag, li)) for li in range(n_links)]
-    return None if any(w is None for w in ws) else ws  # type: ignore[return-value]
-
-
-def _grow_width_cache(bw: BatchedWisk, tag: str, maxima) -> None:
-    """Monotone growth keeps the compiled shape family log-bounded: each
-    (path, level) slot can only double, at most log2(level width) times."""
-    for li, mx in enumerate(maxima):
-        w = round_up_bucket(int(mx))
-        if w > bw.width_cache.get((tag, li), 0):
-            bw.width_cache[(tag, li)] = w
-
-
-def _check_and_retry(bw, tag, widths, needs, descend):
-    """The single batched sync of a cached-width descent: fetch all levels'
-    observed child-count maxima at once; on overflow (a cached width was too
-    narrow -- children were dropped) re-descend in exact per-level-sync mode
-    so the result stays lossless, and grow the cache either way."""
-    if widths is None:
-        _grow_width_cache(bw, tag, needs)  # exact descent: needs are host ints
-        return None
-    if needs:
-        maxima = np.asarray(jax.device_get(jnp.stack(needs)))
-        if np.any(maxima > np.asarray(widths)):
-            _grow_width_cache(bw, tag, maxima)
-            out = descend(None)
-            _grow_width_cache(bw, tag, out[-1])
-            return out
-    return None
-
-
-def _pick_width(need, widths: Optional[List[int]], li: int, needs: List) -> int:
-    """Per-level expansion width under the shared sync discipline: exact
-    mode (widths=None) blocks on the batch max and buckets it; cached mode
-    records the max as a device scalar for the caller's single batched
-    overflow check and uses the cached width."""
-    if widths is None:
-        mx = int(jnp.max(need))
-        needs.append(mx)
-        return round_up_bucket(mx)
-    needs.append(jnp.max(need))
-    return widths[li]
-
-
-def _descend_frontier(bw: BatchedWisk, q_rects, q_bm, widths: Optional[List[int]]):
+def _descend_frontier(snap: IndexSnapshot, q_rects, q_bm, plan: ExecutionPlan):
     """Shared range-query frontier descent.
 
-    ``widths=None``: exact mode -- bucket each next frontier on the batch's
-    actual occupancy, one blocking host sync per level (first descent and
-    overflow retries). ``widths=[...]``: cached mode -- no per-level syncs;
-    per-level child-count maxima are returned as device scalars for the
-    caller's single batched overflow check.
+    ``plan.widths=None``: exact mode -- bucket each next frontier on the
+    batch's actual occupancy, one blocking host sync per level (first descent
+    and overflow retries). ``plan.widths=(...)``: cached mode -- no per-level
+    syncs; per-level child-count maxima are returned as device scalars for
+    the caller's single batched overflow check.
     """
     M = q_rects.shape[0]
-    frontier = _root_frontier(bw, M)
+    frontier = _root_frontier(snap, M)
     nodes_checked = jnp.zeros((M,), jnp.int32)
     used: List[int] = []
     needs: List = []
     surv = None
-    for li in range(bw.n_levels):
+    for li in range(snap.n_levels):
         used.append(int(frontier.shape[1]))
         surv, n_valid = _filter_frontier_level(
-            bw.level_mbrs[li], bw.level_bms[li], q_rects, q_bm, frontier
+            snap.level_mbrs[li], snap.level_bms[li], q_rects, q_bm, frontier
         )
         nodes_checked = nodes_checked + n_valid
-        if li < bw.n_levels - 1:
-            need = _frontier_child_counts(bw.child_counts[li], frontier, surv)
-            f_next = _pick_width(need, widths, li, needs)
-            frontier = _expand_frontier(bw.child_table[li], frontier, surv, f_next)
+        if li < snap.n_levels - 1:
+            need = _frontier_child_counts(snap.child_counts[li], frontier, surv)
+            f_next = plan.pick_width(need, li, needs)
+            frontier = _expand_frontier(snap.child_table[li], frontier, surv, f_next)
     return frontier, surv, nodes_checked, used, needs
 
 
 def _retrieve_frontier(
-    bw: BatchedWisk, q_rects: jnp.ndarray, q_bm: jnp.ndarray, max_leaves: int
+    snap: IndexSnapshot,
+    q_rects: jnp.ndarray,
+    q_bm: jnp.ndarray,
+    max_leaves: int,
+    cache: PlanCache,
 ) -> Dict[str, np.ndarray]:
     M = q_rects.shape[0]
-    widths = _cached_widths(bw, "skr", bw.n_levels - 1)
-    descend = lambda w: _descend_frontier(bw, q_rects, q_bm, w)
-    out = descend(widths)
-    retried = _check_and_retry(bw, "skr", widths, out[-1], descend)
+    plan = cache.plan("skr", snap.n_levels - 1)
+    descend = lambda p: _descend_frontier(snap, q_rects, q_bm, p)
+    out = descend(plan)
+    retried = cache.check_and_retry(plan, out[-1], descend)
     frontier, surv, nodes_checked, used, _ = retried or out
 
-    n_leaf = bw.n_leaves
+    n_leaf = snap.n_leaves
     take = min(max_leaves, n_leaf, int(frontier.shape[1]))
     top_leaf, leaf_ok, overflow = _select_leaves_frontier(frontier, surv, take, n_leaf)
-    ids, counts, kw_scanned = _verify_leaves(bw, q_rects, q_bm, top_leaf, leaf_ok)
+    ids, counts, kw_scanned = _verify_leaves(snap, q_rects, q_bm, top_leaf, leaf_ok)
     return dict(
         ids=np.asarray(ids),
         counts=np.asarray(counts),
@@ -431,15 +322,15 @@ def _knn_leaf_phase(
     return top_d, top_id, lv, ver, pr
 
 
-def _descend_knn(bw: BatchedWisk, points, q_bm, k: int, kb: int, widths: Optional[List[int]]):
+def _descend_knn(snap: IndexSnapshot, points, q_bm, k: int, kb: int, plan: ExecutionPlan):
     """Distance-bounded kNN descent (probe -> bounded sweep -> leaf chunks).
 
-    Width discipline is identical to ``_descend_frontier``: ``widths=None``
-    syncs per level (exact mode), a width list runs sync-free and returns
-    device maxima for the caller's batched overflow check.
+    Width discipline is identical to ``_descend_frontier``: exact mode syncs
+    per level, cached mode runs sync-free and returns device maxima for the
+    caller's batched overflow check.
     """
     M = int(points.shape[0])
-    L = bw.n_levels
+    L = snap.n_levels
     top_d = jnp.full((M, kb), jnp.inf, jnp.float32)
     top_id = jnp.full((M, kb), _ID_SENTINEL, jnp.int32)
     nodes_checked = jnp.zeros((M,), jnp.int32)
@@ -447,37 +338,37 @@ def _descend_knn(bw: BatchedWisk, points, q_bm, k: int, kb: int, widths: Optiona
 
     # probe: beam-1 greedy descent to a leaf seeds the buffer, so the sweep
     # below starts with a finite bound and can prune before expansion
-    cand = _root_frontier(bw, M)
+    cand = _root_frontier(snap, M)
     cur = None
     for li in range(L):
         if li > 0:
-            cand = _probe_children(bw.child_table[li - 1], cur)
-        d, nv = _knn_dist_level(bw.level_mbrs[li], bw.level_bms[li], points, q_bm, cand)
+            cand = _probe_children(snap.child_table[li - 1], cur)
+        d, nv = _knn_dist_level(snap.level_mbrs[li], snap.level_bms[li], points, q_bm, cand)
         nodes_checked = nodes_checked + nv
         cur = _probe_select(d, cand)
     probe_leaf = cur
     top_d, top_id, ver0 = _knn_probe_verify(
-        points, q_bm, bw.leaf_obj_x, bw.leaf_obj_y, bw.leaf_obj_bm, bw.leaf_obj_id,
+        points, q_bm, snap.leaf_obj_x, snap.leaf_obj_y, snap.leaf_obj_bm, snap.leaf_obj_id,
         probe_leaf, top_d, top_id, kb,
     )
     verified = ver0
     leaves_verified = (probe_leaf >= 0).astype(jnp.int32)
 
     # bounded sweep: full frontier descent, pruning against the k-th best
-    frontier = _root_frontier(bw, M)
+    frontier = _root_frontier(snap, M)
     used: List[int] = []
     needs: List = []
     leaf_d = None
     for li in range(L):
         used.append(int(frontier.shape[1]))
-        d, nv = _knn_dist_level(bw.level_mbrs[li], bw.level_bms[li], points, q_bm, frontier)
+        d, nv = _knn_dist_level(snap.level_mbrs[li], snap.level_bms[li], points, q_bm, frontier)
         nodes_checked = nodes_checked + nv
         if li < L - 1:
             alive, pr = _bound_prune(d, top_d, k)
             pruned = pruned + pr
-            need = _frontier_child_counts(bw.child_counts[li], frontier, alive)
-            f_next = _pick_width(need, widths, li, needs)
-            frontier = _expand_frontier(bw.child_table[li], frontier, alive, f_next)
+            need = _frontier_child_counts(snap.child_counts[li], frontier, alive)
+            f_next = plan.pick_width(need, li, needs)
+            frontier = _expand_frontier(snap.child_table[li], frontier, alive, f_next)
         else:
             leaf_d = d
 
@@ -485,7 +376,7 @@ def _descend_knn(bw: BatchedWisk, points, q_bm, k: int, kb: int, widths: Optiona
     ch = 4 if F % 4 == 0 else 1
     top_d, top_id, lv, ver, pr = _knn_leaf_phase(
         points, q_bm, leaf_d, frontier, probe_leaf,
-        bw.leaf_obj_x, bw.leaf_obj_y, bw.leaf_obj_bm, bw.leaf_obj_id,
+        snap.leaf_obj_x, snap.leaf_obj_y, snap.leaf_obj_bm, snap.leaf_obj_id,
         top_d, top_id, k, kb, ch,
     )
     result = (
@@ -496,7 +387,12 @@ def _descend_knn(bw: BatchedWisk, points, q_bm, k: int, kb: int, widths: Optiona
 
 
 def retrieve_knn(
-    bw: BatchedWisk, points, q_bm, k: int, min_topk_bucket: int = 8
+    snap: IndexSnapshot,
+    points,
+    q_bm,
+    k: int,
+    min_topk_bucket: int = 8,
+    plan_cache: Optional[PlanCache] = None,
 ) -> Dict[str, np.ndarray]:
     """Batched Boolean kNN over the device-resident index (DESIGN.md §6).
 
@@ -517,10 +413,11 @@ def retrieve_knn(
             pruned=z.copy(), frontier_widths=np.zeros(0, np.int32),
         )
     kb = round_up_bucket(k, min_topk_bucket)
-    widths = _cached_widths(bw, "knn", bw.n_levels - 1)
-    descend = lambda w: _descend_knn(bw, points, q_bm, k, kb, w)
-    out = descend(widths)
-    retried = _check_and_retry(bw, "knn", widths, out[-1], descend)
+    cache = plan_cache if plan_cache is not None else default_plan_cache(snap)
+    plan = cache.plan("knn", snap.n_levels - 1)
+    descend = lambda p: _descend_knn(snap, points, q_bm, k, kb, p)
+    out = descend(plan)
+    retried = cache.check_and_retry(plan, out[-1], descend)
     top_d, top_id, nodes_checked, verified, leaves_verified, pruned, used = (retried or out)[0]
     fin = jnp.isfinite(top_d[:, :k])
     ids = jnp.where(fin, top_id[:, :k], -1)
@@ -537,19 +434,19 @@ def retrieve_knn(
 
 # --------------------------------------------------------------- dense path
 def _retrieve_dense(
-    bw: BatchedWisk, q_rects: jnp.ndarray, q_bm: jnp.ndarray, max_leaves: int
+    snap: IndexSnapshot, q_rects: jnp.ndarray, q_bm: jnp.ndarray, max_leaves: int
 ) -> Dict[str, np.ndarray]:
-    if len(bw.child_matrix) != len(bw.level_mbrs) - 1:
-        raise ValueError("dense mode needs BatchedWisk.build(..., dense=True)")
+    if len(snap.child_matrix) != len(snap.level_mbrs) - 1:
+        raise ValueError("dense mode needs IndexSnapshot.build(..., dense=True)")
     M = q_rects.shape[0]
-    active = jnp.ones((M, bw.level_mbrs[0].shape[0]), jnp.int8)
+    active = jnp.ones((M, snap.level_mbrs[0].shape[0]), jnp.int8)
     nodes_checked = jnp.zeros((M,), jnp.int32)
-    for li in range(len(bw.level_mbrs)):
-        rel = ops.filter_pairs(q_rects, q_bm, bw.level_mbrs[li], bw.level_bms[li])
+    for li in range(len(snap.level_mbrs)):
+        rel = ops.filter_pairs(q_rects, q_bm, snap.level_mbrs[li], snap.level_bms[li])
         nodes_checked = nodes_checked + jnp.sum(active > 0, axis=1)
         hit = (rel > 0) & (active > 0)
-        if li < len(bw.level_mbrs) - 1:
-            active = (hit.astype(jnp.int8) @ bw.child_matrix[li] > 0).astype(jnp.int8)
+        if li < len(snap.level_mbrs) - 1:
+            active = (hit.astype(jnp.int8) @ snap.child_matrix[li] > 0).astype(jnp.int8)
         else:
             leaf_hit = hit
     # pick up to max_leaves relevant leaves per query (lowest leaf id first)
@@ -558,7 +455,7 @@ def _retrieve_dense(
     top_val, top_leaf = jax.lax.top_k(score, take)  # (M, L)
     leaf_ok = top_val > 0
     overflow = jnp.maximum(jnp.sum(score, axis=1) - take, 0)
-    ids, counts, kw_scanned = _verify_leaves(bw, q_rects, q_bm, top_leaf, leaf_ok)
+    ids, counts, kw_scanned = _verify_leaves(snap, q_rects, q_bm, top_leaf, leaf_ok)
     return dict(
         ids=np.asarray(ids),
         counts=np.asarray(counts),
@@ -568,7 +465,7 @@ def _retrieve_dense(
         # two buckets are already tile-exact)
         nodes_scanned=np.full(
             (M,),
-            sum(ops.padded_tile_len(int(l.shape[0])) for l in bw.level_mbrs),
+            sum(ops.padded_tile_len(int(l.shape[0])) for l in snap.level_mbrs),
             np.int64,
         ),
         verified=np.asarray(kw_scanned),
@@ -577,49 +474,42 @@ def _retrieve_dense(
 
 
 def retrieve(
-    bw: BatchedWisk,
+    snap: IndexSnapshot,
     q_rects: jnp.ndarray,
     q_bm: jnp.ndarray,
     max_leaves: int = 32,
     mode: str = "frontier",
+    plan_cache: Optional[PlanCache] = None,
 ) -> Dict[str, np.ndarray]:
     """Batched SKR retrieval. Exact as long as <= max_leaves leaves are
     relevant per query (the spill is counted in ``overflow``).
 
     ``mode="frontier"`` is the sparse descent; ``mode="dense"`` the original
-    full-level scan (kept for A/B benchmarking).
+    full-level scan (kept for A/B benchmarking). ``plan_cache`` carries the
+    frontier width state across calls; None uses the per-snapshot default.
     """
     q_rects = jnp.asarray(q_rects, jnp.float32)
     q_bm = jnp.asarray(q_bm, jnp.uint32)
     if mode == "frontier":
-        return _retrieve_frontier(bw, q_rects, q_bm, max_leaves)
+        cache = plan_cache if plan_cache is not None else default_plan_cache(snap)
+        return _retrieve_frontier(snap, q_rects, q_bm, max_leaves, cache)
     if mode == "dense":
-        return _retrieve_dense(bw, q_rects, q_bm, max_leaves)
+        return _retrieve_dense(snap, q_rects, q_bm, max_leaves)
     raise ValueError(f"unknown retrieve mode {mode!r}")
 
 
 def retrieve_workload(
-    bw: BatchedWisk, workload: Workload, max_leaves: int = 32, mode: str = "frontier"
+    snap: IndexSnapshot,
+    workload: Workload,
+    max_leaves: int = 32,
+    mode: str = "frontier",
+    plan_cache: Optional[PlanCache] = None,
 ):
     return retrieve(
-        bw,
+        snap,
         jnp.asarray(workload.rects),
         jnp.asarray(workload.kw_bitmap),
         max_leaves,
         mode=mode,
+        plan_cache=plan_cache,
     )
-
-
-# --------------------------------------------------------------- LM decode
-def greedy_generate(steps, params, cache, prompt_tokens: jnp.ndarray, n_new: int, start_pos: int):
-    """Batched greedy decode loop driving steps.decode_step."""
-    decode = jax.jit(steps.decode_step)
-    tok = prompt_tokens[:, -1:]
-    out = []
-    pos = start_pos
-    for _ in range(n_new):
-        logits, cache = decode(params, cache, tok, jnp.int32(pos))
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        out.append(tok)
-        pos += 1
-    return jnp.concatenate(out, axis=1), cache

@@ -1,0 +1,184 @@
+"""Plan layer: batch bucketing/padding and the frontier width discipline.
+
+Serving an ``IndexSnapshot`` needs two kinds of *planning state* that are
+not index data (DESIGN.md §3.2 / §3.4):
+
+* **Batch bucketing.** Incoming query batches are padded to power-of-two
+  buckets (optionally per data-parallel shard) with inert pad queries, so
+  jitted descents retrace at most log2(max batch) times ever.
+* **Execution plans.** Each frontier descent runs at per-level expansion
+  widths. ``PlanCache`` owns the monotone per-(path, level) width cache the
+  old ``BatchedWisk`` dataclass carried as a mutable field; it hands the
+  executors an immutable ``ExecutionPlan`` per descent and absorbs the
+  observed per-level child-count maxima afterwards. The cache is shared by
+  the SKR range path (tag ``"skr"``), the kNN path (tag ``"knn"``), and the
+  distributed front doors (launch/wisk_serve.py), which key their own tags.
+
+Width discipline (unchanged semantics, new ownership):
+
+* ``plan.widths is None`` -- *exact* mode: the descent blocks on each
+  level's batch-max child count (one host sync per level) and the caller
+  grows the cache from those host ints. First descent of a path only.
+* ``plan.widths = (w0, w1, ...)`` -- *cached* mode: the descent runs
+  sync-free at the cached widths and records per-level device maxima; ONE
+  batched device->host fetch checks them all at the end. Overflow (a width
+  was too narrow: children were dropped) triggers a lossless exact retry.
+  Monotone power-of-two growth bounds retries and recompiles at
+  log2(level width) per (path, level) for the lifetime of the process.
+
+The sharded path cannot host-sync per level inside ``shard_map``; it uses
+``seeded_plan`` (missing widths start at the minimum bucket) and loops
+grow-and-redescend to the fixed point -- see launch/wisk_serve.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import weakref
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core.query import round_up_bucket, sharded_bucket
+from ..kernels.ops import NEVER_RECT
+
+MIN_WIDTH_BUCKET = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """One descent's resolved widths: ``widths=None`` is exact (per-level
+    sync) mode, a tuple is the sync-free cached mode."""
+
+    tag: str
+    widths: Optional[Tuple[int, ...]]
+
+    def pick_width(self, need, li: int, needs: List) -> int:
+        """Per-level expansion width under the shared sync discipline: exact
+        mode blocks on the batch max and buckets it; cached mode records the
+        max as a device scalar for the single batched overflow check."""
+        if self.widths is None:
+            mx = int(jnp.max(need))
+            needs.append(mx)
+            return round_up_bucket(mx)
+        needs.append(jnp.max(need))
+        return self.widths[li]
+
+
+class PlanCache:
+    """Monotone per-(path tag, level) frontier expansion widths.
+
+    ``widths`` is a plain dict keyed ``(tag, level) -> int`` (public: tests
+    poison it to exercise the lossless overflow retry).
+    """
+
+    def __init__(self) -> None:
+        self.widths: Dict[Tuple[str, int], int] = {}
+
+    def plan(self, tag: str, n_links: int) -> ExecutionPlan:
+        """Cached-mode plan if every level's width is learned, else exact."""
+        ws = [self.widths.get((tag, li)) for li in range(n_links)]
+        if any(w is None for w in ws):
+            return ExecutionPlan(tag=tag, widths=None)
+        return ExecutionPlan(tag=tag, widths=tuple(ws))  # type: ignore[arg-type]
+
+    def seeded_plan(
+        self, tag: str, n_links: int, minimum: int = MIN_WIDTH_BUCKET
+    ) -> ExecutionPlan:
+        """Always-concrete widths (unlearned levels seeded at ``minimum``):
+        the shard_map'd descents trace at static widths and converge by
+        grow-and-retry instead of per-level syncs."""
+        return ExecutionPlan(
+            tag=tag,
+            widths=tuple(self.widths.get((tag, li), minimum) for li in range(n_links)),
+        )
+
+    def observe(self, tag: str, maxima: Sequence[int]) -> None:
+        """Monotone growth from observed per-level child-count maxima keeps
+        the compiled shape family log-bounded: each (tag, level) slot can
+        only double, at most log2(level width) times."""
+        for li, mx in enumerate(maxima):
+            w = round_up_bucket(int(mx))
+            if w > self.widths.get((tag, li), 0):
+                self.widths[(tag, li)] = w
+
+    def check_and_retry(
+        self, plan: ExecutionPlan, needs: Sequence, descend: Callable
+    ):
+        """The single batched sync of a cached-width descent: fetch all
+        levels' observed child-count maxima at once; on overflow re-descend
+        in exact mode (``descend(exact_plan)``) so the result stays lossless,
+        and grow the cache either way. Returns the retried descent output or
+        None when the original descent stands."""
+        if plan.widths is None:
+            self.observe(plan.tag, needs)  # exact descent: needs are host ints
+            return None
+        if needs:
+            maxima = np.asarray(jax.device_get(jnp.stack(list(needs))))
+            if np.any(maxima > np.asarray(plan.widths)):
+                self.observe(plan.tag, maxima)
+                out = descend(ExecutionPlan(tag=plan.tag, widths=None))
+                self.observe(plan.tag, out[-1])
+                return out
+        return None
+
+
+# Convenience registry for callers that don't manage planning state
+# explicitly: one PlanCache per live snapshot, weakly keyed so dropping the
+# snapshot drops its learned widths too. Executors fall back to this when no
+# cache is passed; the distributed front doors always pass one explicitly.
+_DEFAULT_PLANS: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def default_plan_cache(snapshot) -> PlanCache:
+    cache = _DEFAULT_PLANS.get(snapshot)
+    if cache is None:
+        cache = PlanCache()
+        _DEFAULT_PLANS[snapshot] = cache
+    return cache
+
+
+# ------------------------------------------------------------ batch padding
+def pad_queries_to_bucket(q_rects, q_bm, minimum: int = 8, shards: int = 1):
+    """Pad an incoming query batch to its power-of-two bucket.
+
+    The frontier descent (serve.engine) retraces per (batch, frontier-width)
+    shape; bucketing the batch dimension here -- like the planner buckets
+    frontier widths -- keeps the set of compiled shapes logarithmic in the
+    largest batch ever seen. ``shards > 1`` pads to ``shards`` equal
+    power-of-two buckets so the batch splits evenly over a data-parallel
+    mesh axis. Pad queries use never-intersecting rects and empty bitmaps,
+    so they survive no filter and verify nothing.
+    """
+    q_rects = np.asarray(q_rects, np.float32)
+    q_bm = np.asarray(q_bm, np.uint32)
+    m = q_rects.shape[0]
+    bucket = sharded_bucket(m, shards, minimum)
+    if bucket == m:
+        return q_rects, q_bm, m
+    pad = bucket - m
+    rects = np.concatenate(
+        [q_rects, np.tile(np.array([NEVER_RECT], np.float32), (pad, 1))], 0
+    )
+    bms = np.concatenate([q_bm, np.zeros((pad, q_bm.shape[1]), np.uint32)], 0)
+    return rects, bms, m
+
+
+def pad_knn_queries_to_bucket(points, q_bm, minimum: int = 8, shards: int = 1):
+    """kNN twin of ``pad_queries_to_bucket``. Pad queries are inert because
+    their all-zero bitmap fails the keyword AND, so every frontier slot
+    scores +inf -- they verify nothing and return all ``-1`` ids. (The
+    out-of-square pad point is only defensive: distance alone would NOT
+    exclude a pad query.)"""
+    points = np.asarray(points, np.float32)
+    q_bm = np.asarray(q_bm, np.uint32)
+    m = points.shape[0]
+    bucket = sharded_bucket(m, shards, minimum)
+    if bucket == m:
+        return points, q_bm, m
+    pad = bucket - m
+    pts = np.concatenate([points, np.full((pad, 2), 2.0, np.float32)], 0)
+    bms = np.concatenate([q_bm, np.zeros((pad, q_bm.shape[1]), np.uint32)], 0)
+    return pts, bms, m

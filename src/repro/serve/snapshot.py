@@ -1,0 +1,156 @@
+"""Snapshot layer: the device-resident WISK index as an immutable pytree.
+
+``IndexSnapshot`` holds every array the batched executors (serve/engine.py)
+touch -- per-level MBRs and keyword bitmaps, CSR child tables, the optional
+dense adjacency matrices, and the padded per-leaf object blocks. It is
+registered as a JAX pytree with the arrays as leaves and the static layout
+(``obj_per_leaf``) as aux data, so a whole index can be
+
+* ``jax.device_put`` with one ``NamedSharding`` (``snapshot.replicate(mesh)``
+  broadcasts it to every device of a serving mesh), and
+* passed through ``jit`` / ``shard_map`` as a SINGLE argument -- the
+  query-parallel distributed path (launch/wisk_serve.py:serve_sharded) maps
+  it with a one-element ``P()`` prefix spec instead of eight per-array specs.
+
+Mutability policy (DESIGN.md §3.4): the snapshot is frozen. The monotone
+frontier width cache that used to live on the old ``BatchedWisk`` dataclass
+is serving *state*, not index data; it now lives in ``serve/plan.py``'s
+``PlanCache`` so the same snapshot can be served concurrently by executors
+with independent (or shared) planning state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core.query import padded_child_table, round_up_bucket
+from ..core.types import GeoTextDataset, WiskIndex
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class IndexSnapshot:
+    """Immutable device-resident arrays for batched serving over a WiskIndex.
+
+    All array fields are pytree leaves; ``obj_per_leaf`` is static aux data
+    (it is a compiled-shape parameter, not traced data).
+    """
+
+    level_mbrs: List[jnp.ndarray]  # per level: (n, 4) f32
+    level_bms: List[jnp.ndarray]  # per level: (n, W) u32
+    # CSR children per non-leaf level, padded-table form (frontier path)
+    child_table: List[jnp.ndarray]  # (n_up, max_fanout) int32, -1 padded
+    child_counts: List[jnp.ndarray]  # (n_up,) int32
+    # dense adjacency per non-leaf level (A/B dense path; [] if not built)
+    child_matrix: List[jnp.ndarray]  # (n_up, n_down) int8
+    leaf_obj_x: jnp.ndarray  # (K, OBJ) padded per-leaf object blocks
+    leaf_obj_y: jnp.ndarray
+    leaf_obj_bm: jnp.ndarray  # (K, OBJ, W)
+    leaf_obj_id: jnp.ndarray  # (K, OBJ) int32, -1 pad
+    obj_per_leaf: int
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.level_mbrs)
+
+    @property
+    def n_leaves(self) -> int:
+        return int(self.level_mbrs[-1].shape[0])
+
+    @property
+    def n_words(self) -> int:
+        return int(self.level_bms[0].shape[1])
+
+    def root_width(self) -> int:
+        """Bucketed width of the root frontier (static)."""
+        return round_up_bucket(int(self.level_mbrs[0].shape[0]))
+
+    def replicate(self, mesh) -> "IndexSnapshot":
+        """The snapshot fully replicated over ``mesh`` (one device_put of the
+        whole pytree with a single ``P()`` NamedSharding)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        return jax.device_put(self, NamedSharding(mesh, P()))
+
+    @staticmethod
+    def build(
+        index: WiskIndex, dataset: GeoTextDataset, dense: bool = False
+    ) -> "IndexSnapshot":
+        """``dense=True`` additionally materializes the O(n_up * n_down)
+        child matrices the A/B ``mode="dense"`` path needs; the default
+        frontier path only builds the CSR arrays."""
+        mbrs = [jnp.asarray(l.mbrs) for l in index.levels]
+        bms = [jnp.asarray(l.bitmaps) for l in index.levels]
+        child_table, child_counts, child_matrix = [], [], []
+        for li in range(len(index.levels) - 1):
+            l = index.levels[li]
+            child_table.append(jnp.asarray(padded_child_table(l)))
+            child_counts.append(jnp.asarray(np.diff(l.child_ptr), jnp.int32))
+            if dense:
+                n_down = index.levels[li + 1].n
+                m = np.zeros((l.n, n_down), dtype=np.int8)
+                for u in range(l.n):
+                    m[u, l.child[l.child_ptr[u] : l.child_ptr[u + 1]]] = 1
+                child_matrix.append(jnp.asarray(m))
+        clusters = index.clusters
+        sizes = np.diff(clusters.offsets)
+        OBJ = round_up_bucket(int(sizes.max()))
+        K = clusters.k
+        W = dataset.words
+        ox = np.zeros((K, OBJ), np.float32)
+        oy = np.zeros((K, OBJ), np.float32)
+        obm = np.zeros((K, OBJ, W), np.uint32)
+        oid = np.full((K, OBJ), -1, np.int32)
+        for c in range(K):
+            ids = clusters.order[clusters.offsets[c] : clusters.offsets[c + 1]]
+            ox[c, : ids.size] = dataset.locs[ids, 0]
+            oy[c, : ids.size] = dataset.locs[ids, 1]
+            obm[c, : ids.size] = dataset.kw_bitmap[ids]
+            oid[c, : ids.size] = ids
+        return IndexSnapshot(
+            level_mbrs=mbrs,
+            level_bms=bms,
+            child_table=child_table,
+            child_counts=child_counts,
+            child_matrix=child_matrix,
+            leaf_obj_x=jnp.asarray(ox),
+            leaf_obj_y=jnp.asarray(oy),
+            leaf_obj_bm=jnp.asarray(obm),
+            leaf_obj_id=jnp.asarray(oid),
+            obj_per_leaf=OBJ,
+        )
+
+
+_ARRAY_FIELDS = (
+    "level_mbrs",
+    "level_bms",
+    "child_table",
+    "child_counts",
+    "child_matrix",
+    "leaf_obj_x",
+    "leaf_obj_y",
+    "leaf_obj_bm",
+    "leaf_obj_id",
+)
+
+
+def _snapshot_flatten(s: IndexSnapshot):
+    return tuple(getattr(s, f) for f in _ARRAY_FIELDS), (s.obj_per_leaf,)
+
+
+def _snapshot_unflatten(aux, children) -> IndexSnapshot:
+    kw = dict(zip(_ARRAY_FIELDS, children))
+    return IndexSnapshot(obj_per_leaf=aux[0], **kw)
+
+
+jax.tree_util.register_pytree_node(
+    IndexSnapshot, _snapshot_flatten, _snapshot_unflatten
+)
+
+# Transitional alias: the snapshot used to be serve.engine.BatchedWisk (with
+# an embedded mutable width cache -- now PlanCache in serve/plan.py).
+BatchedWisk = IndexSnapshot

@@ -52,6 +52,14 @@ def default_rules(mesh: Mesh) -> Dict[str, Axis]:
         "inner": "model",  # mamba d_inner / xlstm inner: channel TP
         "conv": None,
         "repeat": None,
+        # WISK serving (launch/wisk_serve.py, DESIGN.md §3.4): the
+        # query-parallel path shards the query batch over the data axes with
+        # the IndexSnapshot replicated; the flat leaf-sharded fallback
+        # distributes leaves (and their object blocks) over model.
+        "query": dp,
+        "leaf": "model",
+        "word": None,  # keyword bitmap words stay unsharded
+        "obj_slot": None,  # per-leaf object block slots stay unsharded
     }
 
 

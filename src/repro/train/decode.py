@@ -1,0 +1,21 @@
+"""Batched LM decoding loops (moved out of serve/engine.py: the serving
+package is spatial-keyword-only; LM inference belongs with the train-side
+step builders whose ``decode_step`` it drives)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy_generate(steps, params, cache, prompt_tokens: jnp.ndarray, n_new: int, start_pos: int):
+    """Batched greedy decode loop driving steps.decode_step."""
+    decode = jax.jit(steps.decode_step)
+    tok = prompt_tokens[:, -1:]
+    out = []
+    pos = start_pos
+    for _ in range(n_new):
+        logits, cache = decode(params, cache, tok, jnp.int32(pos))
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out.append(tok)
+        pos += 1
+    return jnp.concatenate(out, axis=1), cache

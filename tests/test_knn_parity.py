@@ -20,7 +20,7 @@ from repro.core.types import GeoTextDataset
 from repro.data.synth import make_dataset
 from repro.data.workloads import make_workload
 from repro.launch.wisk_serve import pad_knn_queries_to_bucket, serve_knn_batch
-from repro.serve.engine import BatchedWisk, retrieve_knn
+from repro.serve.engine import IndexSnapshot, retrieve_knn
 
 from test_query_parity import _build_index, _grid_clusters, flat_index
 
@@ -54,7 +54,7 @@ def test_knn_all_paths_identical(seed, levels, k):
         index, _ = _build_index(ds, g=6, levels=levels)
     wl = make_workload(ds, m=16, dist="MIX", seed=seed + 20)
     points = _points_from(wl)
-    bw = BatchedWisk.build(index, ds)
+    bw = IndexSnapshot.build(index, ds)
     sync = knn_level_sync(index, ds, points, wl.kw_bitmap, k)
     dev = retrieve_knn(bw, points, wl.kw_bitmap, k)
     for qi in range(wl.m):
@@ -78,7 +78,7 @@ def test_knn_distance_ties_break_by_smallest_id():
     locs[300:310] = locs[300]
     ds = GeoTextDataset.from_ids(locs, ds0.kw_ids, ds0.vocab_size)
     index, _ = _build_index(ds, g=6, levels=2)
-    bw = BatchedWisk.build(index, ds)
+    bw = IndexSnapshot.build(index, ds)
     point = locs[100].astype(np.float32)
     kw_bm = np.bitwise_or.reduce(ds.kw_bitmap[100:140], axis=0)[None, :]
     pts = np.tile(point, (1, 1))
@@ -97,7 +97,7 @@ def test_knn_distance_ties_break_by_smallest_id():
 def test_knn_k_exceeds_matches_and_edge_ks():
     ds = make_dataset("fs", n=900, seed=9)
     index, _ = _build_index(ds, g=5, levels=2)
-    bw = BatchedWisk.build(index, ds)
+    bw = IndexSnapshot.build(index, ds)
     wl = make_workload(ds, m=6, dist="UNI", n_keywords=2, seed=11)
     points = _points_from(wl)
     k = ds.n + 50  # more than any query can match
@@ -121,7 +121,7 @@ def test_knn_empty_keyword_queries_and_padded_batch():
     and empty-keyword queries must verify nothing and return all -1."""
     ds = make_dataset("fs", n=1100, seed=13)
     index, _ = _build_index(ds, g=5, levels=2)
-    bw = BatchedWisk.build(index, ds)
+    bw = IndexSnapshot.build(index, ds)
     wl = make_workload(ds, m=13, dist="MIX", seed=14)  # not a power of two
     points = _points_from(wl)
     bms = wl.kw_bitmap.copy()
@@ -146,7 +146,7 @@ def test_knn_bounded_descent_prunes_leaves():
     pruned counter shows the bound firing."""
     ds = make_dataset("fs", n=2500, seed=5)
     index, _ = _build_index(ds, g=8, levels=3)
-    bw = BatchedWisk.build(index, ds)
+    bw = IndexSnapshot.build(index, ds)
     wl = make_workload(ds, m=24, dist="MIX", seed=6)
     points = _points_from(wl)
     out = retrieve_knn(bw, points, wl.kw_bitmap, 10)

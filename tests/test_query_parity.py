@@ -22,7 +22,7 @@ from repro.core.query import (
 from repro.core.types import ClusterSet
 from repro.data.synth import make_dataset
 from repro.data.workloads import make_workload
-from repro.serve.engine import BatchedWisk, retrieve_workload, round_up_bucket
+from repro.serve.engine import IndexSnapshot, retrieve_workload, round_up_bucket
 
 
 def _grid_clusters(ds, g):
@@ -76,7 +76,7 @@ def test_all_paths_identical(seed, levels):
     wl = make_workload(ds, m=20, dist="MIX", seed=seed + 10)
     st_serial = execute_serial(index, ds, wl)
     st_sync = execute_level_sync(index, ds, wl)
-    bw = BatchedWisk.build(index, ds, dense=True)
+    bw = IndexSnapshot.build(index, ds, dense=True)
     outs = {
         mode: retrieve_workload(bw, wl, max_leaves=clusters.k, mode=mode)
         for mode in ("dense", "frontier")
@@ -103,7 +103,7 @@ def test_frontier_scans_fewer_nodes_than_dense_mask():
     index, clusters = _build_index(ds, g=8, levels=3)
     assert index.height >= 2
     wl = make_workload(ds, m=32, dist="MIX", seed=7)
-    bw = BatchedWisk.build(index, ds, dense=True)
+    bw = IndexSnapshot.build(index, ds, dense=True)
     dense = retrieve_workload(bw, wl, max_leaves=clusters.k, mode="dense")
     frontier = retrieve_workload(bw, wl, max_leaves=clusters.k, mode="frontier")
     assert frontier["nodes_scanned"].sum() < dense["nodes_scanned"].sum()
@@ -122,7 +122,7 @@ def test_max_leaves_overflow_parity():
     index, clusters = _build_index(ds, g=6, levels=2)
     # big rectangles so queries touch many leaves and actually overflow
     wl = make_workload(ds, m=16, dist="UNI", region_frac=0.2, n_keywords=4, seed=9)
-    bw = BatchedWisk.build(index, ds, dense=True)
+    bw = IndexSnapshot.build(index, ds, dense=True)
     st = execute_serial(index, ds, wl)
     for max_leaves in (1, 2, 4):
         dense = retrieve_workload(bw, wl, max_leaves=max_leaves, mode="dense")
@@ -165,33 +165,40 @@ def test_csr_propagation_matches_dense_matmul():
 
 
 def test_frontier_width_cache_stays_lossless():
-    """The batched-sync width discipline (DESIGN.md §3.2): the first descent
-    learns per-level widths with exact syncs; cached descents run sync-free;
-    a deliberately-poisoned (too narrow) cache must trigger the lossless
-    overflow retry and still return exact results and counters."""
+    """The batched-sync width discipline (DESIGN.md §3.2), now owned by the
+    explicit PlanCache: the first descent learns per-level widths with exact
+    syncs; cached descents run sync-free; a deliberately-poisoned (too
+    narrow) cache must trigger the lossless overflow retry and still return
+    exact results and counters."""
+    from repro.serve.plan import PlanCache
+
     ds = make_dataset("fs", n=2500, seed=5)
     index, clusters = _build_index(ds, g=8, levels=3)
     wl = make_workload(ds, m=16, dist="UNI", region_frac=0.2, n_keywords=4, seed=9)
     st = execute_serial(index, ds, wl)
-    bw = BatchedWisk.build(index, ds)
-    first = retrieve_workload(bw, wl, max_leaves=clusters.k, mode="frontier")
-    learned = dict(bw.width_cache)
+    bw = IndexSnapshot.build(index, ds)
+    cache = PlanCache()
+    first = retrieve_workload(bw, wl, max_leaves=clusters.k, mode="frontier", plan_cache=cache)
+    learned = dict(cache.widths)
     assert learned  # exact first descent populated the cache
+    assert cache.plan("skr", bw.n_levels - 1).widths is not None
     # cached descent: identical results, widths from the cache
-    cached = retrieve_workload(bw, wl, max_leaves=clusters.k, mode="frontier")
+    cached = retrieve_workload(bw, wl, max_leaves=clusters.k, mode="frontier", plan_cache=cache)
     for a, b in zip(_result_sets(first), _result_sets(cached)):
         np.testing.assert_array_equal(a, b)
     np.testing.assert_array_equal(cached["nodes_checked"], st.nodes_accessed)
     # poison every width to the minimum bucket: children would be dropped,
     # so the batched overflow check must fire and re-descend exactly
-    for key in list(bw.width_cache):
-        bw.width_cache[key] = 8
-    retried = retrieve_workload(bw, wl, max_leaves=clusters.k, mode="frontier")
+    for key in list(cache.widths):
+        cache.widths[key] = 8
+    retried = retrieve_workload(bw, wl, max_leaves=clusters.k, mode="frontier", plan_cache=cache)
     for got, want in zip(_result_sets(retried), st.results):
         np.testing.assert_array_equal(got, np.sort(want))
     np.testing.assert_array_equal(retried["nodes_checked"], st.nodes_accessed)
     np.testing.assert_array_equal(retried["verified"], st.verified)
-    assert dict(bw.width_cache) == learned  # retry re-learned the real widths
+    assert dict(cache.widths) == learned  # retry re-learned the real widths
+    # an independent cache starts unlearned: plans resolve to exact mode
+    assert PlanCache().plan("skr", bw.n_levels - 1).widths is None
 
 
 def test_bucketing_pads_are_inert():
@@ -201,7 +208,7 @@ def test_bucketing_pads_are_inert():
 
     ds = make_dataset("fs", n=1200, seed=12)
     index, clusters = _build_index(ds, g=5, levels=2)
-    bw = BatchedWisk.build(index, ds)
+    bw = IndexSnapshot.build(index, ds)
     wl = make_workload(ds, m=13, dist="MIX", seed=13)  # not a power of two
     rects, bms, m = pad_queries_to_bucket(wl.rects, wl.kw_bitmap)
     assert m == 13 and rects.shape[0] == 16

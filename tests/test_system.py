@@ -91,9 +91,9 @@ def test_hierarchy_reduces_node_accesses(built):
 
 def test_batched_engine_matches_serial(built):
     ds, _, test_wl, art = built
-    from repro.serve.engine import BatchedWisk, retrieve_workload
+    from repro.serve.engine import IndexSnapshot, retrieve_workload
 
-    bw = BatchedWisk.build(art.index, ds, dense=True)
+    bw = IndexSnapshot.build(art.index, ds, dense=True)
     st = execute_serial(art.index, ds, test_wl)
     for mode in ("frontier", "dense"):
         out = retrieve_workload(bw, test_wl, max_leaves=art.partition.clusters.k, mode=mode)
