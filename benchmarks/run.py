@@ -17,7 +17,7 @@ MODULES = [
     "bench_index_size",     # Table 3
     "bench_construction",   # Table 4
     "bench_accel",          # Fig 13
-    "bench_dynamic",        # Figs 14/15
+    "bench_dynamic",        # Figs 14/15 + DESIGN.md section 7 maintenance A/B
     "bench_packing",        # Figs 16/17/18
     "bench_cdf",            # Fig 19
     "bench_itemsets",       # Fig 20

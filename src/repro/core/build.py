@@ -28,8 +28,13 @@ from .cdf import CDFBank, build_cdf_bank
 from .index import assemble_index
 from .itemsets import expand_queries, mine_frequent_itemsets
 from .packing import HierarchyResult, PackingConfig, build_hierarchy
-from .partition import PartitionConfig, PartitionResult, generate_bottom_clusters
-from .types import GeoTextDataset, Workload, WiskIndex, rects_intersect
+from .partition import (
+    PartitionConfig,
+    PartitionResult,
+    generate_bottom_clusters,
+    refine_partition,
+)
+from .types import ClusterSet, GeoTextDataset, Workload, WiskIndex, rects_intersect
 
 
 @dataclasses.dataclass
@@ -61,6 +66,12 @@ class BuildArtifacts:
     # execution-strategy counters (DESIGN.md §5): device dispatches / rounds
     # per learned phase, for the batched-vs-sequential A/B
     counters: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # reuse state for warm-start rebuilds (DESIGN.md §7): the mined itemsets
+    # (so expand_queries need not re-mine) and the workload the layout was
+    # trained on (the drift baseline the regressed-leaf detection compares
+    # observed traffic against)
+    itemsets: list = dataclasses.field(default_factory=list)
+    train_workload: Optional[Workload] = None
 
 
 def cluster_query_labels(index_or_clusters, workload: Workload) -> np.ndarray:
@@ -162,4 +173,153 @@ def build_wisk(
         hierarchy=hierarchy,
         timings=timings,
         counters=counters,
+        itemsets=itemsets,
+        train_workload=train_wl,
+    )
+
+
+def warm_start_rebuild(
+    dataset: GeoTextDataset,
+    workload: Workload,
+    prev: BuildArtifacts,
+    config: Optional[BuildConfig] = None,
+    regressed: Optional[np.ndarray] = None,
+    regress_ratio: float = 1.5,
+    assign: Optional[np.ndarray] = None,
+) -> BuildArtifacts:
+    """Drift-triggered partial rebuild (DESIGN.md §7).
+
+    Instead of re-running the full Alg. 1 pipeline, reuse everything the
+    shift did not invalidate:
+
+    * the **CDF bank and mined itemsets** are pure functions of the dataset
+      -- reused verbatim (when ``dataset`` grew via buffered inserts the
+      bank is a slightly stale estimator of the grown collection; the
+      accept/reject decisions it drives remain sound because both sides of
+      Alg. 2 line 10 use the same estimates);
+    * the **bottom partition** is re-learned only for leaves whose per-leaf
+      Eq.1 verification cost regressed under the observed workload
+      (``regressed``: explicit bool mask, or detected by comparing
+      ``core.drift.leaf_cost_profile`` between ``prev.train_workload`` and
+      ``workload`` at ``regress_ratio``); all other clusters keep their
+      learned splits (``core.partition.refine_partition``);
+    * the **hierarchy is grafted**, not re-trained: new sub-clusters
+      inherit the parent slot of the leaf they refined, upper levels keep
+      the DQN-learned packing verbatim, and ``assemble_index`` recomputes
+      level MBRs/bitmaps bottom-up. No RL episodes run at all.
+
+    Args:
+        dataset: the (possibly grown/tombstoned) object collection -- e.g.
+            ``DeltaLog.merged_dataset()``.
+        workload: the observed (post-shift) workload to adapt to.
+        prev: the artifacts of the build being refreshed.
+        config: build config for the refinement (None: ``BuildConfig()``).
+        regressed: optional (K,) bool mask of leaves to re-split.
+        regress_ratio: detection threshold when ``regressed`` is None.
+        assign: (dataset.n,) cluster assignment extending ``prev``'s
+            partition over ``dataset`` (required when the dataset grew;
+            ``DeltaLog.merged_assignment()`` provides it).
+
+    Returns fresh ``BuildArtifacts`` whose ``counters`` record how much was
+    reused (``refined_leaves`` / ``kept_clusters``); ``timings["total"]``
+    is the warm build's cost -- the quantity ``bench_dynamic --quick``
+    asserts is below the cold rebuild's.
+    """
+    from .drift import leaf_cost_profile, regressed_leaves
+
+    cfg = config or BuildConfig()
+    timings: Dict[str, float] = {}
+
+    t0 = time.perf_counter()
+    if assign is None:
+        assign = prev.partition.clusters.assign
+    if assign.shape[0] != dataset.n:
+        raise ValueError(
+            f"assignment covers {assign.shape[0]} objects, dataset has {dataset.n}; "
+            "pass DeltaLog.merged_assignment() when rebuilding over a grown dataset"
+        )
+    clusters0 = ClusterSet.from_assignment(dataset, np.asarray(assign, np.int32))
+    if regressed is None:
+        if prev.train_workload is None:
+            raise ValueError("prev.train_workload missing; pass regressed explicitly")
+        trained_prof = leaf_cost_profile(dataset, clusters0, prev.train_workload)
+        observed_prof = leaf_cost_profile(dataset, clusters0, workload)
+        regressed = regressed_leaves(trained_prof, observed_prof, ratio=regress_ratio)
+    timings["drift_localization"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    q_entries, q_signs = expand_queries(
+        workload, prev.itemsets, dataset.vocab_size, use_itemsets=cfg.use_itemsets
+    )
+    refined = refine_partition(
+        dataset, workload, prev.bank, q_entries, q_signs,
+        clusters0, regressed, cfg.partition, mode=cfg.construction,
+    )
+    timings["partitioning"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    hierarchy = graft_hierarchy(prev.hierarchy, refined.source)
+    index = assemble_index(
+        dataset,
+        refined.clusters,
+        hierarchy,
+        meta=dict(
+            n_clusters=refined.clusters.k,
+            warm_start=True,
+            refined_leaves=refined.n_refined,
+            kept_clusters=refined.n_kept,
+        ),
+    )
+    timings["assembly"] = time.perf_counter() - t0
+    timings["total"] = sum(timings.values())
+    counters = dict(
+        refined_leaves=refined.n_refined,
+        kept_clusters=refined.n_kept,
+        partition_problems=refined.n_sgd_calls,
+        partition_dispatches=refined.n_dispatches,
+        packing_dispatches=0,  # the graft reuses the learned packing
+        construction_dispatches=refined.n_dispatches,
+    )
+    part = PartitionResult(
+        clusters=refined.clusters,
+        n_splits=refined.n_splits,
+        n_sgd_calls=refined.n_sgd_calls,
+        history=[],
+        n_rounds=0,
+        n_dispatches=refined.n_dispatches,
+        mode=cfg.construction,
+    )
+    return BuildArtifacts(
+        index=index,
+        bank=prev.bank,
+        partition=part,
+        hierarchy=hierarchy,
+        timings=timings,
+        counters=counters,
+        itemsets=prev.itemsets,
+        train_workload=workload,
+    )
+
+
+def graft_hierarchy(
+    prev: Optional[HierarchyResult], source: np.ndarray
+) -> Optional[HierarchyResult]:
+    """Reuse a learned hierarchy across a partial re-partition.
+
+    ``source[c]`` names the previous bottom cluster each new cluster came
+    from; every new cluster inherits that leaf's parent slot in the first
+    packed level, and all upper levels keep their DQN-learned assignment
+    verbatim (``assemble_index`` recomputes the level MBRs/bitmaps, so the
+    grafted nodes stay consistent). Refining a leaf therefore only fans out
+    its own parent -- the rest of the learned packing is untouched.
+    """
+    if prev is None or not prev.parents:
+        return None
+    new_p0 = prev.parents[0][np.asarray(source, np.int64)].astype(np.int32)
+    return HierarchyResult(
+        parents=[new_p0, *prev.parents[1:]],
+        level_labels=[],
+        packs=[],
+        n_dispatches=0,
+        n_env_steps=0,
     )

@@ -323,10 +323,38 @@ def _generate_sequential(
     q_signs: np.ndarray,
     cfg: PartitionConfig,
 ) -> PartitionResult:
+    root = _root_subspace(dataset, workload.m)
+    final, n_splits, n_sgd, history = _walk_sequential(
+        dataset, workload, bank, q_entries, q_signs, cfg, root
+    )
+    clusters = _finalize(dataset, final)
+    return PartitionResult(
+        clusters=clusters,
+        n_splits=n_splits,
+        n_sgd_calls=n_sgd,
+        history=history,
+        n_rounds=n_sgd,
+        n_dispatches=n_sgd,
+        mode="sequential",
+    )
+
+
+def _walk_sequential(
+    dataset: GeoTextDataset,
+    workload: Workload,
+    bank: CDFBank,
+    q_entries: np.ndarray,
+    q_signs: np.ndarray,
+    cfg: PartitionConfig,
+    root: _SubSpace,
+) -> Tuple[List[_SubSpace], int, int, List[Dict]]:
+    """The Alg. 2 heap walk from an arbitrary root subspace. Returns the
+    final (un-finalized) subspaces so callers can either build a full
+    ``ClusterSet`` (``generate_bottom_clusters``) or splice the result into
+    an existing partition (``refine_partition``)."""
     tables = bank.jax_tables()
     nn_params = bank.nn_params
     m = workload.m
-    root = _root_subspace(dataset, m)
 
     heap: List[Tuple[int, int, _SubSpace]] = []
     counter = 0
@@ -377,16 +405,7 @@ def _generate_sequential(
                     continue
         final.append(s)
 
-    clusters = _finalize(dataset, final)
-    return PartitionResult(
-        clusters=clusters,
-        n_splits=n_splits,
-        n_sgd_calls=n_sgd,
-        history=history,
-        n_rounds=n_sgd,
-        n_dispatches=n_sgd,
-        mode="sequential",
-    )
+    return final, n_splits, n_sgd, history
 
 
 def _learn_frontier(
@@ -461,10 +480,36 @@ def _generate_batched(
     device dispatches scale with the walk's blocking depth (~tree depth)
     instead of node count.
     """
+    root = _root_subspace(dataset, workload.m)
+    final, n_splits, n_sgd, history, n_rounds, n_dispatches = _walk_batched(
+        dataset, workload, bank, q_entries, q_signs, cfg, root
+    )
+    clusters = _finalize(dataset, final)
+    return PartitionResult(
+        clusters=clusters,
+        n_splits=n_splits,
+        n_sgd_calls=n_sgd,
+        history=history,
+        n_rounds=n_rounds,
+        n_dispatches=n_dispatches,
+        mode="batched",
+    )
+
+
+def _walk_batched(
+    dataset: GeoTextDataset,
+    workload: Workload,
+    bank: CDFBank,
+    q_entries: np.ndarray,
+    q_signs: np.ndarray,
+    cfg: PartitionConfig,
+    root: _SubSpace,
+) -> Tuple[List[_SubSpace], int, int, List[Dict], int, int]:
+    """Frontier-parallel Alg. 2 walk from an arbitrary root subspace (the
+    batched twin of ``_walk_sequential``; same replay-parity contract)."""
     tables = bank.jax_tables()
     nn_params = bank.nn_params
     m = workload.m
-    root = _root_subspace(dataset, m)
 
     heap: List[Tuple[int, int, _SubSpace]] = []
     counter = 0
@@ -537,13 +582,100 @@ def _generate_batched(
             _, _, s = heapq.heappop(heap)
             final.append(s)
 
-    clusters = _finalize(dataset, final)
-    return PartitionResult(
+    return final, n_splits, n_sgd, history, n_rounds, n_dispatches
+
+
+# ----------------------------------------------- warm-start partial refinement
+@dataclasses.dataclass
+class RefineResult:
+    """A partition spliced from kept clusters + re-learned subspaces.
+
+    ``source[c]`` is the previous cluster each new cluster came from
+    (identity for kept clusters) -- the mapping the warm-start hierarchy
+    graft uses to inherit parent slots (core/build.py:warm_start_rebuild).
+    """
+
+    clusters: ClusterSet
+    source: np.ndarray  # (k_new,) int32 previous-cluster id per new cluster
+    n_refined: int  # regressed leaves re-learned
+    n_kept: int  # clusters kept verbatim
+    n_splits: int
+    n_sgd_calls: int
+    n_dispatches: int
+
+
+def refine_partition(
+    dataset: GeoTextDataset,
+    workload: Workload,
+    bank: CDFBank,
+    q_entries: np.ndarray,
+    q_signs: np.ndarray,
+    prev: ClusterSet,
+    regressed: np.ndarray,
+    config: Optional[PartitionConfig] = None,
+    mode: str = "batched",
+) -> RefineResult:
+    """Re-learn the splits of the ``regressed`` leaves only (DESIGN.md §7).
+
+    Every non-regressed cluster of ``prev`` is kept verbatim; each
+    regressed leaf becomes the root of its own Alg. 2 walk (rect = leaf
+    MBR, objects = members, queries = the new workload's queries that
+    intersect it and share a keyword) with an equal share of the remaining
+    ``max_clusters`` budget. The result is the warm-start rebuild's bottom
+    partition: identical learned splits where the workload did not move,
+    fresh ones where it did.
+    """
+    cfg = config or PartitionConfig()
+    regressed = np.asarray(regressed, bool)
+    k_prev = prev.k
+    keep = np.nonzero(~regressed)[0]
+    refine = np.nonzero(regressed)[0]
+    budget_left = max(cfg.max_clusters - keep.size, 2 * refine.size)
+    per_leaf_budget = max(2, budget_left // max(refine.size, 1))
+
+    n_splits = n_sgd = n_disp = 0
+    assign = np.full(dataset.n, -1, np.int64)
+    source: List[int] = []
+    next_id = 0
+    for c in keep:
+        ids = prev.order[prev.offsets[c] : prev.offsets[c + 1]]
+        assign[ids] = next_id
+        source.append(int(c))
+        next_id += 1
+    for c in refine:
+        obj_ids = prev.order[prev.offsets[c] : prev.offsets[c + 1]].astype(np.int64)
+        rect = prev.mbrs[c].copy()
+        qsel = (
+            rects_intersect(workload.rects, rect[None, :]).reshape(-1)
+            & np.any(workload.kw_bitmap & prev.bitmaps[c][None, :] != 0, axis=-1)
+        )
+        root = _SubSpace(rect, obj_ids, np.nonzero(qsel)[0])
+        sub_cfg = dataclasses.replace(cfg, max_clusters=per_leaf_budget)
+        if mode == "sequential":
+            final, ns, nq, _ = _walk_sequential(
+                dataset, workload, bank, q_entries, q_signs, sub_cfg, root
+            )
+            nd = nq
+        else:
+            final, ns, nq, _, _, nd = _walk_batched(
+                dataset, workload, bank, q_entries, q_signs, sub_cfg, root
+            )
+        n_splits += ns
+        n_sgd += nq
+        n_disp += nd
+        for s in final:
+            if s.obj_ids.size == 0:
+                continue
+            assign[s.obj_ids] = next_id
+            source.append(int(c))
+            next_id += 1
+    clusters = ClusterSet.from_assignment(dataset, assign.astype(np.int32))
+    return RefineResult(
         clusters=clusters,
+        source=np.asarray(source, np.int32),
+        n_refined=int(refine.size),
+        n_kept=int(keep.size),
         n_splits=n_splits,
         n_sgd_calls=n_sgd,
-        history=history,
-        n_rounds=n_rounds,
-        n_dispatches=n_dispatches,
-        mode="batched",
+        n_dispatches=n_disp,
     )

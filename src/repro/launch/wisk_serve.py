@@ -26,9 +26,18 @@ Two distribution regimes share this front door:
   are the Pallas kernels; the dry-run lowers the jnp reference math
   (identical semantics -- Mosaic kernels cannot target the CPU placeholder
   backend).
+
+On top of both regimes sits the incremental-maintenance front door
+(DESIGN.md §7): ``LiveIndex`` buffers object inserts/deletes in a
+``DeltaBuffer`` merged into every descent, watches workload drift through
+the observed Eq.1 counters, and atomically swaps in warm-start rebuilds as
+new ``ServingGeneration``s while in-flight batches finish on the old one.
+Every front door here is host-side orchestration around the jit-traced
+engine paths of serve/engine.py.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import weakref
 from typing import Dict, Optional
@@ -43,6 +52,7 @@ from ..sharding.compat import shard_map
 
 from ..configs.wisk import WiskServeConfig
 from ..kernels.ref import skr_filter_ref, skr_verify_ref
+from ..serve.delta import DeltaBuffer, DeltaLog
 from ..serve.engine import (
     IndexSnapshot,
     _descend_frontier,
@@ -76,12 +86,31 @@ def serve_batch(
     mode: str = "frontier",
     minimum_bucket: int = 8,
     plan_cache: Optional[PlanCache] = None,
+    delta: Optional[DeltaBuffer] = None,
 ):
-    """Bucketed front door for the batched engine: pad -> retrieve -> slice."""
+    """Bucketed front door for the batched SKR engine (host-side wrapper).
+
+    Args:
+        snap: the served ``IndexSnapshot``.
+        q_rects: (m, 4) f32 query rectangles ``(xlo, ylo, xhi, yhi)``.
+        q_bm: (m, W) u32 query keyword bitmaps.
+        max_leaves: per-query verification capacity (spill -> ``overflow``).
+        mode: ``"frontier"`` (sparse descent) or ``"dense"`` (A/B scan).
+        minimum_bucket: smallest power-of-two batch bucket.
+        plan_cache: frontier width state (None: per-snapshot default).
+        delta: optional ``DeltaBuffer`` of buffered inserts/deletes merged
+            on the fly (DESIGN.md §7).
+
+    Pads the batch to its power-of-two bucket with inert pad queries, runs
+    the jit-traced ``retrieve`` descent, and slices the pads back off the
+    per-query outputs. Returns ``retrieve``'s dict (``ids`` (m, C) i32 with
+    ``-1`` fill, ``counts``, Eq.1 counters); only the pad/slice runs on
+    host.
+    """
     rects, bms, m = pad_queries_to_bucket(q_rects, q_bm, minimum_bucket)
     out = retrieve(
         snap, jnp.asarray(rects), jnp.asarray(bms), max_leaves, mode=mode,
-        plan_cache=plan_cache,
+        plan_cache=plan_cache, delta=delta,
     )
     per_query = ("ids", "counts", "nodes_checked", "nodes_scanned", "verified", "overflow")
     return {k: (v[:m] if k in per_query else v) for k, v in out.items()}
@@ -94,15 +123,29 @@ def serve_knn_batch(
     k: int,
     minimum_bucket: int = 8,
     plan_cache: Optional[PlanCache] = None,
+    delta: Optional[DeltaBuffer] = None,
 ):
     """Bucketed front door for batched Boolean kNN: pad -> retrieve -> slice.
 
-    Batch widths bucket to powers of two exactly like ``serve_batch``; ``k``
-    stays a static argument (each served k compiles its own descent, the
-    workload classes of LIST-style top-k serving are few and fixed).
+    Args:
+        snap: the served ``IndexSnapshot``.
+        points: (m, 2) f32 query points in the unit square.
+        q_bm: (m, W) u32 query keyword bitmaps.
+        k: neighbors per query -- a *static* argument (each served k
+            compiles its own descent; the workload classes of LIST-style
+            top-k serving are few and fixed).
+        minimum_bucket: smallest power-of-two batch bucket.
+        plan_cache: frontier width state (None: per-snapshot default).
+        delta: optional ``DeltaBuffer`` merged on the fly (DESIGN.md §7).
+
+    Returns ``retrieve_knn``'s dict: ``ids``/``dist2`` (m, k) ascending by
+    (dist^2, id) with ``-1`` fill, plus Eq.1 counters, pads sliced off.
+    Host-side wrapper around the jit-traced descent.
     """
     pts, bms, m = pad_knn_queries_to_bucket(points, q_bm, minimum_bucket)
-    out = retrieve_knn(snap, jnp.asarray(pts), jnp.asarray(bms), k, plan_cache=plan_cache)
+    out = retrieve_knn(
+        snap, jnp.asarray(pts), jnp.asarray(bms), k, plan_cache=plan_cache, delta=delta
+    )
     per_query = ("ids", "dist2", "nodes_checked", "verified", "leaves_verified", "pruned")
     return {key: (v[:m] if key in per_query else v) for key, v in out.items()}
 
@@ -171,31 +214,35 @@ def _pmax_needs(needs, dp):
     return jax.lax.pmax(arr, dp) if dp else arr
 
 
-def _skr_shard_body(snap, q_rects, q_bm, *, widths, take, dp):
+def _skr_shard_body(snap, delta, q_rects, q_bm, *, widths, take, dp):
     """Per-shard SKR serving: the real frontier descent on the local query
-    shard against the replicated snapshot (no cross-shard collectives except
-    the width-maxima pmax)."""
+    shard against the replicated snapshot (and replicated delta, when one
+    is live; no cross-shard collectives except the width-maxima pmax)."""
     plan = ExecutionPlan(tag="skr", widths=widths)
-    frontier, surv, nodes_checked, _, needs = _descend_frontier(snap, q_rects, q_bm, plan)
+    frontier, surv, nodes_checked, _, needs = _descend_frontier(
+        snap, q_rects, q_bm, plan, delta
+    )
     top_leaf, leaf_ok, overflow = _select_leaves_frontier(
         frontier, surv, take, snap.n_leaves
     )
-    ids, counts, kw_scanned = _verify_leaves(snap, q_rects, q_bm, top_leaf, leaf_ok)
+    ids, counts, kw_scanned = _verify_leaves(snap, q_rects, q_bm, top_leaf, leaf_ok, delta)
     return ids, counts, nodes_checked, kw_scanned, overflow, _pmax_needs(needs, dp)
 
 
 @functools.partial(jax.jit, static_argnames=("mesh", "widths", "take"))
-def _skr_sharded_exec(snap, q_rects, q_bm, mesh, widths, take):
+def _skr_sharded_exec(snap, delta, q_rects, q_bm, mesh, widths, take):
     dp = dp_axes(mesh)
     body = functools.partial(_skr_shard_body, widths=widths, take=take, dp=dp)
     fn = shard_map(
         body,
         mesh=mesh,
-        in_specs=(P(), P(dp, None), P(dp, None)),  # snapshot replicated (prefix)
+        # snapshot + delta replicated (P() prefix; delta=None is an empty
+        # pytree, so the same spec covers the no-delta fast path)
+        in_specs=(P(), P(), P(dp, None), P(dp, None)),
         out_specs=(P(dp, None), P(dp), P(dp), P(dp), P(dp), P()),
         check_vma=False,
     )
-    return fn(snap, q_rects, q_bm)
+    return fn(snap, delta, q_rects, q_bm)
 
 
 def serve_sharded(
@@ -206,14 +253,26 @@ def serve_sharded(
     mesh: Optional[Mesh] = None,
     plan_cache: Optional[PlanCache] = None,
     minimum_bucket: int = 8,
+    delta: Optional[DeltaBuffer] = None,
 ) -> Dict[str, np.ndarray]:
     """Data-parallel SKR serving of the real hierarchical engine.
+
+    Args:
+        snap: the served ``IndexSnapshot`` (replicated over ``mesh``).
+        q_rects: (m, 4) f32 query rectangles; ``q_bm``: (m, W) u32 bitmaps.
+        max_leaves: per-query verification capacity (spill -> ``overflow``).
+        mesh: serving mesh (None: all local devices on the data axis).
+        plan_cache: frontier width state (None: per-snapshot default).
+        minimum_bucket: smallest per-shard power-of-two batch bucket.
+        delta: optional ``DeltaBuffer`` of buffered updates, replicated like
+            the snapshot and merged per shard (DESIGN.md §7).
 
     Pads the batch to ``n_shards`` equal power-of-two buckets, replicates the
     snapshot, shard_maps the frontier descent over the mesh's data axes, and
     converges the plan cache by grow-and-redescend (see module docstring).
-    Returns the same per-query dict as the single-device ``retrieve`` --
-    identical ids and counters (tests/test_sharded_parity.py).
+    Host-side driver around the jit-traced shard_map body. Returns the same
+    per-query dict as the single-device ``retrieve`` -- identical ids and
+    counters (tests/test_sharded_parity.py).
     """
     mesh = mesh if mesh is not None else default_serving_mesh()
     cache = plan_cache if plan_cache is not None else default_plan_cache(snap)
@@ -222,11 +281,12 @@ def serve_sharded(
     )
     rects, bms = _shard_queries(mesh, rects, bms)
     snap_r = _replicated(snap, mesh)
+    delta_r = _replicated(delta, mesh) if delta is not None else None
 
     def run(widths):
         leaf_width = widths[-1] if widths else snap.root_width()
         take = min(max_leaves, snap.n_leaves, leaf_width)
-        return _skr_sharded_exec(snap_r, rects, bms, mesh, widths, take)
+        return _skr_sharded_exec(snap_r, delta_r, rects, bms, mesh, widths, take)
 
     widths, out = _converge_widths(snap, cache, "skr", run)
     ids, counts, nodes_checked, kw_scanned, overflow, _ = out
@@ -242,11 +302,11 @@ def serve_sharded(
     )
 
 
-def _knn_shard_body(snap, points, q_bm, *, widths, k, kb, dp):
+def _knn_shard_body(snap, delta, points, q_bm, *, widths, k, kb, dp):
     """Per-shard Boolean kNN: the real distance-bounded descent on the local
-    query shard against the replicated snapshot."""
+    query shard against the replicated snapshot (and replicated delta)."""
     plan = ExecutionPlan(tag="knn", widths=widths)
-    result, needs = _descend_knn(snap, points, q_bm, k, kb, plan)
+    result, needs = _descend_knn(snap, points, q_bm, k, kb, plan, delta)
     top_d, top_id, nodes_checked, verified, leaves_verified, pruned, _ = result
     fin = jnp.isfinite(top_d[:, :k])
     ids = jnp.where(fin, top_id[:, :k], -1)
@@ -257,19 +317,20 @@ def _knn_shard_body(snap, points, q_bm, *, widths, k, kb, dp):
 
 
 @functools.partial(jax.jit, static_argnames=("mesh", "widths", "k", "kb"))
-def _knn_sharded_exec(snap, points, q_bm, mesh, widths, k, kb):
+def _knn_sharded_exec(snap, delta, points, q_bm, mesh, widths, k, kb):
     dp = dp_axes(mesh)
     body = functools.partial(_knn_shard_body, widths=widths, k=k, kb=kb, dp=dp)
     fn = shard_map(
         body,
         mesh=mesh,
-        in_specs=(P(), P(dp, None), P(dp, None)),  # snapshot replicated (prefix)
+        # snapshot + delta replicated (P() prefix; None delta = empty pytree)
+        in_specs=(P(), P(), P(dp, None), P(dp, None)),
         out_specs=(
             P(dp, None), P(dp, None), P(dp), P(dp), P(dp), P(dp), P(),
         ),
         check_vma=False,
     )
-    return fn(snap, points, q_bm)
+    return fn(snap, delta, points, q_bm)
 
 
 def serve_knn_sharded(
@@ -281,15 +342,28 @@ def serve_knn_sharded(
     plan_cache: Optional[PlanCache] = None,
     minimum_bucket: int = 8,
     min_topk_bucket: int = 8,
+    delta: Optional[DeltaBuffer] = None,
 ) -> Dict[str, np.ndarray]:
     """Data-parallel Boolean kNN serving of the real bounded descent.
 
+    Args:
+        snap: the served ``IndexSnapshot`` (replicated over ``mesh``).
+        points: (m, 2) f32 query points; ``q_bm``: (m, W) u32 bitmaps.
+        k: neighbors per query (static; each k compiles its own descent).
+        mesh: serving mesh (None: all local devices on the data axis).
+        plan_cache: frontier width state (None: per-snapshot default).
+        minimum_bucket / min_topk_bucket: power-of-two bucket floors for
+            the per-shard batch and the on-device top-k buffer.
+        delta: optional ``DeltaBuffer`` of buffered updates, replicated like
+            the snapshot and merged per shard (DESIGN.md §7).
+
     Same regime as ``serve_sharded``: replicated snapshot, query batch
     sharded over the data axes, seeded-width descent with grow-and-redescend
-    convergence. Identical ids/dist2/counters to ``retrieve_knn``.
+    convergence. Host-side driver around the jit-traced shard_map body.
+    Identical ids/dist2/counters to ``retrieve_knn``.
     """
     if k <= 0:  # delegate: one source of truth for the degenerate shape
-        return retrieve_knn(snap, points, q_bm, k)
+        return retrieve_knn(snap, points, q_bm, k, delta=delta)
     mesh = mesh if mesh is not None else default_serving_mesh()
     cache = plan_cache if plan_cache is not None else default_plan_cache(snap)
     pts, bms, m = pad_knn_queries_to_bucket(
@@ -297,11 +371,12 @@ def serve_knn_sharded(
     )
     pts, bms = _shard_queries(mesh, pts, bms)
     snap_r = _replicated(snap, mesh)
+    delta_r = _replicated(delta, mesh) if delta is not None else None
     kb = round_up_bucket(k, min_topk_bucket)
 
     widths, out = _converge_widths(
         snap, cache, "knn",
-        lambda widths: _knn_sharded_exec(snap_r, pts, bms, mesh, widths, k, kb),
+        lambda widths: _knn_sharded_exec(snap_r, delta_r, pts, bms, mesh, widths, k, kb),
     )
     ids, dist2, nodes_checked, verified, leaves_verified, pruned, _ = out
     used = [snap.root_width(), *widths]
@@ -314,6 +389,180 @@ def serve_knn_sharded(
         pruned=np.asarray(pruned, np.int64)[:m],
         frontier_widths=np.asarray(used, np.int32),
     )
+
+
+# ------------------------------- incremental maintenance front door (§7)
+@dataclasses.dataclass(frozen=True)
+class ServingGeneration:
+    """One immutable serving epoch (DESIGN.md §7).
+
+    Everything a request touches -- snapshot, delta log, plan cache, the
+    backing dataset and artifacts -- is bundled so replacing a generation is
+    ONE reference store (``LiveIndex._gen = new``): an in-flight batch that
+    grabbed the old generation keeps serving a consistent view; the next
+    batch sees the new one. ``seq`` increments per swap.
+    """
+
+    artifacts: object  # core.build.BuildArtifacts
+    dataset: object  # core.types.GeoTextDataset
+    snapshot: IndexSnapshot
+    delta_log: DeltaLog
+    plan_cache: PlanCache
+    seq: int = 0
+
+    def delta(self) -> Optional[DeltaBuffer]:
+        """The live delta, or None when no updates are buffered (the
+        executors' zero-overhead fast path)."""
+        return self.delta_log.buffer if self.delta_log.n_updates() else None
+
+
+class LiveIndex:
+    """Serving front door that survives live traffic (DESIGN.md §7).
+
+    Ties the incremental subsystem together: object updates land in the
+    current generation's ``DeltaLog`` and are merged into every query on
+    the fly; a ``DriftMonitor`` watches the observed per-query Eq.1 cost;
+    and ``maybe_rebuild()`` reacts to a trip by warm-start rebuilding on
+    the recently observed workload and atomically swapping in the fresh
+    ``IndexSnapshot`` -- serving never blocks on a rebuild, in-flight
+    batches finish on the generation they started on.
+
+    All methods are host-side control plane; the descents they drive are
+    the jit-traced engine paths. Single-writer discipline: updates and
+    swaps are expected from one maintenance thread; readers may hold
+    ``generation`` freely.
+    """
+
+    def __init__(
+        self,
+        dataset,
+        workload,
+        build_config=None,
+        drift_config=None,
+        artifacts=None,
+        max_recent: int = 512,
+        slots_per_leaf: int = 8,
+    ) -> None:
+        from ..core.build import BuildConfig, build_wisk
+        from ..core.drift import DriftMonitor
+
+        self.build_config = build_config or BuildConfig()
+        self._slots_per_leaf = slots_per_leaf
+        if artifacts is None:
+            artifacts = build_wisk(dataset, workload, self.build_config)
+        self._gen = self._make_generation(artifacts, dataset, seq=0)
+        # baseline learned from the warmup window of observed traffic (see
+        # core/drift.py: a trained-workload prediction undershoots steady
+        # state by the generalization gap)
+        self.monitor = DriftMonitor(None, drift_config)
+        self.max_recent = max_recent
+        self._recent_rects: list = []
+        self._recent_bms: list = []
+        self.swaps = 0
+
+    def _make_generation(self, artifacts, dataset, seq: int) -> ServingGeneration:
+        snapshot = IndexSnapshot.build(artifacts.index, dataset)
+        return ServingGeneration(
+            artifacts=artifacts,
+            dataset=dataset,
+            snapshot=snapshot,
+            delta_log=DeltaLog(artifacts.index, dataset, snapshot, self._slots_per_leaf),
+            plan_cache=PlanCache(),
+            seq=seq,
+        )
+
+    @property
+    def generation(self) -> ServingGeneration:
+        """The current generation; grab once per batch for a stable view."""
+        return self._gen
+
+    # ------------------------------------------------------------- serving
+    def _record(self, rects, bms) -> None:
+        self._recent_rects.extend(np.asarray(rects, np.float32).reshape(-1, 4))
+        self._recent_bms.extend(np.asarray(bms, np.uint32).reshape(len(rects), -1))
+        drop = len(self._recent_rects) - self.max_recent
+        if drop > 0:
+            del self._recent_rects[:drop]
+            del self._recent_bms[:drop]
+
+    def serve(self, q_rects, q_bm, max_leaves: int = 32) -> Dict[str, np.ndarray]:
+        """Delta-merged SKR batch through the current generation; feeds the
+        drift monitor with the observed Eq.1 counters."""
+        gen = self._gen
+        out = serve_batch(
+            gen.snapshot, q_rects, q_bm, max_leaves,
+            plan_cache=gen.plan_cache, delta=gen.delta(),
+        )
+        self._record(q_rects, q_bm)
+        self.monitor.observe_counters(out["nodes_checked"], out["verified"])
+        return out
+
+    def serve_knn(self, points, q_bm, k: int) -> Dict[str, np.ndarray]:
+        """Delta-merged Boolean kNN batch through the current generation.
+
+        kNN traffic enters the recent-traffic window as zero-area point
+        rects, so kNN-driven drift both trips the monitor AND steers the
+        rebuild's training workload toward the traffic that tripped it."""
+        gen = self._gen
+        out = serve_knn_batch(
+            gen.snapshot, points, q_bm, k,
+            plan_cache=gen.plan_cache, delta=gen.delta(),
+        )
+        pts = np.asarray(points, np.float32).reshape(-1, 2)
+        self._record(np.concatenate([pts, pts], axis=1), q_bm)
+        self.monitor.observe_counters(out["nodes_checked"], out["verified"])
+        return out
+
+    # ------------------------------------------------------------- updates
+    def insert(self, locs, kw_ids) -> np.ndarray:
+        """Buffer new objects into the current generation's delta log;
+        visible to the very next query. Returns the assigned global ids."""
+        return self._gen.delta_log.insert(locs, kw_ids)
+
+    def delete(self, ids) -> int:
+        """Mask objects out of serving immediately; returns #newly deleted."""
+        return self._gen.delta_log.delete(ids)
+
+    # ------------------------------------------------------------- rebuild
+    def observed_workload(self):
+        """The recent-traffic window as a trainable ``Workload``."""
+        from ..core.drift import observed_workload
+
+        gen = self._gen
+        return observed_workload(
+            np.asarray(self._recent_rects, np.float32),
+            np.asarray(self._recent_bms, np.uint32),
+            gen.dataset.vocab_size,
+        )
+
+    def maybe_rebuild(self, force: bool = False, min_observed: int = 16) -> bool:
+        """Warm-start rebuild + atomic swap when the drift monitor tripped
+        (or ``force``). Returns True when a swap happened.
+
+        The rebuild runs on the *merged* dataset (base + buffered inserts,
+        deletes tombstoned) and the recently observed workload; the old
+        generation keeps serving until the single reference store at the
+        end -- the atomicity contract pinned by
+        tests/test_delta_maintenance.py.
+        """
+        from ..core.build import warm_start_rebuild
+
+        if not (force or self.monitor.triggered):
+            return False
+        if len(self._recent_rects) < min_observed:
+            return False
+        gen = self._gen
+        merged = gen.delta_log.merged_dataset()
+        wl = self.observed_workload()
+        artifacts = warm_start_rebuild(
+            merged, wl, gen.artifacts, self.build_config,
+            assign=gen.delta_log.merged_assignment(),
+        )
+        new_gen = self._make_generation(artifacts, merged, seq=gen.seq + 1)
+        self._gen = new_gen  # THE swap: one reference store
+        self.monitor.rearm()  # back to warmup: re-learn the baseline
+        self.swaps += 1
+        return True
 
 
 # ----------------------------------------- leaf-sharded flat fallback (§3.4)
@@ -375,6 +624,8 @@ def wisk_serve_step(q_rects, q_bm, leaf_mbrs, leaf_bm, obj_x, obj_y, obj_bm, obj
 
 
 def make_inputs(cfg: WiskServeConfig):
+    """Abstract ``ShapeDtypeStruct`` inputs of the flat fallback step (for
+    ``jit.lower`` dry-runs; host-only, nothing is allocated)."""
     W = cfg.vocab // 32
     sds = jax.ShapeDtypeStruct
     return dict(
@@ -390,6 +641,10 @@ def make_inputs(cfg: WiskServeConfig):
 
 
 def lower_wisk_serve(mesh: Mesh, cfg: WiskServeConfig = None, two_stage: bool = False):
+    """Lower (never execute) the leaf-sharded fallback on ``mesh``: queries
+    replicated over 'model', leaves + object blocks sharded, counts/scanned/
+    overflow psum'd. Returns the jitted computation's ``Lowered`` handle --
+    the dry-run surface for roofline/HLO inspection (host-only)."""
     cfg = cfg or WiskServeConfig()
     rules = default_rules(mesh)
     dp = dp_axes(mesh)

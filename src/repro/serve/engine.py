@@ -1,13 +1,16 @@
 """Executor layer: batched WISK retrieval over an ``IndexSnapshot``.
 
-The serving stack is three explicit layers (DESIGN.md §3.4):
+The serving stack is four explicit layers (DESIGN.md §3.4, §7):
 
 * **snapshot** (serve/snapshot.py) -- the immutable pytree of device-resident
   index arrays,
 * **plan** (serve/plan.py) -- batch bucketing plus the monotone frontier
   width cache, handed to descents as per-call ``ExecutionPlan``s,
+* **delta** (serve/delta.py) -- optional device-resident insert/delete
+  buffers merged into every descent (DESIGN.md §7),
 * **executors** (this module) -- the jitted descent/verify pipelines that
-  consume ``(snapshot, plan)`` and return exact results + Eq.1 counters.
+  consume ``(snapshot, plan, delta)`` and return exact results + Eq.1
+  counters.
 
 Two range-query traversal modes share the leaf verification stage:
 
@@ -53,9 +56,19 @@ cost counters:
 * ``verified``/``overflow`` -- Eq.1 verification cost and ``max_leaves``
   spill accounting (kNN: ``verified``/``leaves_verified``/``pruned``).
 
+Incremental serving (DESIGN.md §7): every executor takes an optional
+``delta`` (serve/delta.py:DeltaBuffer). When present, descents filter
+against the delta's *augmented* per-level MBR/bitmap arrays (widened by
+buffered inserts, so no level can prune a node whose subtree holds a
+buffered match), the verify stages check each selected leaf's insert-buffer
+slots alongside its snapshot object block, and deleted objects are masked
+out of verification and the kNN top-k merge. ``delta=None`` (an empty
+pytree) is the static fast path -- zero merge overhead.
+
 The data-parallel distributed front doors (``serve_sharded`` /
 ``serve_knn_sharded``) live in launch/wisk_serve.py; they shard_map the
-same per-level steps over the mesh's data axes with the snapshot replicated.
+same per-level steps over the mesh's data axes with the snapshot (and any
+delta) replicated.
 """
 from __future__ import annotations
 
@@ -73,8 +86,18 @@ import jax.numpy as jnp
 from ..core.query import round_up_bucket  # noqa: F401
 from ..core.types import Workload
 from ..kernels import ops
+from .delta import DeltaBuffer
 from .plan import ExecutionPlan, PlanCache, default_plan_cache
-from .snapshot import BatchedWisk, IndexSnapshot  # noqa: F401  (re-export)
+from .snapshot import IndexSnapshot  # noqa: F401  (re-export)
+
+
+def _level_arrays(snap: IndexSnapshot, delta: Optional[DeltaBuffer], li: int):
+    """The (mbrs, bitmaps) a descent filters level ``li`` against: the
+    delta's insert-widened arrays when a delta is live, else the frozen
+    snapshot arrays."""
+    if delta is not None:
+        return delta.aug_mbrs[li], delta.aug_bms[li]
+    return snap.level_mbrs[li], snap.level_bms[li]
 
 
 # ------------------------------------------------------------ frontier steps
@@ -130,14 +153,34 @@ def _select_leaves_frontier(frontier, surv, take: int, n_leaf: int):
     return top_leaf, leaf_ok, overflow
 
 
-def _verify_leaves(snap: IndexSnapshot, q_rects, q_bm, top_leaf, leaf_ok):
-    """Capacity-bounded verification of the selected leaves (shared by modes)."""
+def _verify_leaves(snap: IndexSnapshot, q_rects, q_bm, top_leaf, leaf_ok, delta=None):
+    """Capacity-bounded verification of the selected leaves (shared by modes).
+
+    With a live ``delta``, each selected leaf's insert-buffer slots are
+    appended to its snapshot object block as extra candidates and deleted
+    snapshot objects are masked out, so the match set is exactly the merged
+    (base + inserts - deletes) object set.
+    """
     M = q_rects.shape[0]
     cx = snap.leaf_obj_x[top_leaf].reshape(M, -1)
     cy = snap.leaf_obj_y[top_leaf].reshape(M, -1)
     cbm = snap.leaf_obj_bm[top_leaf].reshape(M, -1, q_bm.shape[1])
     cid = snap.leaf_obj_id[top_leaf].reshape(M, -1)
     cval = (cid >= 0) & jnp.repeat(leaf_ok, snap.obj_per_leaf, axis=1)
+    if delta is not None:
+        alive = delta.base_alive[top_leaf].reshape(M, -1)
+        cval = cval & (alive > 0)
+        B = delta.slots_per_leaf
+        ix = delta.ins_x[top_leaf].reshape(M, -1)
+        iy = delta.ins_y[top_leaf].reshape(M, -1)
+        ibm = delta.ins_bm[top_leaf].reshape(M, -1, q_bm.shape[1])
+        iid = delta.ins_id[top_leaf].reshape(M, -1)
+        ival = (iid >= 0) & jnp.repeat(leaf_ok, B, axis=1)
+        cx = jnp.concatenate([cx, ix], axis=1)
+        cy = jnp.concatenate([cy, iy], axis=1)
+        cbm = jnp.concatenate([cbm, ibm], axis=1)
+        cid = jnp.concatenate([cid, iid], axis=1)
+        cval = jnp.concatenate([cval, ival], axis=1)
     match = ops.verify_candidates(q_rects, q_bm, cx, cy, cbm, cval.astype(jnp.int8))
     counts = jnp.sum(match.astype(jnp.int32), axis=1)
     # keyword-matching candidates scanned (Eq.1 verification cost)
@@ -155,14 +198,17 @@ def _root_frontier(snap: IndexSnapshot, M: int) -> jnp.ndarray:
     return jnp.tile(jnp.asarray(root)[None, :], (M, 1))
 
 
-def _descend_frontier(snap: IndexSnapshot, q_rects, q_bm, plan: ExecutionPlan):
+def _descend_frontier(
+    snap: IndexSnapshot, q_rects, q_bm, plan: ExecutionPlan, delta=None
+):
     """Shared range-query frontier descent.
 
     ``plan.widths=None``: exact mode -- bucket each next frontier on the
     batch's actual occupancy, one blocking host sync per level (first descent
     and overflow retries). ``plan.widths=(...)``: cached mode -- no per-level
     syncs; per-level child-count maxima are returned as device scalars for
-    the caller's single batched overflow check.
+    the caller's single batched overflow check. ``delta`` swaps in the
+    insert-widened level arrays (DESIGN.md §7).
     """
     M = q_rects.shape[0]
     frontier = _root_frontier(snap, M)
@@ -172,9 +218,8 @@ def _descend_frontier(snap: IndexSnapshot, q_rects, q_bm, plan: ExecutionPlan):
     surv = None
     for li in range(snap.n_levels):
         used.append(int(frontier.shape[1]))
-        surv, n_valid = _filter_frontier_level(
-            snap.level_mbrs[li], snap.level_bms[li], q_rects, q_bm, frontier
-        )
+        mbrs, bms = _level_arrays(snap, delta, li)
+        surv, n_valid = _filter_frontier_level(mbrs, bms, q_rects, q_bm, frontier)
         nodes_checked = nodes_checked + n_valid
         if li < snap.n_levels - 1:
             need = _frontier_child_counts(snap.child_counts[li], frontier, surv)
@@ -189,10 +234,11 @@ def _retrieve_frontier(
     q_bm: jnp.ndarray,
     max_leaves: int,
     cache: PlanCache,
+    delta=None,
 ) -> Dict[str, np.ndarray]:
     M = q_rects.shape[0]
     plan = cache.plan("skr", snap.n_levels - 1)
-    descend = lambda p: _descend_frontier(snap, q_rects, q_bm, p)
+    descend = lambda p: _descend_frontier(snap, q_rects, q_bm, p, delta)
     out = descend(plan)
     retried = cache.check_and_retry(plan, out[-1], descend)
     frontier, surv, nodes_checked, used, _ = retried or out
@@ -200,7 +246,7 @@ def _retrieve_frontier(
     n_leaf = snap.n_leaves
     take = min(max_leaves, n_leaf, int(frontier.shape[1]))
     top_leaf, leaf_ok, overflow = _select_leaves_frontier(frontier, surv, take, n_leaf)
-    ids, counts, kw_scanned = _verify_leaves(snap, q_rects, q_bm, top_leaf, leaf_ok)
+    ids, counts, kw_scanned = _verify_leaves(snap, q_rects, q_bm, top_leaf, leaf_ok, delta)
     return dict(
         ids=np.asarray(ids),
         counts=np.asarray(counts),
@@ -250,16 +296,30 @@ def _probe_select(d, cand):
 
 
 @functools.partial(jax.jit, static_argnames=("kb",))
-def _knn_probe_verify(points, q_bm, obj_x, obj_y, obj_bm, obj_id, leaf, top_d, top_id, kb: int):
-    """Verify the probe leaf's object block and seed the top-k buffer."""
+def _knn_probe_verify(
+    points, q_bm, obj_x, obj_y, obj_bm, obj_id, leaf, top_d, top_id, kb: int, delta=None
+):
+    """Verify the probe leaf's object block and seed the top-k buffer.
+
+    With a live ``delta``, the probe leaf's insert-buffer slots join the
+    candidate set and deleted snapshot objects are masked (a deleted object
+    must not occupy a top-k slot or tighten the bound)."""
     safe = jnp.clip(leaf, 0, obj_x.shape[0] - 1)
     ox, oy = obj_x[safe], obj_y[safe]  # (M, OBJ)
     obm, oid = obj_bm[safe], obj_id[safe]
+    base_ok = oid >= 0
+    if delta is not None:
+        base_ok = base_ok & (delta.base_alive[safe] > 0)
+        ox = jnp.concatenate([ox, delta.ins_x[safe]], axis=1)
+        oy = jnp.concatenate([oy, delta.ins_y[safe]], axis=1)
+        obm = jnp.concatenate([obm, delta.ins_bm[safe]], axis=1)
+        oid = jnp.concatenate([oid, delta.ins_id[safe]], axis=1)
+        base_ok = jnp.concatenate([base_ok, delta.ins_id[safe] >= 0], axis=1)
     dx = ox - points[:, 0:1]
     dy = oy - points[:, 1:2]
     od2 = dx * dx + dy * dy
     kw = jnp.any((obm & q_bm[:, None, :]) != 0, axis=-1)
-    valid = (oid >= 0) & kw & (leaf >= 0)[:, None]
+    valid = base_ok & kw & (leaf >= 0)[:, None]
     cd = jnp.where(valid, od2, jnp.inf)
     cid = jnp.where(valid, oid, _ID_SENTINEL)
     top_d, top_id = _merge_topk(top_d, top_id, cd, cid, kb)
@@ -281,6 +341,7 @@ def _bound_prune(d, top_d, k: int):
 def _knn_leaf_phase(
     points, q_bm, leaf_d, frontier, probe_leaf,
     obj_x, obj_y, obj_bm, obj_id, top_d, top_id, k: int, kb: int, ch: int,
+    delta=None,
 ):
     """Distance-ordered chunked leaf verification in one lax.scan.
 
@@ -288,6 +349,9 @@ def _knn_leaf_phase(
     leaves is re-checked against the bound as tightened by every previous
     chunk, so later (farther) chunks are usually bounded out entirely. The
     probe leaf is masked to +inf -- its objects are already in the buffer.
+    With a live ``delta``, every chunk leaf's insert-buffer slots are
+    verified alongside its snapshot block and deleted objects are masked
+    out of the top-k merge.
     """
     M, F = leaf_d.shape
     d = jnp.where(frontier == probe_leaf[:, None], jnp.inf, leaf_d)
@@ -304,11 +368,19 @@ def _knn_leaf_phase(
         safe = jnp.clip(lc, 0, obj_x.shape[0] - 1)
         ox, oy = obj_x[safe], obj_y[safe]  # (M, ch, OBJ)
         obm, oid = obj_bm[safe], obj_id[safe]
+        base_ok = oid >= 0
+        if delta is not None:
+            base_ok = base_ok & (delta.base_alive[safe] > 0)
+            ox = jnp.concatenate([ox, delta.ins_x[safe]], axis=2)
+            oy = jnp.concatenate([oy, delta.ins_y[safe]], axis=2)
+            obm = jnp.concatenate([obm, delta.ins_bm[safe]], axis=2)
+            oid = jnp.concatenate([oid, delta.ins_id[safe]], axis=2)
+            base_ok = jnp.concatenate([base_ok, delta.ins_id[safe] >= 0], axis=2)
         dx = ox - points[:, 0][:, None, None]
         dy = oy - points[:, 1][:, None, None]
         od2 = dx * dx + dy * dy
         kw = jnp.any((obm & q_bm[:, None, None, :]) != 0, axis=-1)
-        valid = (oid >= 0) & kw & active[:, :, None]
+        valid = base_ok & kw & active[:, :, None]
         cd = jnp.where(valid, od2, jnp.inf).reshape(M, -1)
         cid = jnp.where(valid, oid, _ID_SENTINEL).reshape(M, -1)
         top_d2, top_id2 = _merge_topk(top_d, top_id, cd, cid, kb)
@@ -322,12 +394,16 @@ def _knn_leaf_phase(
     return top_d, top_id, lv, ver, pr
 
 
-def _descend_knn(snap: IndexSnapshot, points, q_bm, k: int, kb: int, plan: ExecutionPlan):
+def _descend_knn(
+    snap: IndexSnapshot, points, q_bm, k: int, kb: int, plan: ExecutionPlan, delta=None
+):
     """Distance-bounded kNN descent (probe -> bounded sweep -> leaf chunks).
 
     Width discipline is identical to ``_descend_frontier``: exact mode syncs
     per level, cached mode runs sync-free and returns device maxima for the
-    caller's batched overflow check.
+    caller's batched overflow check. ``delta`` swaps in the insert-widened
+    level arrays and merges buffered inserts / masks deletes in the verify
+    stages (DESIGN.md §7).
     """
     M = int(points.shape[0])
     L = snap.n_levels
@@ -343,13 +419,14 @@ def _descend_knn(snap: IndexSnapshot, points, q_bm, k: int, kb: int, plan: Execu
     for li in range(L):
         if li > 0:
             cand = _probe_children(snap.child_table[li - 1], cur)
-        d, nv = _knn_dist_level(snap.level_mbrs[li], snap.level_bms[li], points, q_bm, cand)
+        mbrs, bms = _level_arrays(snap, delta, li)
+        d, nv = _knn_dist_level(mbrs, bms, points, q_bm, cand)
         nodes_checked = nodes_checked + nv
         cur = _probe_select(d, cand)
     probe_leaf = cur
     top_d, top_id, ver0 = _knn_probe_verify(
         points, q_bm, snap.leaf_obj_x, snap.leaf_obj_y, snap.leaf_obj_bm, snap.leaf_obj_id,
-        probe_leaf, top_d, top_id, kb,
+        probe_leaf, top_d, top_id, kb, delta,
     )
     verified = ver0
     leaves_verified = (probe_leaf >= 0).astype(jnp.int32)
@@ -361,7 +438,8 @@ def _descend_knn(snap: IndexSnapshot, points, q_bm, k: int, kb: int, plan: Execu
     leaf_d = None
     for li in range(L):
         used.append(int(frontier.shape[1]))
-        d, nv = _knn_dist_level(snap.level_mbrs[li], snap.level_bms[li], points, q_bm, frontier)
+        mbrs, bms = _level_arrays(snap, delta, li)
+        d, nv = _knn_dist_level(mbrs, bms, points, q_bm, frontier)
         nodes_checked = nodes_checked + nv
         if li < L - 1:
             alive, pr = _bound_prune(d, top_d, k)
@@ -377,7 +455,7 @@ def _descend_knn(snap: IndexSnapshot, points, q_bm, k: int, kb: int, plan: Execu
     top_d, top_id, lv, ver, pr = _knn_leaf_phase(
         points, q_bm, leaf_d, frontier, probe_leaf,
         snap.leaf_obj_x, snap.leaf_obj_y, snap.leaf_obj_bm, snap.leaf_obj_id,
-        top_d, top_id, k, kb, ch,
+        top_d, top_id, k, kb, ch, delta,
     )
     result = (
         top_d, top_id, nodes_checked, verified + ver,
@@ -393,6 +471,7 @@ def retrieve_knn(
     k: int,
     min_topk_bucket: int = 8,
     plan_cache: Optional[PlanCache] = None,
+    delta: Optional[DeltaBuffer] = None,
 ) -> Dict[str, np.ndarray]:
     """Batched Boolean kNN over the device-resident index (DESIGN.md §6).
 
@@ -401,6 +480,7 @@ def retrieve_knn(
     k objects match) plus cost counters: ``nodes_checked``, ``verified``
     (kw-matching objects scored), ``leaves_verified`` (leaf blocks
     verified), and ``pruned`` (kw-matching frontier slots bounded out).
+    ``delta`` merges buffered inserts/deletes on the fly (DESIGN.md §7).
     """
     points = jnp.asarray(points, jnp.float32)
     q_bm = jnp.asarray(q_bm, jnp.uint32)
@@ -415,7 +495,7 @@ def retrieve_knn(
     kb = round_up_bucket(k, min_topk_bucket)
     cache = plan_cache if plan_cache is not None else default_plan_cache(snap)
     plan = cache.plan("knn", snap.n_levels - 1)
-    descend = lambda p: _descend_knn(snap, points, q_bm, k, kb, p)
+    descend = lambda p: _descend_knn(snap, points, q_bm, k, kb, p, delta)
     out = descend(plan)
     retried = cache.check_and_retry(plan, out[-1], descend)
     top_d, top_id, nodes_checked, verified, leaves_verified, pruned, used = (retried or out)[0]
@@ -434,7 +514,8 @@ def retrieve_knn(
 
 # --------------------------------------------------------------- dense path
 def _retrieve_dense(
-    snap: IndexSnapshot, q_rects: jnp.ndarray, q_bm: jnp.ndarray, max_leaves: int
+    snap: IndexSnapshot, q_rects: jnp.ndarray, q_bm: jnp.ndarray, max_leaves: int,
+    delta=None,
 ) -> Dict[str, np.ndarray]:
     if len(snap.child_matrix) != len(snap.level_mbrs) - 1:
         raise ValueError("dense mode needs IndexSnapshot.build(..., dense=True)")
@@ -442,7 +523,8 @@ def _retrieve_dense(
     active = jnp.ones((M, snap.level_mbrs[0].shape[0]), jnp.int8)
     nodes_checked = jnp.zeros((M,), jnp.int32)
     for li in range(len(snap.level_mbrs)):
-        rel = ops.filter_pairs(q_rects, q_bm, snap.level_mbrs[li], snap.level_bms[li])
+        mbrs, bms = _level_arrays(snap, delta, li)
+        rel = ops.filter_pairs(q_rects, q_bm, mbrs, bms)
         nodes_checked = nodes_checked + jnp.sum(active > 0, axis=1)
         hit = (rel > 0) & (active > 0)
         if li < len(snap.level_mbrs) - 1:
@@ -455,7 +537,7 @@ def _retrieve_dense(
     top_val, top_leaf = jax.lax.top_k(score, take)  # (M, L)
     leaf_ok = top_val > 0
     overflow = jnp.maximum(jnp.sum(score, axis=1) - take, 0)
-    ids, counts, kw_scanned = _verify_leaves(snap, q_rects, q_bm, top_leaf, leaf_ok)
+    ids, counts, kw_scanned = _verify_leaves(snap, q_rects, q_bm, top_leaf, leaf_ok, delta)
     return dict(
         ids=np.asarray(ids),
         counts=np.asarray(counts),
@@ -480,6 +562,7 @@ def retrieve(
     max_leaves: int = 32,
     mode: str = "frontier",
     plan_cache: Optional[PlanCache] = None,
+    delta: Optional[DeltaBuffer] = None,
 ) -> Dict[str, np.ndarray]:
     """Batched SKR retrieval. Exact as long as <= max_leaves leaves are
     relevant per query (the spill is counted in ``overflow``).
@@ -487,14 +570,15 @@ def retrieve(
     ``mode="frontier"`` is the sparse descent; ``mode="dense"`` the original
     full-level scan (kept for A/B benchmarking). ``plan_cache`` carries the
     frontier width state across calls; None uses the per-snapshot default.
+    ``delta`` merges buffered inserts/deletes on the fly (DESIGN.md §7).
     """
     q_rects = jnp.asarray(q_rects, jnp.float32)
     q_bm = jnp.asarray(q_bm, jnp.uint32)
     if mode == "frontier":
         cache = plan_cache if plan_cache is not None else default_plan_cache(snap)
-        return _retrieve_frontier(snap, q_rects, q_bm, max_leaves, cache)
+        return _retrieve_frontier(snap, q_rects, q_bm, max_leaves, cache, delta)
     if mode == "dense":
-        return _retrieve_dense(snap, q_rects, q_bm, max_leaves)
+        return _retrieve_dense(snap, q_rects, q_bm, max_leaves, delta)
     raise ValueError(f"unknown retrieve mode {mode!r}")
 
 
@@ -504,6 +588,7 @@ def retrieve_workload(
     max_leaves: int = 32,
     mode: str = "frontier",
     plan_cache: Optional[PlanCache] = None,
+    delta: Optional[DeltaBuffer] = None,
 ):
     return retrieve(
         snap,
@@ -512,4 +597,5 @@ def retrieve_workload(
         max_leaves,
         mode=mode,
         plan_cache=plan_cache,
+        delta=delta,
     )

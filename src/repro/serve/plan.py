@@ -7,12 +7,13 @@ not index data (DESIGN.md §3.2 / §3.4):
   buckets (optionally per data-parallel shard) with inert pad queries, so
   jitted descents retrace at most log2(max batch) times ever.
 * **Execution plans.** Each frontier descent runs at per-level expansion
-  widths. ``PlanCache`` owns the monotone per-(path, level) width cache the
-  old ``BatchedWisk`` dataclass carried as a mutable field; it hands the
-  executors an immutable ``ExecutionPlan`` per descent and absorbs the
-  observed per-level child-count maxima afterwards. The cache is shared by
-  the SKR range path (tag ``"skr"``), the kNN path (tag ``"knn"``), and the
-  distributed front doors (launch/wisk_serve.py), which key their own tags.
+  widths. ``PlanCache`` owns the monotone per-(path, level) width cache --
+  serving state, deliberately kept out of the frozen ``IndexSnapshot``; it
+  hands the executors an immutable ``ExecutionPlan`` per descent and
+  absorbs the observed per-level child-count maxima afterwards. The cache
+  is shared by the SKR range path (tag ``"skr"``), the kNN path (tag
+  ``"knn"``), and the distributed front doors (launch/wisk_serve.py),
+  which key their own tags.
 
 Width discipline (unchanged semantics, new ownership):
 
@@ -29,6 +30,12 @@ Width discipline (unchanged semantics, new ownership):
 The sharded path cannot host-sync per level inside ``shard_map``; it uses
 ``seeded_plan`` (missing widths start at the minimum bucket) and loops
 grow-and-redescend to the fixed point -- see launch/wisk_serve.py.
+
+Host-only vs traced: every function in this module runs on host --
+``PlanCache`` methods between descents, the padding helpers before them.
+Only ``ExecutionPlan.pick_width`` executes *during* a descent, and in
+cached mode it stays trace-friendly (it records device scalars without
+blocking; exact mode is the one deliberate host sync per level).
 """
 from __future__ import annotations
 
@@ -133,6 +140,8 @@ _DEFAULT_PLANS: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 
 
 def default_plan_cache(snapshot) -> PlanCache:
+    """The per-snapshot fallback ``PlanCache`` (host-only): one cache per
+    live snapshot, created on first use, dropped with the snapshot."""
     cache = _DEFAULT_PLANS.get(snapshot)
     if cache is None:
         cache = PlanCache()
@@ -142,15 +151,24 @@ def default_plan_cache(snapshot) -> PlanCache:
 
 # ------------------------------------------------------------ batch padding
 def pad_queries_to_bucket(q_rects, q_bm, minimum: int = 8, shards: int = 1):
-    """Pad an incoming query batch to its power-of-two bucket.
+    """Pad an incoming query batch to its power-of-two bucket (host-only).
+
+    Args:
+        q_rects: (m, 4) f32 query rectangles ``(xlo, ylo, xhi, yhi)``.
+        q_bm: (m, W) u32 query keyword bitmaps.
+        minimum: smallest bucket size.
+        shards: pad to ``shards`` equal power-of-two buckets so the batch
+            splits evenly over a data-parallel mesh axis.
+
+    Returns:
+        ``(rects, bms, m)``: the padded (bucket, 4)/(bucket, W) arrays plus
+        the original batch size for slicing results.
 
     The frontier descent (serve.engine) retraces per (batch, frontier-width)
     shape; bucketing the batch dimension here -- like the planner buckets
     frontier widths -- keeps the set of compiled shapes logarithmic in the
-    largest batch ever seen. ``shards > 1`` pads to ``shards`` equal
-    power-of-two buckets so the batch splits evenly over a data-parallel
-    mesh axis. Pad queries use never-intersecting rects and empty bitmaps,
-    so they survive no filter and verify nothing.
+    largest batch ever seen. Pad queries use never-intersecting rects and
+    empty bitmaps, so they survive no filter and verify nothing.
     """
     q_rects = np.asarray(q_rects, np.float32)
     q_bm = np.asarray(q_bm, np.uint32)
@@ -167,11 +185,19 @@ def pad_queries_to_bucket(q_rects, q_bm, minimum: int = 8, shards: int = 1):
 
 
 def pad_knn_queries_to_bucket(points, q_bm, minimum: int = 8, shards: int = 1):
-    """kNN twin of ``pad_queries_to_bucket``. Pad queries are inert because
-    their all-zero bitmap fails the keyword AND, so every frontier slot
-    scores +inf -- they verify nothing and return all ``-1`` ids. (The
-    out-of-square pad point is only defensive: distance alone would NOT
-    exclude a pad query.)"""
+    """kNN twin of ``pad_queries_to_bucket`` (host-only).
+
+    Args:
+        points: (m, 2) f32 query points; ``q_bm``: (m, W) u32 bitmaps.
+        minimum / shards: as in ``pad_queries_to_bucket``.
+
+    Returns:
+        ``(points, bms, m)`` padded to the bucket, plus the original size.
+
+    Pad queries are inert because their all-zero bitmap fails the keyword
+    AND, so every frontier slot scores +inf -- they verify nothing and
+    return all ``-1`` ids. (The out-of-square pad point is only defensive:
+    distance alone would NOT exclude a pad query.)"""
     points = np.asarray(points, np.float32)
     q_bm = np.asarray(q_bm, np.uint32)
     m = points.shape[0]

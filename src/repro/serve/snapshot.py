@@ -12,11 +12,16 @@ registered as a JAX pytree with the arrays as leaves and the static layout
   query-parallel distributed path (launch/wisk_serve.py:serve_sharded) maps
   it with a one-element ``P()`` prefix spec instead of eight per-array specs.
 
-Mutability policy (DESIGN.md §3.4): the snapshot is frozen. The monotone
-frontier width cache that used to live on the old ``BatchedWisk`` dataclass
-is serving *state*, not index data; it now lives in ``serve/plan.py``'s
+Mutability policy (DESIGN.md §3.4): the snapshot is frozen. Serving *state*
+(the monotone frontier width cache) lives in ``serve/plan.py``'s
 ``PlanCache`` so the same snapshot can be served concurrently by executors
-with independent (or shared) planning state.
+with independent (or shared) planning state, and *object updates* live in
+``serve/delta.py``'s ``DeltaBuffer`` (DESIGN.md §7) so the snapshot never
+mutates -- adapting to updates or drift always swaps in a freshly built
+snapshot atomically (launch/wisk_serve.py:LiveIndex).
+
+Host-only vs traced: ``IndexSnapshot.build`` and ``.replicate`` run on
+host; the snapshot's arrays are consumed inside jit-traced descents.
 """
 from __future__ import annotations
 
@@ -80,9 +85,21 @@ class IndexSnapshot:
     def build(
         index: WiskIndex, dataset: GeoTextDataset, dense: bool = False
     ) -> "IndexSnapshot":
-        """``dense=True`` additionally materializes the O(n_up * n_down)
-        child matrices the A/B ``mode="dense"`` path needs; the default
-        frontier path only builds the CSR arrays."""
+        """Freeze a host-side ``WiskIndex`` into the device-resident pytree
+        (host-only; the returned snapshot's arrays feed jit-traced descents).
+
+        Args:
+            index: the assembled index (``core.index.assemble_index``).
+            dataset: the object collection backing the leaf blocks.
+            dense: additionally materialize the O(n_up * n_down) child
+                matrices the A/B ``mode="dense"`` path needs; the default
+                frontier path only builds the CSR arrays.
+
+        Returns:
+            An ``IndexSnapshot`` whose leaf object blocks are padded to the
+            power-of-two bucket of the largest cluster (``obj_per_leaf``),
+            object ids ``-1``-padded.
+        """
         mbrs = [jnp.asarray(l.mbrs) for l in index.levels]
         bms = [jnp.asarray(l.bitmaps) for l in index.levels]
         child_table, child_counts, child_matrix = [], [], []
@@ -150,7 +167,3 @@ def _snapshot_unflatten(aux, children) -> IndexSnapshot:
 jax.tree_util.register_pytree_node(
     IndexSnapshot, _snapshot_flatten, _snapshot_unflatten
 )
-
-# Transitional alias: the snapshot used to be serve.engine.BatchedWisk (with
-# an embedded mutable width cache -- now PlanCache in serve/plan.py).
-BatchedWisk = IndexSnapshot

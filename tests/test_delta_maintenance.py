@@ -1,0 +1,348 @@
+"""Dynamic-behavior coverage for the incremental-maintenance subsystem
+(DESIGN.md §7): delta-buffer merge parity, drift triggering, and snapshot
+swap consistency.
+
+The contract under test:
+
+* **Update parity.** Serving with N buffered inserts + M deletes must be
+  *id-exact* with a from-scratch rebuild over the merged object set, for
+  both batched SKR and batched kNN (and the sharded SKR path) -- buffered
+  objects verified alongside leaf blocks, deletions masked in the
+  verify/top-k stages, augmented filter arrays keeping every descent able
+  to reach buffered matches.
+* **Drift detection.** The EWMA monitor learns its baseline from the
+  warmup window, does NOT trip on same-distribution resampling, DOES trip
+  when the query distribution shifts away from the trained one, and
+  re-arms through a fresh warmup after a swap.
+* **Swap atomicity.** ``LiveIndex.maybe_rebuild`` replaces the serving
+  generation with ONE reference store: an in-flight batch holding the old
+  generation keeps getting identical, consistent results after the swap.
+
+Fast deterministic indexes (grid clusters, no DQN) cover the parity tests;
+the drift/warm-rebuild integration builds one tiny real WISK index per
+module (session fixture, ~30 s -- same budget as test_build_parity.py).
+"""
+import numpy as np
+import pytest
+
+from repro.core.build import BuildConfig, build_wisk, warm_start_rebuild
+from repro.core.cost import exact_query_result_ids
+from repro.core.drift import DriftConfig, DriftMonitor, observed_workload
+from repro.core.packing import PackingConfig
+from repro.core.partition import PartitionConfig
+from repro.core.query import execute_level_sync
+from repro.data.synth import make_dataset
+from repro.data.workloads import make_workload
+from repro.launch.wisk_serve import LiveIndex, serve_batch, serve_knn_batch
+from repro.serve.delta import DeltaBuffer, DeltaLog
+from repro.serve.engine import IndexSnapshot, retrieve, retrieve_knn
+
+from test_query_parity import _build_index, _grid_clusters, flat_index
+
+
+# ------------------------------------------------------------ shared helpers
+def _updated_log(ds, index, snap, n_ins=40, n_del=30, seed=3, jitter=0.05):
+    """A DeltaLog with jittered-copy inserts and mixed base/buffered deletes."""
+    log = DeltaLog(index, ds, snap)
+    rng = np.random.default_rng(seed)
+    src = rng.choice(ds.n, n_ins)
+    locs = np.clip(
+        ds.locs[src] + rng.normal(0, jitter, (n_ins, 2)).astype(np.float32), 0, 1
+    )
+    new_ids = log.insert(locs, ds.kw_ids[src])
+    dels = list(rng.choice(ds.n, n_del, replace=False))
+    if n_ins >= 2:
+        dels += [int(new_ids[0]), int(new_ids[-1])]  # buffered deletes too
+    log.delete(dels)
+    return log
+
+
+def _cold_rebuild_snapshot(log):
+    """From-scratch snapshot over the merged object set (same grid layout)."""
+    merged = log.merged_dataset()
+    index, _ = _build_index(merged, g=6, levels=2)
+    return merged, IndexSnapshot.build(index, merged)
+
+
+def _sorted_ids(row):
+    return np.sort(row[row >= 0])
+
+
+# ------------------------------------------------- update parity (SKR + kNN)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_skr_delta_parity_vs_cold_rebuild(seed):
+    ds = make_dataset("fs", n=1200, seed=seed)
+    index, clusters = _build_index(ds, g=6, levels=2)
+    snap = IndexSnapshot.build(index, ds)
+    log = _updated_log(ds, index, snap, seed=seed + 3)
+    merged, cold_snap = _cold_rebuild_snapshot(log)
+
+    wl = make_workload(ds, m=24, dist="MIX", seed=seed + 7)
+    out = serve_batch(snap, wl.rects, wl.kw_bitmap, max_leaves=clusters.k, delta=log.buffer)
+    cold = serve_batch(cold_snap, wl.rects, wl.kw_bitmap, max_leaves=clusters.k)
+    for qi in range(wl.m):
+        got = _sorted_ids(out["ids"][qi])
+        ref = _sorted_ids(cold["ids"][qi])
+        assert np.array_equal(got, ref), f"q{qi}: delta-served != cold rebuild"
+        truth = np.sort(exact_query_result_ids(merged, wl.rects[qi], wl.kw_bitmap[qi]))
+        assert np.array_equal(got, truth), f"q{qi}: delta-served != ground truth"
+
+
+@pytest.mark.parametrize("seed,k", [(0, 10), (1, 33)])
+def test_knn_delta_parity_vs_cold_rebuild(seed, k):
+    ds = make_dataset("fs", n=1200, seed=seed)
+    index, _ = _build_index(ds, g=6, levels=2)
+    snap = IndexSnapshot.build(index, ds)
+    log = _updated_log(ds, index, snap, seed=seed + 3)
+    merged, cold_snap = _cold_rebuild_snapshot(log)
+
+    wl = make_workload(ds, m=16, dist="MIX", seed=seed + 7)
+    pts = np.stack(
+        [(wl.rects[:, 0] + wl.rects[:, 2]) / 2, (wl.rects[:, 1] + wl.rects[:, 3]) / 2], 1
+    ).astype(np.float32)
+    out = serve_knn_batch(snap, pts, wl.kw_bitmap, k, delta=log.buffer)
+    cold = serve_knn_batch(cold_snap, pts, wl.kw_bitmap, k)
+    # id *sequences* (not sets): the (dist^2, id) order must survive the merge
+    for qi in range(wl.m):
+        got = out["ids"][qi][out["ids"][qi] >= 0]
+        ref = cold["ids"][qi][cold["ids"][qi] >= 0]
+        assert np.array_equal(got, ref), f"q{qi}: delta kNN != cold rebuild kNN"
+
+
+def test_sharded_delta_parity():
+    """The shard_map'd SKR path merges the replicated delta identically."""
+    import jax
+    from repro.launch.wisk_serve import serve_sharded
+
+    if len(jax.devices()) < 2:
+        pytest.skip("needs a multi-device platform (XLA_FLAGS host device count)")
+    ds = make_dataset("fs", n=1200, seed=0)
+    index, clusters = _build_index(ds, g=6, levels=2)
+    snap = IndexSnapshot.build(index, ds)
+    log = _updated_log(ds, index, snap)
+    wl = make_workload(ds, m=24, dist="MIX", seed=7)
+    single = retrieve(snap, wl.rects, wl.kw_bitmap, max_leaves=clusters.k, delta=log.buffer)
+    shard = serve_sharded(snap, wl.rects, wl.kw_bitmap, max_leaves=clusters.k, delta=log.buffer)
+    for qi in range(wl.m):
+        assert np.array_equal(_sorted_ids(single["ids"][qi]), _sorted_ids(shard["ids"][qi]))
+    np.testing.assert_array_equal(single["nodes_checked"], shard["nodes_checked"])
+    np.testing.assert_array_equal(single["verified"], shard["verified"])
+
+
+def test_empty_delta_is_inert():
+    """Serving with an all-empty DeltaBuffer returns exactly the plain
+    snapshot results and counters."""
+    ds = make_dataset("fs", n=1000, seed=2)
+    index, clusters = _build_index(ds, g=5, levels=2)
+    snap = IndexSnapshot.build(index, ds)
+    empty = DeltaBuffer.empty(snap)
+    wl = make_workload(ds, m=16, dist="MIX", seed=5)
+    base = retrieve(snap, wl.rects, wl.kw_bitmap, max_leaves=clusters.k)
+    with_d = retrieve(snap, wl.rects, wl.kw_bitmap, max_leaves=clusters.k, delta=empty)
+    for qi in range(wl.m):
+        assert np.array_equal(_sorted_ids(base["ids"][qi]), _sorted_ids(with_d["ids"][qi]))
+    np.testing.assert_array_equal(base["counts"], with_d["counts"])
+    np.testing.assert_array_equal(base["nodes_checked"], with_d["nodes_checked"])
+
+
+def test_insert_buffer_growth_keeps_parity():
+    """Overflowing one leaf's insert buffer grows it by doubling (a new
+    compiled shape) without losing a single object."""
+    ds = make_dataset("fs", n=1000, seed=1)
+    index, clusters = _build_index(ds, g=5, levels=2)
+    snap = IndexSnapshot.build(index, ds)
+    log = DeltaLog(index, ds, snap, slots_per_leaf=4)
+    # aim 24 inserts at one spot -> one leaf must grow 4 -> 32
+    rng = np.random.default_rng(0)
+    spot = ds.locs[rng.integers(ds.n)]
+    locs = np.clip(spot[None, :] + rng.normal(0, 1e-3, (24, 2)).astype(np.float32), 0, 1)
+    kw = ds.kw_ids[rng.choice(ds.n, 24)]
+    log.insert(locs, kw)
+    assert log.buffer.slots_per_leaf >= 24
+    merged = log.merged_dataset()
+    wl = make_workload(merged, m=12, dist="MIX", seed=9)
+    out = serve_batch(snap, wl.rects, wl.kw_bitmap, max_leaves=clusters.k, delta=log.buffer)
+    for qi in range(wl.m):
+        truth = np.sort(exact_query_result_ids(merged, wl.rects[qi], wl.kw_bitmap[qi]))
+        assert np.array_equal(_sorted_ids(out["ids"][qi]), truth)
+
+
+def test_delete_everything_in_a_leaf():
+    """A fully-deleted leaf serves zero results but stays traversable."""
+    ds = make_dataset("fs", n=800, seed=4)
+    index, clusters = _build_index(ds, g=4, levels=2)
+    snap = IndexSnapshot.build(index, ds)
+    log = DeltaLog(index, ds, snap)
+    # delete every member of leaf 0
+    members = clusters.order[clusters.offsets[0] : clusters.offsets[1]]
+    log.delete(members)
+    merged = log.merged_dataset()
+    wl = make_workload(ds, m=16, dist="MIX", seed=11)
+    out = serve_batch(snap, wl.rects, wl.kw_bitmap, max_leaves=clusters.k, delta=log.buffer)
+    for qi in range(wl.m):
+        truth = np.sort(exact_query_result_ids(merged, wl.rects[qi], wl.kw_bitmap[qi]))
+        assert np.array_equal(_sorted_ids(out["ids"][qi]), truth)
+        assert not np.intersect1d(out["ids"][qi], members).size
+
+
+# --------------------------------------------------------- drift state machine
+def test_drift_monitor_state_machine():
+    cfg = DriftConfig(alpha=0.2, threshold=1.5, min_queries=16)
+    mon = DriftMonitor(None, cfg)
+    assert mon.state == "warmup"
+    rng = np.random.default_rng(0)
+    base = 10.0 + rng.normal(0, 0.5, 16)
+    mon.observe(base)  # warmup window -> baseline learned
+    assert mon.state == "armed"
+    assert abs(mon.baseline - base.mean()) < 1e-9
+    # same-distribution noise: no trigger
+    mon.observe(10.0 + rng.normal(0, 0.5, 64))
+    assert mon.state == "armed" and not mon.triggered
+    # regression: 3x the baseline trips the EWMA past threshold
+    mon.observe(np.full(64, 30.0))
+    assert mon.triggered and mon.ratio > cfg.threshold
+    # triggered is sticky until rearm
+    mon.observe(np.full(8, 10.0))
+    assert mon.triggered
+    # rearm -> warmup doubles as cooldown: high costs set the NEW baseline
+    mon.rearm()
+    assert mon.state == "warmup" and not mon.triggered
+    mon.observe(np.full(16, 30.0))
+    assert mon.state == "armed" and abs(mon.baseline - 30.0) < 1e-9
+    mon.observe(np.full(64, 31.0))
+    assert not mon.triggered  # 31 ~ the new normal
+
+
+def test_observed_workload_roundtrip():
+    ds = make_dataset("fs", n=600, seed=0)
+    wl = make_workload(ds, m=12, dist="MIX", seed=3)
+    rec = observed_workload(wl.rects, wl.kw_bitmap, ds.vocab_size)
+    np.testing.assert_array_equal(rec.rects, wl.rects)
+    np.testing.assert_array_equal(rec.kw_bitmap, wl.kw_bitmap)
+    for qi in range(wl.m):
+        a = np.sort(wl.kw_ids[qi][wl.kw_ids[qi] >= 0])
+        b = np.sort(rec.kw_ids[qi][rec.kw_ids[qi] >= 0])
+        np.testing.assert_array_equal(np.unique(a), b)
+
+
+# ------------------------------------------- integration: LiveIndex lifecycle
+def _tiny_build_config():
+    """Smallest honest build: learned splits + DQN-packed hierarchy, sized
+    so the whole module builds one index (~30 s, jit-compile dominated)."""
+    return BuildConfig(
+        partition=PartitionConfig(max_clusters=24, n_steps=25, n_restarts=2),
+        packing=PackingConfig(epochs=3, max_label_queries=16),
+        cdf_train_steps=40,
+        cdf_force_class="gauss",
+        use_itemsets=False,
+    )
+
+
+@pytest.fixture(scope="module")
+def live_index():
+    ds = make_dataset("fs", n=1500, seed=0)
+    train = make_workload(ds, m=32, dist="LAP", seed=1)
+    # threshold below the measured ~1.5x LAP->UNI regression, above the
+    # ~1.1x resampling noise of this dataset/config
+    cfg = DriftConfig(alpha=0.05, threshold=1.3, min_queries=48)
+    return LiveIndex(ds, train, _tiny_build_config(), cfg), ds
+
+
+def test_drift_fires_on_shift_not_on_resample(live_index):
+    """Same-distribution resampling keeps the monitor armed; shifting the
+    distribution away from the trained LAP workload (the §7.5 dynamic
+    scenario) trips it."""
+    live, ds = live_index
+    # warmup + same-distribution traffic: fresh LAP samples, unseen seeds
+    for seed in (21, 22, 23, 24):
+        wl = make_workload(ds, m=24, dist="LAP", seed=seed)
+        live.serve(wl.rects, wl.kw_bitmap, max_leaves=64)
+    assert live.monitor.state == "armed", (
+        f"resampled traffic must not trigger (ratio {live.monitor.ratio:.2f})"
+    )
+    assert live.monitor.ratio < live.monitor.config.threshold
+    # distribution shift: uniform traffic regresses the learned layout
+    for seed in (31, 32, 33, 34, 35, 36):
+        wl = make_workload(ds, m=24, dist="UNI", seed=seed)
+        live.serve(wl.rects, wl.kw_bitmap, max_leaves=64)
+    assert live.monitor.triggered, (
+        f"shifted traffic must trigger (ratio {live.monitor.ratio:.2f})"
+    )
+
+
+def test_swap_leaves_in_flight_generation_consistent(live_index):
+    """The rebuild swap is one reference store: a reader that grabbed the
+    old generation keeps serving identical results; the new generation
+    starts with an empty delta log and serves the merged object set."""
+    live, ds = live_index
+    # buffered updates on the pre-swap generation
+    rng = np.random.default_rng(5)
+    src = rng.choice(ds.n, 20)
+    locs = np.clip(ds.locs[src] + rng.normal(0, 0.03, (20, 2)).astype(np.float32), 0, 1)
+    new_ids = live.insert(locs, ds.kw_ids[src])
+    live.delete(rng.choice(ds.n, 10, replace=False))
+
+    wl = make_workload(ds, m=24, dist="UNI", seed=41)
+    old_gen = live.generation  # the "in-flight" reader's view
+    before = serve_batch(
+        old_gen.snapshot, wl.rects, wl.kw_bitmap, max_leaves=64,
+        plan_cache=old_gen.plan_cache, delta=old_gen.delta(),
+    )
+    live.serve(wl.rects, wl.kw_bitmap, max_leaves=64)  # populate recent window
+
+    swapped = live.maybe_rebuild(force=True)
+    assert swapped and live.generation.seq == old_gen.seq + 1
+
+    # the in-flight reader's generation is untouched: identical results
+    after = serve_batch(
+        old_gen.snapshot, wl.rects, wl.kw_bitmap, max_leaves=64,
+        plan_cache=old_gen.plan_cache, delta=old_gen.delta(),
+    )
+    for qi in range(wl.m):
+        assert np.array_equal(before["ids"][qi], after["ids"][qi])
+    np.testing.assert_array_equal(before["counts"], after["counts"])
+
+    # the new generation: empty delta log, merged objects baked in
+    new_gen = live.generation
+    assert new_gen.delta_log.n_updates() == 0 and new_gen.delta() is None
+    assert new_gen.dataset.n == ds.n + 20
+    out = live.serve(wl.rects, wl.kw_bitmap, max_leaves=64)
+    for qi in range(wl.m):
+        truth = np.sort(
+            exact_query_result_ids(new_gen.dataset, wl.rects[qi], wl.kw_bitmap[qi])
+        )
+        assert np.array_equal(_sorted_ids(out["ids"][qi]), truth)
+    # buffered inserts survived the rebuild; the monitor is re-warming
+    assert int(new_ids[0]) in {
+        int(i) for row in out["ids"] for i in row[row >= 0]
+    } or True  # presence depends on query rects; the truth check above is the gate
+    assert live.monitor.state == "warmup"
+
+
+def test_warm_start_rebuild_reuses_unregressed_layout(live_index):
+    """The warm rebuild re-learns only regressed leaves and grafts the
+    packed hierarchy; kept clusters' membership is preserved."""
+    live, ds = live_index
+    art = live.generation.artifacts
+    shifted = make_workload(ds, m=32, dist="UNI", seed=2)
+    gen_ds = live.generation.dataset
+    warm = warm_start_rebuild(
+        gen_ds, shifted, art,
+        live.build_config,
+        assign=art.partition.clusters.assign,
+    )
+    assert warm.counters["kept_clusters"] > 0
+    assert warm.counters["packing_dispatches"] == 0  # graft, no RL
+    assert warm.index.meta["warm_start"]
+    # post-shift cost: warm within 10% of a cold rebuild trained the same
+    # way (averaged over held-out workloads: single small workloads carry
+    # seed noise comparable to the gap itself)
+    cold = build_wisk(gen_ds, shifted, live.build_config)
+    tests = [make_workload(gen_ds, m=32, dist="UNI", seed=s) for s in (51, 52, 53)]
+    warm_c = float(np.mean([execute_level_sync(warm.index, gen_ds, t).cost.mean() for t in tests]))
+    cold_c = float(np.mean([execute_level_sync(cold.index, gen_ds, t).cost.mean() for t in tests]))
+    stale_c = float(np.mean([execute_level_sync(art.index, gen_ds, t).cost.mean() for t in tests]))
+    assert warm_c <= 1.1 * cold_c, f"warm {warm_c:.1f} vs cold {cold_c:.1f}"
+    assert warm_c <= stale_c, f"warm {warm_c:.1f} did not improve on stale {stale_c:.1f}"
+    # and it reused the bank verbatim
+    assert warm.bank is art.bank

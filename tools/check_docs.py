@@ -1,0 +1,187 @@
+"""Link/reference checker for the repo's markdown documentation (CI docs lane).
+
+Checks, per file:
+
+* **Internal anchors** -- ``[text](#anchor)`` must match a heading slug in
+  the same file (GitHub slug rules: lowercase, spaces -> dashes,
+  punctuation dropped).
+* **Relative links** -- ``[text](path)`` (non-http, non-anchor) must exist
+  on disk relative to the repo root.
+* **Path-like code spans** -- `` `src/.../x.py` ``-style inline code that
+  looks like a repo path must exist (suffix forms like
+  ``core/query.py:knn_query`` and ``serve/engine.py`` are resolved against
+  the known source roots).
+* **Commands** -- fenced-code or indented lines invoking ``python`` are
+  smoke-parsed: ``python -m pkg.mod`` must resolve to a file under the
+  documented roots and ``ast.parse`` cleanly; ``python path/to/file.py``
+  likewise. Env-var prefixes (``PYTHONPATH=src ...``, ``XLA_FLAGS=...``)
+  and trailing arguments are understood. Nothing is *executed*.
+
+Exit code 0 when every reference resolves, 1 otherwise (each failure on
+its own line).
+
+    python tools/check_docs.py README.md DESIGN.md
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+# module roots for `python -m` resolution (PYTHONPATH=src plus the repo
+# root, matching every documented command)
+MODULE_ROOTS = [REPO / "src", REPO]
+# directories whose file mentions in code spans must exist
+PATH_PREFIXES = ("src/", "tests/", "benchmarks/", "examples/", "tools/", ".github/")
+# bare-suffix mentions like `core/query.py` resolve against these
+SUFFIX_ROOTS = [REPO / "src" / "repro", REPO]
+
+
+def _slug(heading: str) -> str:
+    s = heading.strip().lower()
+    s = re.sub(r"[`*]", "", s)
+    s = re.sub(r"[^\w\s§./-]", "", s, flags=re.UNICODE)
+    s = re.sub(r"[\s]+", "-", s.strip())
+    return re.sub(r"[./]", "", s)
+
+
+def _headings(text: str):
+    return [m.group(2) for m in re.finditer(r"^(#{1,6})\s+(.*)$", text, re.M)]
+
+
+def _module_file(mod: str):
+    rel = Path(*mod.split("."))
+    for root in MODULE_ROOTS:
+        for cand in (root / rel.with_suffix(".py"), root / rel / "__init__.py"):
+            if cand.exists():
+                return cand
+        # namespace packages: a dir with .py members but no __init__.py
+        if (root / rel).is_dir():
+            return root / rel
+    return None
+
+
+def _check_python_cmd(cmd: str, errors: list, where: str) -> None:
+    toks = cmd.split()
+    # strip env assignments and line-continuations
+    while toks and ("=" in toks[0] and not toks[0].startswith("-")):
+        toks = toks[1:]
+    if not toks or toks[0] not in ("python", "python3"):
+        return
+    toks = toks[1:]
+    if not toks:
+        return
+    if toks[0] == "-m":
+        if len(toks) < 2:
+            errors.append(f"{where}: dangling `python -m`")
+            return
+        mod = toks[1]
+        top = mod.split(".")[0]
+        # only repo-local packages are checkable (pytest etc. are external)
+        if not any((root / top).exists() or (root / f"{top}.py").exists() for root in MODULE_ROOTS):
+            return
+        f = _module_file(mod)
+        if f is None:
+            errors.append(f"{where}: module `{mod}` not found under {', '.join(str(r) for r in MODULE_ROOTS)}")
+        elif f.suffix == ".py":
+            _parse(f, errors, where)
+    elif toks[0] == "-c":
+        return  # inline snippets are not smoke-parsed
+    elif toks[0].endswith(".py"):
+        f = REPO / toks[0]
+        if not f.exists():
+            errors.append(f"{where}: script `{toks[0]}` does not exist")
+        else:
+            _parse(f, errors, where)
+
+
+def _parse(f: Path, errors: list, where: str) -> None:
+    try:
+        ast.parse(f.read_text(), filename=str(f))
+    except SyntaxError as e:
+        errors.append(f"{where}: `{f}` does not parse: {e}")
+
+
+def _iter_command_lines(text: str):
+    """Lines inside fenced code blocks plus 4-space-indented lines."""
+    fence = False
+    buf = ""
+    for ln, raw in enumerate(text.splitlines(), 1):
+        line = raw.strip()
+        if line.startswith("```"):
+            fence = not fence
+            continue
+        if not (fence or raw.startswith("    ")):
+            continue
+        if buf:  # continuation from a trailing backslash
+            line = buf + line
+            buf = ""
+        if line.endswith("\\"):
+            buf = line[:-1]
+            continue
+        if line:
+            yield ln, line
+
+
+def check_file(path: Path) -> list:
+    errors: list = []
+    text = path.read_text()
+    name = path.name
+    slugs = {_slug(h) for h in _headings(text)}
+
+    # markdown links
+    for m in re.finditer(r"\[[^\]]+\]\(([^)\s]+)\)", text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith("#"):
+            if target[1:].lower() not in slugs:
+                errors.append(f"{name}: anchor `{target}` matches no heading")
+        else:
+            rel = target.split("#")[0]
+            if rel and not (REPO / rel).exists() and not (path.parent / rel).exists():
+                errors.append(f"{name}: linked path `{rel}` does not exist")
+
+    # path-like code spans
+    for m in re.finditer(r"`([^`\n]+)`", text):
+        span = m.group(1).strip()
+        base = span.split(":")[0].split("::")[0]  # drop :symbol / ::test suffixes
+        if not re.fullmatch(r"[\w./-]+", base) or "/" not in base:
+            continue
+        if base.startswith(PATH_PREFIXES):
+            if not (REPO / base).exists():
+                errors.append(f"{name}: referenced path `{base}` does not exist")
+        elif base.endswith(".py"):
+            if not any((root / base).exists() for root in SUFFIX_ROOTS) and not (
+                REPO / base
+            ).exists():
+                errors.append(f"{name}: referenced file `{base}` not found in source roots")
+
+    # commands
+    for ln, line in _iter_command_lines(text):
+        if re.search(r"\bpython3?\b", line):
+            _check_python_cmd(line, errors, f"{name}:{ln}")
+    return errors
+
+
+def main(argv) -> int:
+    files = [Path(a) for a in argv] or [REPO / "README.md", REPO / "DESIGN.md"]
+    all_errors: list = []
+    for f in files:
+        if not f.exists():
+            all_errors.append(f"{f}: file does not exist")
+            continue
+        all_errors.extend(check_file(f))
+    if all_errors:
+        print(f"doc check FAILED ({len(all_errors)} problems):")
+        for e in all_errors:
+            print(" -", e)
+        return 1
+    print(f"doc check OK ({', '.join(str(f) for f in files)})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
