@@ -8,7 +8,10 @@ with per-phase timings and round/dispatch counters.
 import time
 
 from . import common as C
-from repro.core.build import build_wisk
+from repro.core.build import BuildConfig, build_wisk
+from repro.core.dqn import DQNConfig
+from repro.core.packing import PackingConfig
+from repro.core.partition import PartitionConfig
 from repro.baselines.conventional import build_grid_index, build_str_rtree
 from repro.baselines.learned import build_floodt, build_lsti
 
@@ -16,6 +19,54 @@ from repro.baselines.learned import build_floodt, build_lsti
 def _notes(art) -> str:
     phases = {k: round(v, 2) for k, v in art.timings.items()}
     return f"phase_times={phases};counters={art.counters}"
+
+
+def _quick_config(**over) -> BuildConfig:
+    """Sub-minute build: fewer partition steps/restarts, two RL epochs."""
+    cfg = BuildConfig(
+        partition=PartitionConfig(max_clusters=12, n_steps=20, n_restarts=1),
+        packing=PackingConfig(epochs=2, max_label_queries=8, dqn=DQNConfig()),
+        cdf_train_steps=30,
+    )
+    for k, v in over.items():
+        setattr(cfg, k, v)
+    return cfg
+
+
+def run_quick():
+    """CI-sized Table 4: batched-vs-sequential construction A/B (with the
+    dispatch-reduction counter the §5 batching claim rests on) plus the
+    conventional baselines, on a ~1/4-scale dataset and quick build config."""
+    rows = []
+    ds = C.dataset("fs", 1200)
+    wl = C.workload("fs", 1200, 16, "MIX", 0.0005, 5, 113)
+
+    arts = {}
+    for mode in ("batched", "sequential"):
+        t0 = time.perf_counter()
+        arts[mode] = build_wisk(ds, wl, _quick_config(construction=mode))
+        name = "table4/wisk" if mode == "batched" else "table4/wisk-sequential"
+        rows.append(C.row(name, (time.perf_counter() - t0) * 1e6, _notes(arts[mode])))
+    ratio = arts["sequential"].counters["construction_dispatches"] / max(
+        arts["batched"].counters["construction_dispatches"], 1
+    )
+    rows.append(
+        C.row(
+            "table4/dispatch-reduction",
+            0.0,
+            f"sequential={arts['sequential'].counters['construction_dispatches']};"
+            f"batched={arts['batched'].counters['construction_dispatches']};"
+            f"ratio={ratio:.1f}x",
+        )
+    )
+    for name, fn in (
+        ("grid", lambda: build_grid_index(ds, 8)),
+        ("str-rtree", lambda: build_str_rtree(ds)),
+    ):
+        t0 = time.perf_counter()
+        fn()
+        rows.append(C.row(f"table4/{name}", (time.perf_counter() - t0) * 1e6, ""))
+    return rows
 
 
 def run():

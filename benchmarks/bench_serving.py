@@ -42,13 +42,38 @@ from repro.serve.plan import PlanCache
 SWEEP_M = 256  # sharded-sweep batch: large enough to give every shard work
 
 
-def _time_mode(bw, test, max_leaves, mode, reps=3):
-    out = retrieve_workload(bw, test, max_leaves=max_leaves, mode=mode)  # warm
+def _time_mode(bw, test, max_leaves, mode, reps=3, fused=None):
+    out = retrieve_workload(bw, test, max_leaves=max_leaves, mode=mode, fused=fused)  # warm
     t0 = time.perf_counter()
     for _ in range(reps):
-        out = retrieve_workload(bw, test, max_leaves=max_leaves, mode=mode)
+        out = retrieve_workload(bw, test, max_leaves=max_leaves, mode=mode, fused=fused)
     dt = (time.perf_counter() - t0) / reps / test.m * 1e6
     return dt, out
+
+
+def _ab_fused(rows, snap, test, max_leaves, reps=3):
+    """Fused vs unfused leaf verification A/B (DESIGN.md §3.5): same frontier
+    descent, the leaf gather+verify either fused in one Pallas kernel or
+    bounced through HBM as the gathered candidate plane. Ids and Eq.1
+    counters must be identical (asserted); only the wall clock may differ."""
+    dt_u, out_u = _time_mode(snap, test, max_leaves, "frontier", reps, fused=False)
+    dt_f, out_f = _time_mode(snap, test, max_leaves, "frontier", reps, fused=True)
+    for key in ("ids", "counts", "verified", "overflow"):
+        assert np.array_equal(np.asarray(out_u[key]), np.asarray(out_f[key])), (
+            f"fused/unfused {key} mismatch"
+        )
+    rows.append(
+        C.row("serving/verify-unfused", dt_u,
+              f"verified={int(out_u['verified'].sum())}")
+    )
+    rows.append(
+        C.row("serving/verify-fused", dt_f,
+              f"verified={int(out_f['verified'].sum())}")
+    )
+    rows.append(
+        C.row("serving/fused-speedup", 0.0, f"speedup={dt_u / dt_f:.2f}x")
+    )
+    return rows
 
 
 def _mesh_over(n: int):
@@ -115,9 +140,10 @@ def _sweep_sharded(rows, snap, test, max_leaves, reps=3):
 
 
 def run_quick():
-    """CI smoke: deterministic grid hierarchy (no DQN build), sharded sweep
-    only -- asserts sharded-vs-single-device parity on every mesh size and
-    that aggregate throughput scales (>1x) from 1 device to the full mesh."""
+    """CI smoke: deterministic grid hierarchy (no DQN build), the fused-vs-
+    unfused verification A/B (identical ids/counters asserted), and the
+    sharded sweep -- asserts sharded-vs-single-device parity on every mesh
+    size and that aggregate throughput scales (>1x) from 1 to full mesh."""
     import jax
 
     from repro.core.index import assemble_index
@@ -140,7 +166,8 @@ def run_quick():
     index = assemble_index(ds, clusters, hier)
     snap = IndexSnapshot.build(index, ds)
     test = make_workload(ds, m=SWEEP_M, dist="MIX", seed=7)
-    rows, scale = _sweep_sharded([], snap, test, max_leaves=clusters.k)
+    rows = _ab_fused([], snap, test, max_leaves=clusters.k)
+    rows, scale = _sweep_sharded(rows, snap, test, max_leaves=clusters.k)
     if len(jax.devices()) > 1:
         assert scale > 1.0, f"no aggregate throughput scaling: {scale:.2f}x"
     return rows
@@ -181,6 +208,7 @@ def run():
         )
     us, st = C.time_queries(art.index, ds, test)
     rows.append(C.row("serving/serial-host", us, f"cost={st.total_cost:.0f}"))
+    rows = _ab_fused(rows, bw, test, max_leaves)
 
     sweep = C.workload("fs", C.DEFAULT_N, SWEEP_M, "MIX", 0.0005, 5, 25)
     # frontier-only snapshot for the sweep: the dense A/B adjacency matrices

@@ -4,12 +4,25 @@ Benchmark scale is laptop-sized (single CPU core): datasets of a few
 thousand objects, workloads of tens of queries. Relative orderings (the
 paper's claims) are what we measure; EXPERIMENTS.md maps each benchmark to
 its paper table/figure.
+
+Every measurement is a ``Record`` (``row()`` constructs one): it prints as
+the historical ``name,us_per_call,derived`` CSV row, and it serializes to
+the persistent scoreboard's JSON schema (EXPERIMENTS.md section Scoreboard)
+-- structured name / wall-us / parsed derived counters plus the run's config
+fingerprint, git sha, and date, so committed ``BENCH_*.json`` baselines can
+be diffed mechanically by tools/bench_compare.py.
 """
 from __future__ import annotations
 
+import dataclasses
+import datetime
+import hashlib
+import json
+import re
+import subprocess
 import time
 from functools import lru_cache
-from typing import Dict, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -69,5 +82,120 @@ def time_queries(index, ds, wl, reps: int = 3) -> Tuple[float, object]:
     return dt / wl.m * 1e6, st
 
 
-def row(name: str, us: float, derived: str = "") -> str:
-    return f"{name},{us:.2f},{derived}"
+# --------------------------------------------- persistent scoreboard records
+SCHEMA_VERSION = 1
+
+# key=value tokens inside a derived string; values may be bracketed lists
+# ("widths=[8,16]") or braced dicts, else run to the next ';'/whitespace
+_DERIVED_TOKEN = re.compile(r"(\w+)=((?:\[[^\]]*\])|(?:\{[^}]*\})|[^;\s]+)")
+_INT = re.compile(r"^-?\d+$")
+_FLOAT = re.compile(r"^-?\d+(?:\.\d+)?(?:[eE]-?\d+)?x?$")
+
+
+def _coerce(value: str):
+    """int / float (``1.23x`` ratios included) / verbatim string."""
+    if _INT.match(value):
+        return int(value)
+    if _FLOAT.match(value):
+        return float(value[:-1] if value.endswith("x") else value)
+    return value
+
+
+def parse_derived(derived: str) -> Dict[str, object]:
+    """The ``key=value`` tokens of a derived string as a typed dict.
+
+    Free text between tokens (units, caveat parentheticals) is dropped --
+    it is commentary for the CSV reader, not scoreboard data.
+    """
+    return {k: _coerce(v) for k, v in _DERIVED_TOKEN.findall(derived or "")}
+
+
+@dataclasses.dataclass
+class Record:
+    """One benchmark measurement.
+
+    ``str(record)`` is the historical ``name,us_per_call,derived`` CSV row
+    (every bench module's ``main()`` prints rows verbatim); ``to_json()``
+    is the scoreboard form with the derived counters parsed into a dict.
+    """
+
+    name: str
+    us_per_call: float
+    derived: str = ""
+
+    def __str__(self) -> str:
+        return f"{self.name},{self.us_per_call:.2f},{self.derived}"
+
+    @property
+    def derived_dict(self) -> Dict[str, object]:
+        return parse_derived(self.derived)
+
+    def to_json(self) -> Dict[str, object]:
+        return {
+            "name": self.name,
+            "us_per_call": round(float(self.us_per_call), 2),
+            "derived": self.derived_dict,
+            "derived_raw": self.derived,
+        }
+
+
+def row(name: str, us: float, derived: str = "") -> Record:
+    return Record(name, float(us), derived)
+
+
+def git_sha() -> str:
+    """The repo's HEAD sha (short), or "unknown" outside a git checkout."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10, check=True,
+        )
+        return out.stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def run_config(quick: bool = False) -> Dict[str, object]:
+    """The knobs that shape every benchmark's numbers -- the scoreboard's
+    comparability fingerprint. Two runs whose fingerprints differ must not
+    be diffed for regressions (bench_compare refuses)."""
+    import jax
+
+    return {
+        "profile": "fs",
+        "default_n": DEFAULT_N,
+        "default_m": DEFAULT_M,
+        "quick": bool(quick),
+        "backend": jax.default_backend(),
+        "device_count": len(jax.devices()),
+        "jax": jax.__version__,
+    }
+
+
+def config_fingerprint(config: Dict[str, object]) -> str:
+    return hashlib.sha1(
+        json.dumps(config, sort_keys=True).encode()
+    ).hexdigest()[:12]
+
+
+def scoreboard_payload(module: str, records: List[Record], quick: bool = False,
+                       elapsed_s: float = 0.0) -> Dict[str, object]:
+    """The ``BENCH_<module>.json`` document (schema SCHEMA_VERSION)."""
+    config = run_config(quick)
+    return {
+        "schema": SCHEMA_VERSION,
+        "module": module,
+        "git_sha": git_sha(),
+        "date": datetime.datetime.now(datetime.timezone.utc)
+        .strftime("%Y-%m-%dT%H:%M:%SZ"),
+        "config": config,
+        "config_fingerprint": config_fingerprint(config),
+        "elapsed_s": round(float(elapsed_s), 2),
+        "records": [r.to_json() for r in records],
+    }
+
+
+def write_scoreboard(path, payload: Dict[str, object]) -> None:
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=False)
+        f.write("\n")

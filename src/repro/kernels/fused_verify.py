@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: fused leaf gather + candidate verification.
+
+The unfused serving hot path bounces the leaf-verification operands through
+HBM three times per batch: the frontier kernel writes the (M, F) survivor
+matrix, the host-side trace gathers the selected leaves' object blocks into
+a dense ``(M, take*OBJ)`` candidate plane -- the bitmap slab alone is
+``(M, take*OBJ, W)`` u32, by far the biggest intermediate of a descent --
+and ``skr_verify`` streams that plane back in. This kernel consumes the
+survivor-derived leaf selection directly and performs the gather INSIDE the
+kernel: per query tile it walks the selected leaf slots, pulls each leaf's
+object block (``leaf_obj_x/y/bm/id``) out of the VMEM-resident bank, and
+verifies it in place, so the gathered candidate plane never exists in HBM.
+
+Outputs are bit-identical to ``gather -> skr_verify`` (same candidate
+ordering: leaf-slot-major, ``-1`` at non-matches), pinned by the ref-oracle
+sweep in tests/test_kernels.py and the engine-level fused/unfused parity
+suite in tests/test_query_parity.py:
+
+* ``ids``  (M, T*OBJ) int32 -- matching object ids, ``-1`` elsewhere;
+* ``kwv``  (M, T)     int32 -- per leaf slot, the count of keyword-matching
+  valid candidates (the Eq.1 ``verified`` partial sums).
+
+Layout notes (TPU): the object bank is mapped whole into the kernel
+(``(K, OBJ)`` / ``(K, OBJ, W)`` blocks, index map pinned to 0), i.e. the
+kernel targets indexes whose leaf bank fits VMEM -- the single-chip serving
+regime this repo's quick configs exercise. The static T loop keeps only one
+leaf slot's ``(BM, OBJ, W)`` bitmap slab live at a time. For banks beyond
+VMEM the same kernel body works with a scalar-prefetched leaf-id grid
+(one DMA per (query, slot) block); that variant is future work gated on the
+scoreboard (EXPERIMENTS.md section Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_verify_kernel(
+    q_rects_ref, q_bm_ref, top_leaf_ref, leaf_ok_ref,
+    ox_ref, oy_ref, obm_ref, oid_ref, ids_ref, kwv_ref,
+):
+    qr = q_rects_ref[...]  # (BM, 4)
+    qb = q_bm_ref[...]  # (BM, W) uint32
+    tl = top_leaf_ref[...]  # (BM, T) int32
+    ok = leaf_ok_ref[...] > 0  # (BM, T)
+    ox = ox_ref[...]  # (K, OBJ) -- VMEM-resident bank
+    oy = oy_ref[...]
+    obm = obm_ref[...]  # (K, OBJ, W)
+    oid = oid_ref[...]
+    K = ox.shape[0]
+    OBJ = ox.shape[1]
+    W = qb.shape[1]
+    safe = jnp.clip(tl, 0, K - 1)
+    for t in range(tl.shape[1]):  # static unroll over selected leaf slots
+        leaf = safe[:, t]  # (BM,)
+        cx = ox[leaf]  # (BM, OBJ) in-VMEM gather -- never round-trips HBM
+        cy = oy[leaf]
+        cid = oid[leaf]
+        inr = (
+            (cx >= qr[:, 0:1])
+            & (cx <= qr[:, 2:3])
+            & (cy >= qr[:, 1:2])
+            & (cy <= qr[:, 3:4])
+        )  # (BM, OBJ)
+        cbm = obm[leaf]  # (BM, OBJ, W): one slot's bitmap slab live at a time
+        kw = jnp.zeros(inr.shape, dtype=jnp.bool_)
+        for w in range(W):  # skr_verify's static word unroll
+            kw = kw | ((cbm[:, :, w] & qb[:, w][:, None]) != 0)
+        valid = (cid >= 0) & ok[:, t][:, None]
+        match = inr & kw & valid
+        ids_ref[:, t * OBJ : (t + 1) * OBJ] = jnp.where(match, cid, -1)
+        kwv_ref[:, t] = jnp.sum(kw & valid, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def fused_verify(
+    q_rects: jax.Array,  # (M, 4) f32
+    q_bm: jax.Array,  # (M, W) u32
+    top_leaf: jax.Array,  # (M, T) int32 selected leaf ids
+    leaf_ok: jax.Array,  # (M, T) int8 (1 = slot holds a selected leaf)
+    obj_x: jax.Array,  # (K, OBJ) f32 leaf object bank
+    obj_y: jax.Array,  # (K, OBJ) f32
+    obj_bm: jax.Array,  # (K, OBJ, W) u32
+    obj_id: jax.Array,  # (K, OBJ) int32, -1 pad
+    bm: int = 8,
+    interpret: bool = False,
+):
+    """(ids (M, T*OBJ) i32, kwv (M, T) i32): fused gather+verify over the
+    leaf bank. Query rows padded to tile multiples by ops.py."""
+    M, T = top_leaf.shape
+    K, OBJ = obj_x.shape
+    W = q_bm.shape[1]
+    bm = min(bm, M)
+    grid = (pl.cdiv(M, bm),)
+    return pl.pallas_call(
+        _fused_verify_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 4), lambda i: (i, 0)),
+            pl.BlockSpec((bm, W), lambda i: (i, 0)),
+            pl.BlockSpec((bm, T), lambda i: (i, 0)),
+            pl.BlockSpec((bm, T), lambda i: (i, 0)),
+            pl.BlockSpec((K, OBJ), lambda i: (0, 0)),
+            pl.BlockSpec((K, OBJ), lambda i: (0, 0)),
+            pl.BlockSpec((K, OBJ, W), lambda i: (0, 0, 0)),
+            pl.BlockSpec((K, OBJ), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, T * OBJ), lambda i: (i, 0)),
+            pl.BlockSpec((bm, T), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, T * OBJ), jnp.int32),
+            jax.ShapeDtypeStruct((M, T), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q_rects, q_bm, top_leaf, leaf_ok, obj_x, obj_y, obj_bm, obj_id)

@@ -16,6 +16,7 @@ import numpy as np
 
 from .cdf_mlp import cdf_mlp_bank
 from .frontier import frontier_filter
+from .fused_verify import fused_verify
 from .knn_filter import knn_filter
 from .skr_filter import skr_filter
 from .skr_verify import skr_verify
@@ -129,6 +130,37 @@ def verify_candidates(
     return out[:M, :C]
 
 
+def fused_gather_verify(
+    q_rects, q_bm, top_leaf, leaf_ok, obj_x, obj_y, obj_bm, obj_id,
+    bm: int = 8, interpret: Optional[bool] = None,
+):
+    """Fused leaf gather + verify via the Pallas fused kernel (DESIGN.md §3.5).
+
+    Consumes the frontier descent's selected leaves (``top_leaf``/``leaf_ok``)
+    and the snapshot's leaf object bank; the per-query candidate gather
+    happens inside the kernel (VMEM), so the ``(M, T*OBJ, W)`` gathered
+    bitmap plane never materializes in HBM. Returns ``(ids, kwv)``:
+    ids (M, T*OBJ) i32 matching object ids (``-1`` fill, leaf-slot-major --
+    bit-identical to the unfused gather -> ``verify_candidates`` ordering)
+    and kwv (M, T) i32 per-slot Eq.1 ``verified`` partial counts.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    M = q_rects.shape[0]
+    bm_ = min(bm, max(M, 1))
+    qr = _pad_dim(jnp.asarray(q_rects, jnp.float32), 0, bm_)
+    qb = _pad_dim(jnp.asarray(q_bm, jnp.uint32), 0, bm_)
+    tl = _pad_dim(jnp.asarray(top_leaf, jnp.int32), 0, bm_)
+    ok = _pad_dim(jnp.asarray(leaf_ok, jnp.int8), 0, bm_)
+    ids, kwv = fused_verify(
+        qr, qb, tl, ok,
+        jnp.asarray(obj_x, jnp.float32), jnp.asarray(obj_y, jnp.float32),
+        jnp.asarray(obj_bm, jnp.uint32), jnp.asarray(obj_id, jnp.int32),
+        bm=bm_, interpret=interpret,
+    )
+    return ids[:M], kwv[:M]
+
+
 def cdf_bank_forward(
     params: Dict[str, jax.Array], x: jax.Array, bn: int = 256, bb: int = 64,
     interpret: Optional[bool] = None,
@@ -149,6 +181,7 @@ def cdf_bank_forward(
 __all__ = [
     "filter_pairs",
     "filter_frontier",
+    "fused_gather_verify",
     "knn_frontier_dist",
     "verify_candidates",
     "cdf_bank_forward",

@@ -89,6 +89,40 @@ def skr_verify_ref(
     return (inr & kw & (cand_valid > 0)).astype(jnp.int8)
 
 
+def fused_verify_ref(
+    q_rects: jax.Array,  # (M, 4) f32
+    q_bm: jax.Array,  # (M, W) uint32
+    top_leaf: jax.Array,  # (M, T) int32 selected leaf ids
+    leaf_ok: jax.Array,  # (M, T) int8 (1 = slot holds a selected leaf)
+    obj_x: jax.Array,  # (K, OBJ) f32 leaf object bank
+    obj_y: jax.Array,  # (K, OBJ) f32
+    obj_bm: jax.Array,  # (K, OBJ, W) uint32
+    obj_id: jax.Array,  # (K, OBJ) int32, -1 pad
+):
+    """Reference semantics of the fused leaf gather+verify kernel: gather the
+    selected leaves' object blocks, then apply exactly ``skr_verify_ref``.
+
+    Returns ``(ids, kwv)``: ids (M, T*OBJ) i32 -- matching object ids in
+    leaf-slot-major candidate order, ``-1`` at non-matches (identical to the
+    unfused ``gather -> skr_verify`` pipeline's ordering); kwv (M, T) i32 --
+    per-slot counts of keyword-matching valid candidates (the Eq.1
+    ``verified`` partial sums).
+    """
+    M, T = top_leaf.shape
+    K, OBJ = obj_x.shape
+    safe = jnp.clip(top_leaf, 0, K - 1)
+    cx = obj_x[safe].reshape(M, -1)  # (M, T*OBJ)
+    cy = obj_y[safe].reshape(M, -1)
+    cbm = obj_bm[safe].reshape(M, T * OBJ, -1)
+    cid = obj_id[safe].reshape(M, -1)
+    cval = (cid >= 0) & jnp.repeat(leaf_ok > 0, OBJ, axis=1)
+    match = skr_verify_ref(q_rects, q_bm, cx, cy, cbm, cval.astype(jnp.int8))
+    ids = jnp.where(match > 0, cid, -1)
+    kw = jnp.any((cbm & q_bm[:, None, :]) != 0, axis=-1)
+    kwv = jnp.sum((kw & cval).reshape(M, T, OBJ), axis=2).astype(jnp.int32)
+    return ids, kwv
+
+
 def cdf_mlp_ref(params: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
     """Evaluate a bank of B CDF MLPs at N points.
 

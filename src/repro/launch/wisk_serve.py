@@ -87,6 +87,7 @@ def serve_batch(
     minimum_bucket: int = 8,
     plan_cache: Optional[PlanCache] = None,
     delta: Optional[DeltaBuffer] = None,
+    fused: Optional[bool] = None,
 ):
     """Bucketed front door for the batched SKR engine (host-side wrapper).
 
@@ -100,6 +101,9 @@ def serve_batch(
         plan_cache: frontier width state (None: per-snapshot default).
         delta: optional ``DeltaBuffer`` of buffered inserts/deletes merged
             on the fly (DESIGN.md §7).
+        fused: leaf verification path -- None (default) auto-selects the
+            fused gather+verify kernel when no delta is live; True/False
+            force it (DESIGN.md §3.5).
 
     Pads the batch to its power-of-two bucket with inert pad queries, runs
     the jit-traced ``retrieve`` descent, and slices the pads back off the
@@ -110,7 +114,7 @@ def serve_batch(
     rects, bms, m = pad_queries_to_bucket(q_rects, q_bm, minimum_bucket)
     out = retrieve(
         snap, jnp.asarray(rects), jnp.asarray(bms), max_leaves, mode=mode,
-        plan_cache=plan_cache, delta=delta,
+        plan_cache=plan_cache, delta=delta, fused=fused,
     )
     per_query = ("ids", "counts", "nodes_checked", "nodes_scanned", "verified", "overflow")
     return {k: (v[:m] if k in per_query else v) for k, v in out.items()}
@@ -148,6 +152,192 @@ def serve_knn_batch(
     )
     per_query = ("ids", "dist2", "nodes_checked", "verified", "leaves_verified", "pruned")
     return {key: (v[:m] if key in per_query else v) for key, v in out.items()}
+
+
+# ------------------------------- micro-batching + hot-query cache (§3.5)
+class HotQueryCache:
+    """LRU result cache for repeated ("hot") SKR queries (DESIGN.md §3.5).
+
+    Keys are ``(rect quantized to a 1/quant grid, bitmap bytes)``: real query
+    streams repeat popular (region, keyword) probes near-verbatim, and
+    quantizing the rectangle folds jittered re-issues of the same probe onto
+    one entry. Quantization only affects the KEY -- the cached value is the
+    engine's exact output for the first query that produced it, so hits are
+    exact for re-issues that quantize identically. ``hits``/``misses``
+    counters feed capacity tuning; ``invalidate()`` drops everything and
+    must be called whenever served state changes (delta update, generation
+    swap) -- ``LiveIndex`` does this automatically.
+    """
+
+    def __init__(self, maxsize: int = 1024, quant: float = 4096.0) -> None:
+        from collections import OrderedDict
+
+        self.maxsize = int(maxsize)
+        self.quant = float(quant)
+        self._entries: "OrderedDict" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.invalidations = 0
+
+    def key(self, rect, bm) -> bytes:
+        q = np.rint(np.asarray(rect, np.float64) * self.quant).astype(np.int64)
+        return q.tobytes() + np.asarray(bm, np.uint32).tobytes()
+
+    def get(self, rect, bm):
+        """The cached per-query result dict, or None (counts a hit/miss)."""
+        got = self._entries.get(self.key(rect, bm))
+        if got is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(self.key(rect, bm))
+        self.hits += 1
+        return got
+
+    def put(self, rect, bm, result) -> None:
+        k = self.key(rect, bm)
+        self._entries[k] = result
+        self._entries.move_to_end(k)
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+
+    def invalidate(self) -> None:
+        """Drop every entry (served state changed: delta update or swap)."""
+        self._entries.clear()
+        self.invalidations += 1
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+_PER_QUERY_SKR = ("ids", "counts", "nodes_checked", "nodes_scanned", "verified", "overflow")
+
+
+def serve_batch_cached(
+    snap: IndexSnapshot,
+    q_rects,
+    q_bm,
+    cache: HotQueryCache,
+    max_leaves: int = 32,
+    **serve_kw,
+) -> Dict[str, np.ndarray]:
+    """``serve_batch`` behind a ``HotQueryCache``: serve only the misses.
+
+    Looks every query up in ``cache``, runs ONE ``serve_batch`` over the
+    misses, fills the cache with their per-query rows, and reassembles the
+    batch in submission order. Returns ``serve_batch``'s dict plus a
+    ``cached`` (m,) bool mask (True = row came from the cache -- callers
+    feeding observed-cost telemetry, e.g. the drift monitor, must restrict
+    to ``~cached`` rows or hot traffic looks free). ``ids`` rows are padded
+    to the batch's widest capacity with ``-1`` (capacity can grow between
+    batches as the plan cache learns)."""
+    rects = np.asarray(q_rects, np.float32).reshape(-1, 4)
+    bms = np.asarray(q_bm, np.uint32).reshape(len(rects), -1)
+    m = len(rects)
+    entries = [cache.get(rects[i], bms[i]) for i in range(m)]
+    cached = np.array([e is not None for e in entries], bool)
+    miss = np.flatnonzero(~cached)
+    if miss.size:
+        out = serve_batch(snap, rects[miss], bms[miss], max_leaves, **serve_kw)
+        for j, i in enumerate(miss):
+            entry = {k: np.asarray(out[k])[j] for k in _PER_QUERY_SKR}
+            cache.put(rects[i], bms[i], entry)
+            entries[i] = entry
+    width = max((e["ids"].shape[0] for e in entries), default=0)
+
+    def _row(e, k):
+        v = e[k]
+        if k == "ids" and v.shape[0] < width:
+            v = np.concatenate([v, np.full(width - v.shape[0], -1, v.dtype)])
+        return v
+
+    result = {k: np.stack([_row(e, k) for e in entries]) for k in _PER_QUERY_SKR}
+    result["cached"] = cached
+    return result
+
+
+class MicroBatcher:
+    """Deadline-free micro-batching for the SKR front door (DESIGN.md §3.5).
+
+    Coalesces singleton queries into one bucketed ``serve_batch`` dispatch.
+    There is NO timer and NO deadline: ``submit`` enqueues and returns a
+    ticket; the batch runs when the caller calls ``flush()`` (or
+    automatically once ``flush_at`` queries are pending -- the knob). That
+    keeps the policy in the caller's event loop, where the repo's serving
+    stack keeps all control flow, instead of hiding a latency/throughput
+    trade behind a background thread.
+
+    ``result(ticket)`` returns (and drops) one query's row dict, flushing
+    first if the ticket is still pending. With a ``cache`` the flush goes
+    through ``serve_batch_cached`` and rows carry the ``cached`` flag.
+    ``flushes``/``served`` counters expose the achieved batching factor
+    (served/flushes -- the scoreboard's micro-batching gain).
+    """
+
+    def __init__(
+        self,
+        snap: IndexSnapshot,
+        max_leaves: int = 32,
+        flush_at: int = 8,
+        cache: Optional[HotQueryCache] = None,
+        **serve_kw,
+    ) -> None:
+        if flush_at < 1:
+            raise ValueError(f"flush_at must be >= 1, got {flush_at}")
+        self.snap = snap
+        self.max_leaves = max_leaves
+        self.flush_at = int(flush_at)
+        self.cache = cache
+        self.serve_kw = serve_kw
+        self._pending: list = []  # [(ticket, rect, bm)]
+        self._done: dict = {}
+        self._next = 0
+        self.flushes = 0
+        self.served = 0
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def submit(self, rect, bm) -> int:
+        """Enqueue one query; returns its ticket. Auto-flushes at
+        ``flush_at`` pending queries."""
+        t = self._next
+        self._next += 1
+        self._pending.append(
+            (t, np.asarray(rect, np.float32).reshape(4),
+             np.asarray(bm, np.uint32).reshape(-1))
+        )
+        if len(self._pending) >= self.flush_at:
+            self.flush()
+        return t
+
+    def flush(self) -> int:
+        """Serve every pending query in one dispatch; returns how many."""
+        if not self._pending:
+            return 0
+        tickets = [t for t, _, _ in self._pending]
+        rects = np.stack([r for _, r, _ in self._pending])
+        bms = np.stack([b for _, _, b in self._pending])
+        self._pending = []
+        if self.cache is not None:
+            out = serve_batch_cached(
+                self.snap, rects, bms, self.cache, self.max_leaves, **self.serve_kw
+            )
+            keys = _PER_QUERY_SKR + ("cached",)
+        else:
+            out = serve_batch(self.snap, rects, bms, self.max_leaves, **self.serve_kw)
+            keys = _PER_QUERY_SKR
+        for j, t in enumerate(tickets):
+            self._done[t] = {k: np.asarray(out[k])[j] for k in keys}
+        self.flushes += 1
+        self.served += len(tickets)
+        return len(tickets)
+
+    def result(self, ticket: int) -> Dict[str, np.ndarray]:
+        """One query's result row (popped); flushes if still pending."""
+        if ticket not in self._done:
+            self.flush()
+        return self._done.pop(ticket)
 
 
 # ------------------------------------- query-parallel sharded serving (§3.4)
@@ -442,12 +632,16 @@ class LiveIndex:
         artifacts=None,
         max_recent: int = 512,
         slots_per_leaf: int = 8,
+        result_cache: Optional[HotQueryCache] = None,
     ) -> None:
         from ..core.build import BuildConfig, build_wisk
         from ..core.drift import DriftMonitor
 
         self.build_config = build_config or BuildConfig()
         self._slots_per_leaf = slots_per_leaf
+        # hot-query result cache (§3.5): exact results keyed on the current
+        # served state, so every state change below must invalidate it
+        self.result_cache = result_cache
         if artifacts is None:
             artifacts = build_wisk(dataset, workload, self.build_config)
         self._gen = self._make_generation(artifacts, dataset, seq=0)
@@ -487,14 +681,29 @@ class LiveIndex:
 
     def serve(self, q_rects, q_bm, max_leaves: int = 32) -> Dict[str, np.ndarray]:
         """Delta-merged SKR batch through the current generation; feeds the
-        drift monitor with the observed Eq.1 counters."""
+        drift monitor with the observed Eq.1 counters.
+
+        With a ``result_cache`` the batch goes through ``serve_batch_cached``
+        and only MISS rows feed the monitor -- cache hits cost nothing, and
+        counting them would mask drift in exactly the hot traffic a rebuild
+        should follow."""
         gen = self._gen
-        out = serve_batch(
-            gen.snapshot, q_rects, q_bm, max_leaves,
-            plan_cache=gen.plan_cache, delta=gen.delta(),
-        )
+        if self.result_cache is not None:
+            out = serve_batch_cached(
+                gen.snapshot, q_rects, q_bm, self.result_cache, max_leaves,
+                plan_cache=gen.plan_cache, delta=gen.delta(),
+            )
+            fresh = ~out["cached"]
+        else:
+            out = serve_batch(
+                gen.snapshot, q_rects, q_bm, max_leaves,
+                plan_cache=gen.plan_cache, delta=gen.delta(),
+            )
+            fresh = slice(None)
         self._record(q_rects, q_bm)
-        self.monitor.observe_counters(out["nodes_checked"], out["verified"])
+        nc = np.asarray(out["nodes_checked"])[fresh]
+        if nc.size:  # an all-hit batch observed no real descents
+            self.monitor.observe_counters(nc, np.asarray(out["verified"])[fresh])
         return out
 
     def serve_knn(self, points, q_bm, k: int) -> Dict[str, np.ndarray]:
@@ -517,10 +726,14 @@ class LiveIndex:
     def insert(self, locs, kw_ids) -> np.ndarray:
         """Buffer new objects into the current generation's delta log;
         visible to the very next query. Returns the assigned global ids."""
+        if self.result_cache is not None:
+            self.result_cache.invalidate()
         return self._gen.delta_log.insert(locs, kw_ids)
 
     def delete(self, ids) -> int:
         """Mask objects out of serving immediately; returns #newly deleted."""
+        if self.result_cache is not None:
+            self.result_cache.invalidate()
         return self._gen.delta_log.delete(ids)
 
     # ------------------------------------------------------------- rebuild
@@ -560,6 +773,8 @@ class LiveIndex:
         )
         new_gen = self._make_generation(artifacts, merged, seq=gen.seq + 1)
         self._gen = new_gen  # THE swap: one reference store
+        if self.result_cache is not None:
+            self.result_cache.invalidate()  # cached rows belong to the old gen
         self.monitor.rearm()  # back to warmup: re-learn the baseline
         self.swaps += 1
         return True

@@ -153,14 +153,34 @@ def _select_leaves_frontier(frontier, surv, take: int, n_leaf: int):
     return top_leaf, leaf_ok, overflow
 
 
-def _verify_leaves(snap: IndexSnapshot, q_rects, q_bm, top_leaf, leaf_ok, delta=None):
+def _verify_leaves(
+    snap: IndexSnapshot, q_rects, q_bm, top_leaf, leaf_ok, delta=None, fused=None
+):
     """Capacity-bounded verification of the selected leaves (shared by modes).
+
+    ``fused=None`` (auto) routes the static (no-delta) case through the
+    fused gather+verify Pallas kernel (DESIGN.md §3.5): the selected leaves'
+    object blocks are gathered and verified inside one kernel, so the
+    ``(M, T*OBJ, W)`` candidate bitmap plane never round-trips HBM between
+    the gather and ``skr_verify``. ``fused=False`` forces the unfused
+    gather -> ``verify_candidates`` pipeline (the A/B baseline); both paths
+    return identical ids/counters (tests/test_query_parity.py).
 
     With a live ``delta``, each selected leaf's insert-buffer slots are
     appended to its snapshot object block as extra candidates and deleted
     snapshot objects are masked out, so the match set is exactly the merged
-    (base + inserts - deletes) object set.
+    (base + inserts - deletes) object set -- the delta path always runs
+    unfused (the fused kernel verifies snapshot blocks only).
     """
+    if fused is None:
+        fused = delta is None
+    if fused and delta is None:
+        ids, kwv = ops.fused_gather_verify(
+            q_rects, q_bm, top_leaf, leaf_ok.astype(jnp.int8),
+            snap.leaf_obj_x, snap.leaf_obj_y, snap.leaf_obj_bm, snap.leaf_obj_id,
+        )
+        counts = jnp.sum((ids >= 0).astype(jnp.int32), axis=1)
+        return ids, counts, jnp.sum(kwv, axis=1)
     M = q_rects.shape[0]
     cx = snap.leaf_obj_x[top_leaf].reshape(M, -1)
     cy = snap.leaf_obj_y[top_leaf].reshape(M, -1)
@@ -235,6 +255,7 @@ def _retrieve_frontier(
     max_leaves: int,
     cache: PlanCache,
     delta=None,
+    fused=None,
 ) -> Dict[str, np.ndarray]:
     M = q_rects.shape[0]
     plan = cache.plan("skr", snap.n_levels - 1)
@@ -246,7 +267,9 @@ def _retrieve_frontier(
     n_leaf = snap.n_leaves
     take = min(max_leaves, n_leaf, int(frontier.shape[1]))
     top_leaf, leaf_ok, overflow = _select_leaves_frontier(frontier, surv, take, n_leaf)
-    ids, counts, kw_scanned = _verify_leaves(snap, q_rects, q_bm, top_leaf, leaf_ok, delta)
+    ids, counts, kw_scanned = _verify_leaves(
+        snap, q_rects, q_bm, top_leaf, leaf_ok, delta, fused
+    )
     return dict(
         ids=np.asarray(ids),
         counts=np.asarray(counts),
@@ -515,7 +538,7 @@ def retrieve_knn(
 # --------------------------------------------------------------- dense path
 def _retrieve_dense(
     snap: IndexSnapshot, q_rects: jnp.ndarray, q_bm: jnp.ndarray, max_leaves: int,
-    delta=None,
+    delta=None, fused=None,
 ) -> Dict[str, np.ndarray]:
     if len(snap.child_matrix) != len(snap.level_mbrs) - 1:
         raise ValueError("dense mode needs IndexSnapshot.build(..., dense=True)")
@@ -537,7 +560,9 @@ def _retrieve_dense(
     top_val, top_leaf = jax.lax.top_k(score, take)  # (M, L)
     leaf_ok = top_val > 0
     overflow = jnp.maximum(jnp.sum(score, axis=1) - take, 0)
-    ids, counts, kw_scanned = _verify_leaves(snap, q_rects, q_bm, top_leaf, leaf_ok, delta)
+    ids, counts, kw_scanned = _verify_leaves(
+        snap, q_rects, q_bm, top_leaf, leaf_ok, delta, fused
+    )
     return dict(
         ids=np.asarray(ids),
         counts=np.asarray(counts),
@@ -563,6 +588,7 @@ def retrieve(
     mode: str = "frontier",
     plan_cache: Optional[PlanCache] = None,
     delta: Optional[DeltaBuffer] = None,
+    fused: Optional[bool] = None,
 ) -> Dict[str, np.ndarray]:
     """Batched SKR retrieval. Exact as long as <= max_leaves leaves are
     relevant per query (the spill is counted in ``overflow``).
@@ -571,14 +597,17 @@ def retrieve(
     full-level scan (kept for A/B benchmarking). ``plan_cache`` carries the
     frontier width state across calls; None uses the per-snapshot default.
     ``delta`` merges buffered inserts/deletes on the fly (DESIGN.md §7).
+    ``fused`` picks the leaf verification pipeline (DESIGN.md §3.5): None
+    (auto) uses the fused gather+verify kernel whenever no delta is live;
+    False forces the unfused A/B baseline. Both are id- and counter-exact.
     """
     q_rects = jnp.asarray(q_rects, jnp.float32)
     q_bm = jnp.asarray(q_bm, jnp.uint32)
     if mode == "frontier":
         cache = plan_cache if plan_cache is not None else default_plan_cache(snap)
-        return _retrieve_frontier(snap, q_rects, q_bm, max_leaves, cache, delta)
+        return _retrieve_frontier(snap, q_rects, q_bm, max_leaves, cache, delta, fused)
     if mode == "dense":
-        return _retrieve_dense(snap, q_rects, q_bm, max_leaves, delta)
+        return _retrieve_dense(snap, q_rects, q_bm, max_leaves, delta, fused)
     raise ValueError(f"unknown retrieve mode {mode!r}")
 
 
@@ -589,6 +618,7 @@ def retrieve_workload(
     mode: str = "frontier",
     plan_cache: Optional[PlanCache] = None,
     delta: Optional[DeltaBuffer] = None,
+    fused: Optional[bool] = None,
 ):
     return retrieve(
         snap,
@@ -598,4 +628,5 @@ def retrieve_workload(
         mode=mode,
         plan_cache=plan_cache,
         delta=delta,
+        fused=fused,
     )

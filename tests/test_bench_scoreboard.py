@@ -1,0 +1,226 @@
+"""Persistent perf scoreboard: Record schema round-trip, bench_compare
+verdicts, the run.py module filter, and the docstring doc-reference checker
+(EXPERIMENTS.md section Scoreboard)."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+
+from benchmarks import common as C  # noqa: E402
+from benchmarks.run import MODULES, SCOREBOARD, select_modules  # noqa: E402
+from tools import bench_compare as BC  # noqa: E402
+from tools import check_docs as CD  # noqa: E402
+
+
+# ------------------------------------------------------------ Record schema
+def test_record_prints_legacy_csv_row():
+    r = C.row("serving/frontier", 123.456, "overflow=0 scanned=1520")
+    assert str(r) == "serving/frontier,123.46,overflow=0 scanned=1520"
+
+
+def test_derived_parsing_types_and_commentary():
+    d = C.parse_derived("qps=318 scale=1.25x eff=0.62 widths=[8,16] "
+                        "mismatches=0/64 (free-text caveat dropped)")
+    assert d == {"qps": 318, "scale": 1.25, "eff": 0.62,
+                 "widths": "[8,16]", "mismatches": "0/64"}
+    assert isinstance(d["qps"], int) and isinstance(d["scale"], float)
+
+
+def test_derived_parsing_braced_dicts():
+    d = C.parse_derived("phase_times={'partition': 1.2};counters={'x': 3}")
+    assert set(d) == {"phase_times", "counters"}
+
+
+def test_payload_schema_and_json_round_trip(tmp_path):
+    recs = [C.row("a/b", 10.0, "cost=5"), C.row("a/c", 0.0)]
+    p = C.scoreboard_payload("bench_serving", recs, quick=True, elapsed_s=1.5)
+    assert p["schema"] == C.SCHEMA_VERSION
+    assert p["module"] == "bench_serving"
+    assert p["git_sha"] and p["date"].endswith("Z")
+    assert p["config"]["quick"] is True
+    assert p["config_fingerprint"] == C.config_fingerprint(p["config"])
+    path = tmp_path / "BENCH_serving.json"
+    C.write_scoreboard(path, p)
+    loaded = json.loads(path.read_text())
+    assert loaded == json.loads(json.dumps(p))  # JSON-stable
+    rec = loaded["records"][0]
+    assert rec == {"name": "a/b", "us_per_call": 10.0,
+                   "derived": {"cost": 5}, "derived_raw": "cost=5"}
+
+
+def test_fingerprint_distinguishes_quick_from_full():
+    assert (C.config_fingerprint(C.run_config(quick=True))
+            != C.config_fingerprint(C.run_config(quick=False)))
+
+
+# -------------------------------------------------------- bench_compare
+def _payload(records, quick=True):
+    return C.scoreboard_payload("bench_serving", records, quick=quick)
+
+
+def test_compare_ok_within_noise_band():
+    base = _payload([C.row("a", 500.0, "scanned=10")])
+    cur = _payload([C.row("a", 700.0, "scanned=10")])  # 1.4x < 1.6x
+    vs = BC.compare_records("serving", base, cur)
+    assert [v.status for v in vs] == ["ok"]
+
+
+def test_compare_flags_wall_clock_regression():
+    base = _payload([C.row("a", 500.0)])
+    cur = _payload([C.row("a", 900.0)])  # 1.8x > 1.6x
+    vs = BC.compare_records("serving", base, cur)
+    assert [v.status for v in vs] == ["regression"]
+    assert BC.is_fatal(vs[0])
+
+
+def test_compare_ignores_sub_floor_timings():
+    base = _payload([C.row("a", 5.0)])
+    cur = _payload([C.row("a", 50.0)])  # 10x but both under min_us
+    vs = BC.compare_records("serving", base, cur)
+    assert [v.status for v in vs] == ["ok"]
+
+
+def test_compare_counter_drift_is_exact_regression():
+    base = _payload([C.row("a", 5.0, "verified=10")])
+    cur = _payload([C.row("a", 5.0, "verified=11")])  # tiny timing, exact drift
+    vs = BC.compare_records("serving", base, cur)
+    assert vs[0].status == "regression" and "counter drift" in vs[0].detail
+
+
+def test_compare_reports_improvement_not_fatal():
+    base = _payload([C.row("a", 900.0)])
+    cur = _payload([C.row("a", 300.0)])
+    vs = BC.compare_records("serving", base, cur)
+    assert [v.status for v in vs] == ["improvement"]
+    assert not BC.is_fatal(vs[0])
+
+
+def test_compare_new_and_vanished_records():
+    base = _payload([C.row("old", 500.0)])
+    cur = _payload([C.row("new", 500.0)])
+    statuses = {v.name: v.status for v in BC.compare_records("serving", base, cur)}
+    assert statuses == {"old": "missing-current", "new": "missing-baseline"}
+    assert BC.is_fatal(BC.Verdict("m", "old", "missing-current"))
+    assert not BC.is_fatal(BC.Verdict("m", "new", "missing-baseline"))
+
+
+def test_compare_refuses_mismatched_fingerprints():
+    base = _payload([C.row("a", 500.0)], quick=True)
+    cur = _payload([C.row("a", 500.0)], quick=False)
+    vs = BC.compare_records("serving", base, cur)
+    assert vs[0].status == "regression" and "fingerprint" in vs[0].detail
+
+
+def test_compare_dirs_missing_baseline_file(tmp_path):
+    b, c = tmp_path / "b", tmp_path / "c"
+    b.mkdir(), c.mkdir()
+    C.write_scoreboard(c / "BENCH_knn.json", _payload([C.row("a", 5.0)]))
+    vs = BC.compare_dirs(b, c)
+    assert [(v.module, v.status) for v in vs] == [("knn", "missing-baseline")]
+    assert not any(BC.is_fatal(v) for v in vs)
+
+
+def test_compare_cli_exit_codes(tmp_path):
+    b, c = tmp_path / "b", tmp_path / "c"
+    b.mkdir(), c.mkdir()
+    C.write_scoreboard(b / "BENCH_serving.json", _payload([C.row("a", 500.0)]))
+    C.write_scoreboard(c / "BENCH_serving.json", _payload([C.row("a", 520.0)]))
+    assert BC.main(["--baseline-dir", str(b), "--current-dir", str(c)]) == 0
+    C.write_scoreboard(c / "BENCH_serving.json", _payload([C.row("a", 5000.0)]))
+    assert BC.main(["--baseline-dir", str(b), "--current-dir", str(c)]) == 1
+
+
+# ------------------------------------------------------------ run.py filter
+def test_select_modules_substring_and_commas():
+    assert select_modules(None) == MODULES
+    assert select_modules("serving") == ["bench_serving"]
+    got = select_modules("serving,knn")
+    assert got == ["bench_knn", "bench_serving"]  # MODULES order preserved
+
+
+def test_select_modules_no_match_raises_with_names():
+    with pytest.raises(ValueError) as ei:
+        select_modules("no_such_bench")
+    msg = str(ei.value)
+    assert "bench_serving" in msg and "bench_construction" in msg
+
+
+def test_run_cli_no_match_exits_nonzero():
+    env = dict(os.environ, PYTHONPATH=f"src{os.pathsep}" + os.environ.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "no_such_bench"],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=120,
+    )
+    assert proc.returncode != 0
+    assert "bench_serving" in proc.stdout + proc.stderr  # lists valid names
+
+
+def test_scoreboard_modules_are_known():
+    assert set(SCOREBOARD) <= set(MODULES)
+    assert set(SCOREBOARD.values()) == {
+        "BENCH_serving.json", "BENCH_knn.json",
+        "BENCH_construction.json", "BENCH_dynamic.json",
+    }
+
+
+# ------------------------------------------- committed baselines (repo root)
+@pytest.mark.parametrize("fname", sorted(SCOREBOARD.values()))
+def test_committed_baseline_is_valid_scoreboard(fname):
+    path = ROOT / fname
+    assert path.exists(), f"committed scoreboard baseline {fname} missing"
+    doc = json.loads(path.read_text())
+    assert doc["schema"] == C.SCHEMA_VERSION
+    assert doc["records"], "baseline has no records"
+    assert doc["git_sha"] not in ("", "unknown")
+    assert doc["config_fingerprint"] == C.config_fingerprint(doc["config"])
+    for rec in doc["records"]:
+        assert set(rec) == {"name", "us_per_call", "derived", "derived_raw"}
+        assert C.parse_derived(rec["derived_raw"]) == rec["derived"]
+
+
+def test_committed_serving_baseline_fused_no_slower():
+    doc = json.loads((ROOT / "BENCH_serving.json").read_text())
+    us = {r["name"]: r["us_per_call"] for r in doc["records"]}
+    assert us["serving/verify-fused"] <= us["serving/verify-unfused"], (
+        "committed quick baseline shows the fused verify path slower than "
+        "the unfused one -- re-measure or fix the kernel before committing"
+    )
+
+
+# ----------------------------------------- docstring doc-reference checker
+def test_docstring_checker_flags_missing_doc(tmp_path):
+    py = tmp_path / "mod.py"
+    py.write_text('"""Refers to NO_SUCH_DOC.md for details."""\n')
+    errors = []
+    CD.check_docstring_refs(py, errors)
+    assert len(errors) == 1 and "NO_SUCH_DOC.md" in errors[0]
+
+
+def test_docstring_checker_flags_missing_section(tmp_path):
+    py = tmp_path / "mod.py"
+    py.write_text('"""See EXPERIMENTS.md section Nonexistent for details."""\n')
+    errors = []
+    CD.check_docstring_refs(py, errors)
+    assert len(errors) == 1 and "no such heading" in errors[0]
+
+
+def test_docstring_checker_accepts_valid_refs(tmp_path):
+    py = tmp_path / "mod.py"
+    py.write_text(
+        '"""Top doc: EXPERIMENTS.md section Perf."""\n'
+        "def f():\n"
+        '    """Nested: DESIGN.md, EXPERIMENTS.md section Roofline."""\n'
+    )
+    errors = []
+    CD.check_docstring_refs(py, errors)
+    assert errors == []
+
+
+def test_repo_docstrings_reference_only_real_docs():
+    assert CD.check_py_docstrings() == []

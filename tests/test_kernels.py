@@ -179,3 +179,70 @@ def test_filter_block_size_invariance():
     a = np.asarray(ops.filter_pairs(qr, qb, nm, nb, bm=16, bk=32))
     b = np.asarray(ops.filter_pairs(qr, qb, nm, nb, bm=128, bk=128))
     np.testing.assert_array_equal(a, b)
+
+
+def _fused_operands(rng, m, t, k, obj, w):
+    """Random fused-verify operands incl. out-of-range leaf ids and -1 pads."""
+    qr = _rand_rects(rng, m)
+    qb = (rng.integers(0, 2 ** 32, (m, w), dtype=np.uint32)
+          * rng.integers(0, 2, (m, w), dtype=np.uint32))
+    tl = rng.integers(-1, k + 2, (m, t)).astype(np.int32)  # deliberately dirty
+    ok = rng.integers(0, 2, (m, t)).astype(np.int8)
+    ox = rng.uniform(0, 1, (k, obj)).astype(np.float32)
+    oy = rng.uniform(0, 1, (k, obj)).astype(np.float32)
+    ob = (rng.integers(0, 2 ** 32, (k, obj, w), dtype=np.uint32)
+          * rng.integers(0, 2, (k, obj, w), dtype=np.uint32))
+    oid = np.where(rng.integers(0, 4, (k, obj)) > 0,
+                   rng.integers(0, 10 * k * obj, (k, obj)), -1).astype(np.int32)
+    return qr, qb, tl, ok, ox, oy, ob, oid
+
+
+@pytest.mark.parametrize(
+    "m,t,k,obj,w",
+    [
+        (1, 1, 1, 1, 1),    # fully degenerate
+        (5, 3, 9, 16, 3),   # nothing tile-aligned
+        (9, 8, 36, 64, 15), # the fs-profile word width
+        (33, 4, 17, 32, 8), # queries past the default bm tile
+        (8, 16, 64, 8, 4),  # wide selection, narrow leaves
+    ],
+)
+def test_fused_verify_sweep(m, t, k, obj, w):
+    """Fused gather+verify kernel (interpret) vs jnp oracle: elementwise-
+    identical ids (ordering included) and per-slot verified counts, under
+    invalid slots, -1 object pads, and out-of-range leaf ids."""
+    rng = np.random.default_rng(m * 7919 + t * 131 + k * 17 + obj + w)
+    args = _fused_operands(rng, m, t, k, obj, w)
+    ids, kwv = ops.fused_gather_verify(*args)
+    eids, ekwv = ref.fused_verify_ref(*map(jnp.asarray, args))
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(eids))
+    np.testing.assert_array_equal(np.asarray(kwv), np.asarray(ekwv))
+
+
+def test_fused_verify_block_size_invariance():
+    rng = np.random.default_rng(11)
+    args = _fused_operands(rng, 21, 5, 12, 24, 5)
+    a_ids, a_kwv = ops.fused_gather_verify(*args, bm=4)
+    b_ids, b_kwv = ops.fused_gather_verify(*args, bm=16)
+    np.testing.assert_array_equal(np.asarray(a_ids), np.asarray(b_ids))
+    np.testing.assert_array_equal(np.asarray(a_kwv), np.asarray(b_kwv))
+
+
+def test_fused_verify_matches_unfused_gather_pipeline():
+    """The fused kernel's contract with the engine: identical output to the
+    host-side gather -> skr_verify pipeline it replaces (candidate order
+    leaf-slot-major, -1 at non-matches)."""
+    rng = np.random.default_rng(23)
+    qr, qb, tl, ok, ox, oy, ob, oid = _fused_operands(rng, 10, 4, 8, 16, 4)
+    m, t = tl.shape
+    k, obj = ox.shape
+    safe = np.clip(tl, 0, k - 1)
+    cx = ox[safe].reshape(m, -1)
+    cy = oy[safe].reshape(m, -1)
+    cb = ob[safe].reshape(m, t * obj, -1)
+    cid = oid[safe].reshape(m, -1)
+    cval = ((cid >= 0) & np.repeat(ok > 0, obj, axis=1)).astype(np.int8)
+    match = np.asarray(ops.verify_candidates(qr, qb, cx, cy, cb, cval))
+    exp_ids = np.where(match > 0, cid, -1)
+    ids, _ = ops.fused_gather_verify(qr, qb, tl, ok, ox, oy, ob, oid)
+    np.testing.assert_array_equal(np.asarray(ids), exp_ids)

@@ -218,3 +218,77 @@ def test_bucketing_pads_are_inert():
     for a, b in zip(_result_sets(out), _result_sets(direct)):
         np.testing.assert_array_equal(a, b)
     np.testing.assert_array_equal(out["nodes_checked"], direct["nodes_checked"])
+
+
+# ------------------------------------- fused leaf verification (DESIGN.md §3.5)
+@pytest.mark.parametrize("seed,levels,mode", [
+    (0, 1, "frontier"), (1, 2, "frontier"), (2, 3, "frontier"),
+    (0, 2, "dense"), (3, 2, "dense"),
+])
+def test_fused_verify_elementwise_parity(seed, levels, mode):
+    """The fused gather+verify path must be ELEMENTWISE-identical to the
+    unfused gather -> skr_verify path -- same ids in the same slots, same
+    Eq.1 counters -- not merely set-equal, across hierarchy depths and both
+    descent modes."""
+    ds = make_dataset("fs", n=1200, seed=seed)
+    index, clusters = _build_index(ds, g=5, levels=levels)
+    snap = IndexSnapshot.build(index, ds, dense=True)
+    wl = make_workload(ds, m=24, dist="MIX", seed=seed + 40)
+    a = retrieve_workload(snap, wl, max_leaves=clusters.k, mode=mode, fused=False)
+    b = retrieve_workload(snap, wl, max_leaves=clusters.k, mode=mode, fused=True)
+    c = retrieve_workload(snap, wl, max_leaves=clusters.k, mode=mode)  # auto
+    for key in ("ids", "counts", "nodes_checked", "nodes_scanned", "verified", "overflow"):
+        np.testing.assert_array_equal(np.asarray(a[key]), np.asarray(b[key]), err_msg=key)
+        np.testing.assert_array_equal(np.asarray(a[key]), np.asarray(c[key]), err_msg=key)
+
+
+@pytest.mark.parametrize("max_leaves", [1, 2, 5])
+def test_fused_verify_overflow_parity(max_leaves):
+    """Capacity-overflow configs: the fused path must spill identically
+    (same selected leaves, same overflow counts, same partial results)."""
+    ds = make_dataset("fs", n=1200, seed=5)
+    index, _ = _build_index(ds, g=6, levels=2)
+    snap = IndexSnapshot.build(index, ds)
+    wl = make_workload(ds, m=16, dist="UNI", region_frac=0.2, n_keywords=4, seed=9)
+    a = retrieve_workload(snap, wl, max_leaves=max_leaves, fused=False)
+    b = retrieve_workload(snap, wl, max_leaves=max_leaves, fused=True)
+    assert np.asarray(a["overflow"]).sum() > 0  # the config actually spills
+    for key in ("ids", "counts", "verified", "overflow"):
+        np.testing.assert_array_equal(np.asarray(a[key]), np.asarray(b[key]), err_msg=key)
+
+
+def test_fused_auto_falls_back_with_delta():
+    """fused=None must auto-disable when a DeltaBuffer is live (the fused
+    kernel sees only the snapshot's leaf bank, not buffered updates), and
+    forcing fused=True alongside a delta keeps the delta-merged semantics
+    by routing through the unfused merge path."""
+    from repro.serve.delta import DeltaLog
+
+    ds = make_dataset("fs", n=1000, seed=6)
+    index, clusters = _build_index(ds, g=5, levels=2)
+    snap = IndexSnapshot.build(index, ds)
+    log = DeltaLog(index, ds, snap)
+    rng = np.random.default_rng(0)
+    log.insert(rng.uniform(0.4, 0.6, (8, 2)).astype(np.float32),
+               [[1, 2, 3]] * 8)
+    delta = log.buffer
+    wl = make_workload(ds, m=12, dist="MIX", seed=50)
+    # pin one query onto the inserted objects so the delta is visible
+    R = np.asarray(wl.rects).copy()
+    B = np.asarray(wl.kw_bitmap).copy()
+    R[0] = (0.35, 0.35, 0.65, 0.65)
+    B[0] = 0
+    B[0, 0] = (1 << 1) | (1 << 2) | (1 << 3)
+    import dataclasses as _dc
+
+    wl = _dc.replace(wl, rects=R, kw_bitmap=B)
+    plain = retrieve_workload(snap, wl, max_leaves=clusters.k, delta=delta)
+    forced = retrieve_workload(snap, wl, max_leaves=clusters.k, delta=delta, fused=True)
+    for key in ("ids", "counts", "verified", "overflow"):
+        np.testing.assert_array_equal(np.asarray(plain[key]), np.asarray(forced[key]), err_msg=key)
+    # and the delta actually changed results vs the delta-free descent
+    base = retrieve_workload(snap, wl, max_leaves=clusters.k)
+    assert any(
+        not np.array_equal(np.sort(p[p >= 0]), np.sort(q[q >= 0]))
+        for p, q in zip(np.asarray(plain["ids"]), np.asarray(base["ids"]))
+    )

@@ -1,0 +1,179 @@
+"""Diff fresh BENCH_*.json scoreboard runs against committed baselines.
+
+CI runs ``benchmarks.run --json --quick --out-dir bench_out`` and then::
+
+    python tools/bench_compare.py --baseline-dir . --current-dir bench_out
+
+Per record (matched by ``name`` within each module file) the verdict is:
+
+* ``regression``  -- wall clock grew beyond ``--threshold`` (default 1.6x,
+  CI boxes are noisy) AND both sides exceed the ``--min-us`` floor (tiny
+  timings are pure jitter), OR a deterministic derived counter changed
+  (those are exact: any drift is a semantic change, not noise);
+* ``improvement`` -- wall clock shrank beyond the same threshold (reported,
+  never fatal; commit a refreshed baseline to bank it);
+* ``ok``          -- within the noise band;
+* ``missing-baseline`` / ``missing-current`` -- the record (or whole module
+  file) exists on only one side. New records are fine (the PR adding them
+  also commits the refreshed baseline); vanished records are a regression.
+
+Config fingerprints must match -- comparing a quick run against a full run
+(or different backend/device count) would flag phantom regressions, so the
+diff refuses instead. Exit status: 1 when any regression (or vanished
+record, or fingerprint mismatch) was found, else 0.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional
+
+MODULE_FILES = (
+    "BENCH_serving.json",
+    "BENCH_knn.json",
+    "BENCH_construction.json",
+    "BENCH_dynamic.json",
+)
+
+# derived keys that are deterministic given (dataset seed, config): traversal
+# and result counters -- exact equality required. Wall-clock-ish derived keys
+# (qps, scale, speedup, build_s, phase times) are NOT listed: they are noise.
+DETERMINISTIC_KEYS = (
+    "scanned", "checked", "verified", "overflow", "cost", "mismatches",
+    "nodes", "sequential", "batched", "devices",
+)
+
+
+@dataclasses.dataclass
+class Verdict:
+    module: str
+    name: str
+    status: str  # regression | improvement | ok | missing-baseline | missing-current
+    detail: str = ""
+
+    def __str__(self) -> str:
+        return f"[{self.status:>16}] {self.module}:{self.name} {self.detail}".rstrip()
+
+
+def load_records(path: Path) -> Optional[Dict]:
+    if not path.exists():
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare_records(
+    module: str,
+    baseline: Dict,
+    current: Dict,
+    threshold: float = 1.6,
+    min_us: float = 100.0,
+) -> List[Verdict]:
+    """Verdicts for one module's baseline/current payload pair."""
+    out: List[Verdict] = []
+    if baseline.get("config_fingerprint") != current.get("config_fingerprint"):
+        out.append(
+            Verdict(module, "<config>", "regression",
+                    f"config fingerprint mismatch "
+                    f"({baseline.get('config_fingerprint')} vs "
+                    f"{current.get('config_fingerprint')}): runs not comparable")
+        )
+        return out
+    base = {r["name"]: r for r in baseline.get("records", [])}
+    cur = {r["name"]: r for r in current.get("records", [])}
+    for name in base:
+        if name not in cur:
+            out.append(Verdict(module, name, "missing-current",
+                               "baseline record vanished from the fresh run"))
+    for name, c in cur.items():
+        b = base.get(name)
+        if b is None:
+            out.append(Verdict(module, name, "missing-baseline",
+                               "new record (refresh the committed baseline)"))
+            continue
+        # deterministic counters first: exact, so drift beats any timing noise
+        drifted = [
+            k for k in DETERMINISTIC_KEYS
+            if k in b.get("derived", {}) and k in c.get("derived", {})
+            and b["derived"][k] != c["derived"][k]
+        ]
+        if drifted:
+            detail = "; ".join(
+                f"{k}: {b['derived'][k]} -> {c['derived'][k]}" for k in drifted
+            )
+            out.append(Verdict(module, name, "regression",
+                               f"deterministic counter drift: {detail}"))
+            continue
+        bu, cu = float(b["us_per_call"]), float(c["us_per_call"])
+        if bu >= min_us and cu >= min_us:
+            if cu > bu * threshold:
+                out.append(Verdict(module, name, "regression",
+                                   f"{bu:.0f}us -> {cu:.0f}us ({cu / bu:.2f}x)"))
+                continue
+            if cu * threshold < bu:
+                out.append(Verdict(module, name, "improvement",
+                                   f"{bu:.0f}us -> {cu:.0f}us ({cu / bu:.2f}x)"))
+                continue
+        out.append(Verdict(module, name, "ok"))
+    return out
+
+
+def compare_dirs(
+    baseline_dir: Path,
+    current_dir: Path,
+    threshold: float = 1.6,
+    min_us: float = 100.0,
+    modules=MODULE_FILES,
+) -> List[Verdict]:
+    out: List[Verdict] = []
+    for fname in modules:
+        module = fname[len("BENCH_"):-len(".json")]
+        b = load_records(baseline_dir / fname)
+        c = load_records(current_dir / fname)
+        if b is None and c is None:
+            continue
+        if b is None:
+            out.append(Verdict(module, "<file>", "missing-baseline",
+                               f"no committed {fname} (commit one to start the "
+                               f"scoreboard for this module)"))
+            continue
+        if c is None:
+            out.append(Verdict(module, "<file>", "missing-current",
+                               f"fresh run produced no {fname}"))
+            continue
+        out.extend(compare_records(module, b, c, threshold, min_us))
+    return out
+
+
+def is_fatal(v: Verdict) -> bool:
+    return v.status in ("regression", "missing-current")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline-dir", type=Path, default=Path("."),
+                    help="directory of committed BENCH_*.json baselines")
+    ap.add_argument("--current-dir", type=Path, required=True,
+                    help="directory of freshly generated BENCH_*.json files")
+    ap.add_argument("--threshold", type=float, default=1.6,
+                    help="wall-clock growth ratio that counts as a regression")
+    ap.add_argument("--min-us", type=float, default=100.0,
+                    help="ignore wall-clock drift below this many us/call")
+    args = ap.parse_args(argv)
+    verdicts = compare_dirs(args.baseline_dir, args.current_dir,
+                            args.threshold, args.min_us)
+    fatal = 0
+    for v in verdicts:
+        if v.status != "ok":
+            print(v)
+        fatal += is_fatal(v)
+    n_ok = sum(v.status == "ok" for v in verdicts)
+    print(f"# {len(verdicts)} records compared: {n_ok} ok, {fatal} fatal")
+    return 1 if fatal else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,14 +17,22 @@ Checks, per file:
   likewise. Env-var prefixes (``PYTHONPATH=src ...``, ``XLA_FLAGS=...``)
   and trailing arguments are understood. Nothing is *executed*.
 
+With ``--py-docstrings`` it additionally walks every ``.py`` file under
+src/, tests/, benchmarks/, tools/ and examples/ and checks each docstring's
+markdown-doc references: a mentioned doc (``DESIGN.md``, ``EXPERIMENTS.md``,
+...) must exist at the repo root, and the ``EXPERIMENTS.md section Perf`` /
+``§Perf`` forms must match a heading of that document -- code pointing
+readers at documentation that does not exist is how stale docs hide.
+
 Exit code 0 when every reference resolves, 1 otherwise (each failure on
 its own line).
 
-    python tools/check_docs.py README.md DESIGN.md
+    python tools/check_docs.py --py-docstrings README.md DESIGN.md
 """
 from __future__ import annotations
 
 import ast
+import functools
 import re
 import sys
 from pathlib import Path
@@ -166,7 +174,73 @@ def check_file(path: Path) -> list:
     return errors
 
 
+# ------------------------------------------- Python-docstring doc references
+# roots whose .py docstrings are scanned with --py-docstrings
+PY_ROOTS = ("src", "tests", "benchmarks", "tools", "examples")
+# `SOMEDOC.md`, optionally followed by a `section Name` / `§Name` pointer
+_MD_REF = re.compile(r"\b([A-Za-z][\w-]*\.md)(?:[`'\")\],:;]*\s+(?:section\s+|§\s*)([A-Za-z][\w.-]*))?")
+
+
+def _docstrings(tree: ast.AST):
+    """(lineno, text) of every module/class/function docstring in the tree."""
+    nodes = [n for n in ast.walk(tree)
+             if isinstance(n, (ast.Module, ast.ClassDef, ast.FunctionDef, ast.AsyncFunctionDef))]
+    for n in nodes:
+        doc = ast.get_docstring(n, clean=False)
+        if doc:
+            body = n.body[0]
+            yield body.lineno, doc
+
+
+@functools.lru_cache(maxsize=32)
+def _doc_headings(md: str):
+    """Heading texts of a root-level markdown doc (None: no such doc)."""
+    path = REPO / md
+    if not path.exists():
+        return None
+    return tuple(_headings(path.read_text()))
+
+
+def check_docstring_refs(py: Path, errors: list) -> None:
+    """Every markdown-doc mention in ``py``'s docstrings must exist at the
+    repo root; section pointers must match one of the doc's headings."""
+    try:
+        rel = py.relative_to(REPO)
+    except ValueError:  # scanning a file outside the repo (tests)
+        rel = py
+    try:
+        tree = ast.parse(py.read_text(), filename=str(py))
+    except SyntaxError as e:
+        errors.append(f"{rel}: does not parse: {e}")
+        return
+    for lineno, doc in _docstrings(tree):
+        for m in _MD_REF.finditer(doc):
+            md, section = m.group(1), m.group(2)
+            if section:
+                section = section.rstrip(".,;:-")
+            headings = _doc_headings(md)
+            if headings is None:
+                errors.append(f"{rel}:{lineno}: docstring references `{md}` "
+                              f"which does not exist at the repo root")
+            elif section and not any(section.lower() in h.lower() for h in headings):
+                errors.append(f"{rel}:{lineno}: docstring references `{md} "
+                              f"section {section}` but {md} has no such heading")
+
+
+def check_py_docstrings() -> list:
+    errors: list = []
+    for root in PY_ROOTS:
+        base = REPO / root
+        if not base.is_dir():
+            continue
+        for py in sorted(base.rglob("*.py")):
+            check_docstring_refs(py, errors)
+    return errors
+
+
 def main(argv) -> int:
+    scan_py = "--py-docstrings" in argv
+    argv = [a for a in argv if a != "--py-docstrings"]
     files = [Path(a) for a in argv] or [REPO / "README.md", REPO / "DESIGN.md"]
     all_errors: list = []
     for f in files:
@@ -174,6 +248,8 @@ def main(argv) -> int:
             all_errors.append(f"{f}: file does not exist")
             continue
         all_errors.extend(check_file(f))
+    if scan_py:
+        all_errors.extend(check_py_docstrings())
     if all_errors:
         print(f"doc check FAILED ({len(all_errors)} problems):")
         for e in all_errors:
