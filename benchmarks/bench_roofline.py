@@ -1,19 +1,110 @@
-"""Dry-run roofline summary (EXPERIMENTS.md section Roofline)."""
+"""Roofline rows: dry-run LLM-arch summary + serving descent bytes moved.
+
+Two row families (EXPERIMENTS.md section Roofline):
+
+* ``roofline/<arch>/<shape>`` -- the launch/dryrun compute/memory/collective
+  decomposition (full runs only; needs ``experiments/dryrun`` artifacts).
+* ``roofline/descent/*`` -- the analytic bytes-moved model of the serving
+  descent (repro.roofline.descent_bytes) priced on the SAME deterministic
+  quick config and converged frontier widths as bench_serving's quick A/Bs.
+  The ``bytes=`` counters are exact ints diffed deterministically by
+  tools/bench_compare.py; the legacy/narrow ratio row is the scoreboard
+  evidence for the >=2x descent-bytes reduction of DESIGN.md §3.5 (asserted
+  here so a regression fails the benchmark, not just the diff).
+"""
 from pathlib import Path
 
+import numpy as np
+
 from . import common as C
+
+
+def _descent_rows(rows):
+    from repro.data.workloads import make_workload
+    from repro.kernels import ops
+    from repro.roofline import descent_bytes as DB
+    from repro.serve.engine import retrieve_workload
+
+    from .bench_serving import SWEEP_M, quick_snapshot
+
+    ds, snap, max_leaves = quick_snapshot()
+    test = make_workload(ds, m=SWEEP_M, dist="MIX", seed=7)
+    out = retrieve_workload(snap, test, max_leaves=max_leaves)
+    widths = [int(w) for w in out["frontier_widths"]]
+    M = test.m
+    W = snap.n_words
+    OBJ = snap.obj_per_leaf
+    K = snap.n_leaves
+    T = int(np.asarray(out["ids"]).shape[1]) // OBJ
+    wids, _ = ops.pack_query_words(np.asarray(test.kw_bitmap))
+    Wp = int(wids.shape[1])
+    dict_sizes = [
+        (int(dx.size), int(dy.size))
+        for dx, dy in zip(snap.level_dict_x, snap.level_dict_y)
+    ]
+    bank = ops.leaf_bank_bytes(K, OBJ, W)
+    auto = "prefetch" if bank > ops.FUSED_VMEM_BANK_BYTES else "vmem"
+
+    legacy_f = DB.descent_bytes(M, widths, W)
+    narrow_f = DB.descent_bytes(
+        M, widths, W, narrow=True, packed_words=Wp, dict_sizes=dict_sizes
+    )
+    rows.append(C.row(
+        "roofline/descent/filter-legacy", 0.0,
+        f"bytes={legacy_f.total} ms={legacy_f.total_ms:.4f} widths=[{','.join(map(str, widths))}]"))
+    rows.append(C.row(
+        "roofline/descent/filter-narrow", 0.0,
+        f"bytes={narrow_f.total} ms={narrow_f.total_ms:.4f} wp={Wp}"))
+    for variant in ("unfused", "vmem", "prefetch"):
+        vb = DB.verify_bytes(M, T, OBJ, W, K, variant)
+        rows.append(C.row(
+            f"roofline/descent/verify-{variant}", 0.0,
+            f"bytes={vb} ms={DB.modeled_ms(vb):.4f}"))
+    rows.append(C.row(
+        "roofline/descent/bank", 0.0,
+        f"bytes={bank} cutoff={ops.FUSED_VMEM_BANK_BYTES} auto={auto}"))
+
+    # end-to-end before/after: the seed path (f32 planes + unfused verify)
+    # vs the bandwidth-lean path (narrow planes + auto-selected fused verify)
+    before = DB.descent_bytes(
+        M, widths, W, t=T, obj_per_leaf=OBJ, n_leaves=K,
+        verify_variant="unfused")
+    after = DB.descent_bytes(
+        M, widths, W, narrow=True, packed_words=Wp, dict_sizes=dict_sizes,
+        t=T, obj_per_leaf=OBJ, n_leaves=K, verify_variant=auto)
+    cmp = DB.compare(before, after)
+    rows.append(C.row(
+        "roofline/descent/total-before", 0.0,
+        f"bytes={before.total} ms={before.total_ms:.4f}"))
+    rows.append(C.row(
+        "roofline/descent/total-after", 0.0,
+        f"bytes={after.total} ms={after.total_ms:.4f}"))
+    rows.append(C.row(
+        "roofline/descent/reduction", 0.0,
+        f"ratio={cmp['ratio']:.2f}x filter_ratio="
+        f"{legacy_f.total / max(narrow_f.total, 1):.2f}x"))
+    assert cmp["ratio"] >= 2.0, (
+        f"modeled descent-bytes reduction fell below 2x: {cmp['ratio']:.2f}x"
+    )
+    return rows
+
+
+def run_quick():
+    """CI lane: descent bytes only (the dryrun artifacts are full-run)."""
+    return _descent_rows([])
 
 
 def run():
     rows = []
     d = Path("experiments/dryrun")
     if not d.exists():
-        return [C.row("roofline/missing", 0.0, "run launch/dryrun first")]
-    from repro.roofline.analysis import load_rows
+        rows.append(C.row("roofline/missing", 0.0, "run launch/dryrun first"))
+    else:
+        from repro.roofline.analysis import load_rows
 
-    for r in load_rows(str(d)):
-        rows.append(C.row(
-            f"roofline/{r.arch}/{r.shape}", 0.0,
-            f"compute_ms={r.compute_s*1e3:.2f};memory_ms={r.memory_s*1e3:.2f};"
-            f"collective_ms={r.collective_s*1e3:.2f};bound={r.bottleneck};useful={r.useful_ratio:.2f}"))
-    return rows
+        for r in load_rows(str(d)):
+            rows.append(C.row(
+                f"roofline/{r.arch}/{r.shape}", 0.0,
+                f"compute_ms={r.compute_s*1e3:.2f};memory_ms={r.memory_s*1e3:.2f};"
+                f"collective_ms={r.collective_s*1e3:.2f};bound={r.bottleneck};useful={r.useful_ratio:.2f}"))
+    return _descent_rows(rows)

@@ -42,11 +42,11 @@ from repro.serve.plan import PlanCache
 SWEEP_M = 256  # sharded-sweep batch: large enough to give every shard work
 
 
-def _time_mode(bw, test, max_leaves, mode, reps=3, fused=None):
-    out = retrieve_workload(bw, test, max_leaves=max_leaves, mode=mode, fused=fused)  # warm
+def _time_mode(bw, test, max_leaves, mode, reps=3, fused=None, **kw):
+    out = retrieve_workload(bw, test, max_leaves=max_leaves, mode=mode, fused=fused, **kw)  # warm
     t0 = time.perf_counter()
     for _ in range(reps):
-        out = retrieve_workload(bw, test, max_leaves=max_leaves, mode=mode, fused=fused)
+        out = retrieve_workload(bw, test, max_leaves=max_leaves, mode=mode, fused=fused, **kw)
     dt = (time.perf_counter() - t0) / reps / test.m * 1e6
     return dt, out
 
@@ -72,6 +72,53 @@ def _ab_fused(rows, snap, test, max_leaves, reps=3):
     )
     rows.append(
         C.row("serving/fused-speedup", 0.0, f"speedup={dt_u / dt_f:.2f}x")
+    )
+    return rows
+
+
+def _ab_quantized(rows, snap, test, max_leaves, reps=3):
+    """Narrow vs f32 descent A/B (DESIGN.md §3.5): the same frontier descent
+    on the int16-code / packed-word shadow planes vs the full f32/W planes.
+    The narrow planes are lossless (exact dictionary dequantization), so ids
+    AND every traversal counter must be identical (asserted)."""
+    dt_w, out_w = _time_mode(snap, test, max_leaves, "frontier", reps, quantized=False)
+    dt_n, out_n = _time_mode(snap, test, max_leaves, "frontier", reps, quantized=True)
+    for key in ("ids", "counts", "verified", "overflow", "nodes_scanned", "nodes_checked"):
+        assert np.array_equal(np.asarray(out_w[key]), np.asarray(out_n[key])), (
+            f"narrow/f32 descent {key} mismatch"
+        )
+    rows.append(
+        C.row("serving/descent-f32", dt_w,
+              f"checked={int(out_w['nodes_checked'].sum())}")
+    )
+    rows.append(
+        C.row("serving/descent-narrow", dt_n,
+              f"checked={int(out_n['nodes_checked'].sum())}")
+    )
+    return rows
+
+
+def _ab_prefetch(rows, snap, test, max_leaves, reps=3):
+    """VMEM-fused vs scalar-prefetched fused verify A/B (DESIGN.md §3.5):
+    identical frontier descent, the leaf verify either re-streams the whole
+    bank per query block (vmem) or issues one DMA per (query, slot) block
+    (prefetch). Elementwise-identical outputs asserted -- the prefetch
+    variant is what keeps banks beyond VMEM on the fused path."""
+    dt_v, out_v = _time_mode(snap, test, max_leaves, "frontier", reps,
+                             fused=True, fused_variant="vmem")
+    dt_p, out_p = _time_mode(snap, test, max_leaves, "frontier", reps,
+                             fused=True, fused_variant="prefetch")
+    for key in ("ids", "counts", "verified", "overflow"):
+        assert np.array_equal(np.asarray(out_v[key]), np.asarray(out_p[key])), (
+            f"vmem/prefetch fused {key} mismatch"
+        )
+    rows.append(
+        C.row("serving/verify-fused-vmem", dt_v,
+              f"verified={int(out_v['verified'].sum())}")
+    )
+    rows.append(
+        C.row("serving/verify-fused-prefetch", dt_p,
+              f"verified={int(out_p['verified'].sum())}")
     )
     return rows
 
@@ -139,18 +186,15 @@ def _sweep_sharded(rows, snap, test, max_leaves, reps=3):
     return rows, scale
 
 
-def run_quick():
-    """CI smoke: deterministic grid hierarchy (no DQN build), the fused-vs-
-    unfused verification A/B (identical ids/counters asserted), and the
-    sharded sweep -- asserts sharded-vs-single-device parity on every mesh
-    size and that aggregate throughput scales (>1x) from 1 to full mesh."""
-    import jax
-
+def quick_snapshot():
+    """The deterministic quick serving config (no DQN build): a grid
+    hierarchy over the fs profile, frozen into a snapshot. Shared with
+    bench_roofline so the bytes-moved rows price exactly the config the
+    serving A/Bs measure. Returns ``(ds, snap, max_leaves)``."""
     from repro.core.index import assemble_index
     from repro.core.packing import HierarchyResult
     from repro.core.types import ClusterSet
     from repro.data.synth import make_dataset
-    from repro.data.workloads import make_workload
 
     ds = make_dataset("fs", n=3000, seed=0)
     g = 8
@@ -165,9 +209,25 @@ def run_quick():
     hier = HierarchyResult(parents=[pid.astype(np.int32)], level_labels=[], packs=[])
     index = assemble_index(ds, clusters, hier)
     snap = IndexSnapshot.build(index, ds)
+    return ds, snap, clusters.k
+
+
+def run_quick():
+    """CI smoke: deterministic grid hierarchy (no DQN build), the fused-vs-
+    unfused / vmem-vs-prefetch / narrow-vs-f32 A/Bs (identical ids/counters
+    asserted), and the sharded sweep -- asserts sharded-vs-single-device
+    parity on every mesh size and that aggregate throughput scales (>1x)
+    from 1 to full mesh."""
+    import jax
+
+    from repro.data.workloads import make_workload
+
+    ds, snap, max_leaves = quick_snapshot()
     test = make_workload(ds, m=SWEEP_M, dist="MIX", seed=7)
-    rows = _ab_fused([], snap, test, max_leaves=clusters.k)
-    rows, scale = _sweep_sharded(rows, snap, test, max_leaves=clusters.k)
+    rows = _ab_fused([], snap, test, max_leaves=max_leaves)
+    rows = _ab_prefetch(rows, snap, test, max_leaves=max_leaves)
+    rows = _ab_quantized(rows, snap, test, max_leaves=max_leaves)
+    rows, scale = _sweep_sharded(rows, snap, test, max_leaves=max_leaves)
     if len(jax.devices()) > 1:
         assert scale > 1.0, f"no aggregate throughput scaling: {scale:.2f}x"
     return rows
@@ -209,6 +269,8 @@ def run():
     us, st = C.time_queries(art.index, ds, test)
     rows.append(C.row("serving/serial-host", us, f"cost={st.total_cost:.0f}"))
     rows = _ab_fused(rows, bw, test, max_leaves)
+    rows = _ab_prefetch(rows, bw, test, max_leaves)
+    rows = _ab_quantized(rows, bw, test, max_leaves)
 
     sweep = C.workload("fs", C.DEFAULT_N, SWEEP_M, "MIX", 0.0005, 5, 25)
     # frontier-only snapshot for the sweep: the dense A/B adjacency matrices

@@ -43,6 +43,7 @@ SCOREBOARD = {
     "bench_knn": "BENCH_knn.json",
     "bench_construction": "BENCH_construction.json",
     "bench_dynamic": "BENCH_dynamic.json",
+    "bench_roofline": "BENCH_roofline.json",
 }
 
 

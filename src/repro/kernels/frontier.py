@@ -1,18 +1,36 @@
-"""Pallas TPU kernel: sparse-frontier node filtering (DESIGN.md §3).
+"""Pallas TPU kernels: sparse-frontier node filtering (DESIGN.md §3).
 
 ``skr_filter`` scores the full (query x node) cross product -- O(M*K) work
 per level no matter how selective the learned hierarchy is. The frontier
-kernel instead receives, per query, a *gathered* tile of candidate nodes
+kernels instead receive, per query, a *gathered* tile of candidate nodes
 (the query's frontier): MBRs ``(BM, BF, 4)``, bitmaps ``(BM, BF, W)`` and a
-validity plane for the -1 padding slots. It reuses the skr_filter inner
-loop -- rectangle intersect + unrolled bitmap-word AND -- but over the
-frontier tile, so per-level work is O(M*F) with F the bucketed frontier
-width, not the level width.
+validity plane for the -1 padding slots, so per-level work is O(M*F) with F
+the bucketed frontier width, not the level width.
+
+Two variants share the rectangle-intersect + keyword-AND predicate:
+
+* ``frontier_filter`` -- the full-width f32/uint32 baseline (kept for A/B
+  and for the delta-augmented fallback, whose planes are not dictionary
+  encoded).
+* ``frontier_filter_narrow`` -- the bandwidth-lean descent. MBR planes
+  arrive as **int16 rank codes** into per-level sorted coordinate
+  dictionaries and are dequantized *inside* the kernel by a VMEM gather,
+  reconstructing the exact f32 coordinates (lossless, so the survivor set
+  is bit-identical to the f32 path -- strictly stronger than the
+  conservative-superset requirement). Bitmaps arrive as **packed word
+  planes**: ops.pack_query_words keeps only each query's nonzero bitmap
+  words (static bucketed width Wp <= W), and the engine gathers just those
+  Wp words per frontier slot, so the biggest descent operand shrinks from
+  ``(M, F, W)`` u32 to ``(M, F, Wp)``.
 
 Layout notes (TPU): the minor dimension is the frontier width (BF = 128
-lanes by default); the bitmap plane ``(BM, BF, W)`` is the big operand and
-streams through VMEM one word-plane at a time via the static W unroll, so
-only (BM, BF) boolean accumulators stay live.
+lanes by default); the bitmap plane is the big operand. The keyword test is
+one packed word-plane AND followed by a single ``any``-reduction over the
+word axis (popcount-style) per tile -- the reduction tree lives in
+registers, so only the (BM, BF) boolean accumulator is live, same as the
+old static W unroll but without W sliced passes over the tile. The
+coordinate dictionaries are tiny (<= 2n f32 per axis per level) and are
+pinned whole in VMEM across the grid.
 """
 from __future__ import annotations
 
@@ -34,10 +52,7 @@ def _frontier_kernel(q_rects_ref, q_bm_ref, f_mbrs_ref, f_bm_ref, f_valid_ref, o
     )  # (BM, BF)
     qb = q_bm_ref[...]  # (BM, W) uint32
     fb = f_bm_ref[...]  # (BM, BF, W) uint32
-    W = qb.shape[1]
-    kw = jnp.zeros(inter.shape, dtype=jnp.bool_)
-    for w in range(W):  # static unroll over bitmap words (skr_filter inner loop)
-        kw = kw | ((fb[:, :, w] & qb[:, w][:, None]) != 0)
+    kw = jnp.any((fb & qb[:, None, :]) != 0, axis=-1)  # (BM, BF)
     out_ref[...] = (inter & kw & (f_valid_ref[...] > 0)).astype(jnp.int8)
 
 
@@ -72,3 +87,62 @@ def frontier_filter(
         out_shape=jax.ShapeDtypeStruct((M, F), jnp.int8),
         interpret=interpret,
     )(q_rects, q_bm, f_mbrs, f_bm, f_valid)
+
+
+def _frontier_narrow_kernel(
+    q_rects_ref, q_bits_ref, f_codes_ref, f_bm_ref, f_valid_ref, dict_x_ref, dict_y_ref, out_ref
+):
+    qr = q_rects_ref[...]  # (BM, 4) f32 -- queries stay full precision
+    fc = f_codes_ref[...].astype(jnp.int32)  # (BM, BF, 4) int16 rank codes
+    dx = dict_x_ref[...]  # (Dx,) f32 sorted distinct x coords
+    dy = dict_y_ref[...]  # (Dy,) f32 sorted distinct y coords
+    xlo = dx[fc[:, :, 0]]  # exact dequantization: VMEM gather, no rounding
+    ylo = dy[fc[:, :, 1]]
+    xhi = dx[fc[:, :, 2]]
+    yhi = dy[fc[:, :, 3]]
+    inter = (
+        (qr[:, 0:1] <= xhi) & (xlo <= qr[:, 2:3]) & (qr[:, 1:2] <= yhi) & (ylo <= qr[:, 3:4])
+    )  # (BM, BF)
+    qb = q_bits_ref[...]  # (BM, Wp) uint32 packed nonzero query words
+    fb = f_bm_ref[...]  # (BM, BF, Wp) uint32 gathered matching node words
+    kw = jnp.any((fb & qb[:, None, :]) != 0, axis=-1)  # (BM, BF)
+    out_ref[...] = (inter & kw & (f_valid_ref[...] > 0)).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bf", "interpret"))
+def frontier_filter_narrow(
+    q_rects: jax.Array,  # (M, 4) f32
+    q_bits: jax.Array,  # (M, Wp) uint32 packed query words (ops.pack_query_words)
+    f_codes: jax.Array,  # (M, F, 4) int16 MBR rank codes
+    f_bm: jax.Array,  # (M, F, Wp) uint32 packed node word planes
+    f_valid: jax.Array,  # (M, F) int8
+    dict_x: jax.Array,  # (Dx,) f32
+    dict_y: jax.Array,  # (Dy,) f32
+    bm: int = 8,
+    bf: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """(M, F) int8 survivor matrix, bit-identical to ``frontier_filter`` on
+    the dequantized planes. Inputs padded to tile multiples by ops.py; the
+    coordinate dictionaries are pinned whole (index map constant 0)."""
+    M, F = f_valid.shape
+    Wp = q_bits.shape[1]
+    bm = min(bm, M)
+    bf = min(bf, F)
+    grid = (pl.cdiv(M, bm), pl.cdiv(F, bf))
+    return pl.pallas_call(
+        _frontier_narrow_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 4), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, Wp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, bf, 4), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bm, bf, Wp), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bm, bf), lambda i, j: (i, j)),
+            pl.BlockSpec(dict_x.shape, lambda i, j: (0,)),
+            pl.BlockSpec(dict_y.shape, lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bf), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, F), jnp.int8),
+        interpret=interpret,
+    )(q_rects, q_bits, f_codes, f_bm, f_valid, dict_x, dict_y)

@@ -1,33 +1,51 @@
-"""Pallas TPU kernel: fused leaf gather + candidate verification.
+"""Pallas TPU kernels: fused leaf gather + candidate verification.
 
 The unfused serving hot path bounces the leaf-verification operands through
 HBM three times per batch: the frontier kernel writes the (M, F) survivor
 matrix, the host-side trace gathers the selected leaves' object blocks into
 a dense ``(M, take*OBJ)`` candidate plane -- the bitmap slab alone is
 ``(M, take*OBJ, W)`` u32, by far the biggest intermediate of a descent --
-and ``skr_verify`` streams that plane back in. This kernel consumes the
-survivor-derived leaf selection directly and performs the gather INSIDE the
-kernel: per query tile it walks the selected leaf slots, pulls each leaf's
-object block (``leaf_obj_x/y/bm/id``) out of the VMEM-resident bank, and
-verifies it in place, so the gathered candidate plane never exists in HBM.
+and ``skr_verify`` streams that plane back in. The fused kernels consume
+the survivor-derived leaf selection directly and perform the gather INSIDE
+the kernel, so the gathered candidate plane never exists in HBM.
 
-Outputs are bit-identical to ``gather -> skr_verify`` (same candidate
-ordering: leaf-slot-major, ``-1`` at non-matches), pinned by the ref-oracle
-sweep in tests/test_kernels.py and the engine-level fused/unfused parity
-suite in tests/test_query_parity.py:
+Both variants produce outputs bit-identical to ``gather -> skr_verify``
+(same candidate ordering: leaf-slot-major, ``-1`` at non-matches), pinned
+by the ref-oracle sweeps in tests/test_kernels.py and the engine-level
+fused/unfused parity suite in tests/test_query_parity.py:
 
 * ``ids``  (M, T*OBJ) int32 -- matching object ids, ``-1`` elsewhere;
 * ``kwv``  (M, T)     int32 -- per leaf slot, the count of keyword-matching
   valid candidates (the Eq.1 ``verified`` partial sums).
 
-Layout notes (TPU): the object bank is mapped whole into the kernel
-(``(K, OBJ)`` / ``(K, OBJ, W)`` blocks, index map pinned to 0), i.e. the
-kernel targets indexes whose leaf bank fits VMEM -- the single-chip serving
-regime this repo's quick configs exercise. The static T loop keeps only one
-leaf slot's ``(BM, OBJ, W)`` bitmap slab live at a time. For banks beyond
-VMEM the same kernel body works with a scalar-prefetched leaf-id grid
-(one DMA per (query, slot) block); that variant is future work gated on the
-scoreboard (EXPERIMENTS.md section Perf).
+Layout notes (TPU) -- two bank regimes, two kernels:
+
+* ``fused_verify`` (VMEM variant): the object bank is mapped whole into the
+  kernel (``(K, OBJ)`` / ``(K, OBJ, W)`` blocks, index map pinned to 0) and
+  a static T loop performs in-VMEM row gathers, keeping only one leaf
+  slot's ``(BM, OBJ, W)`` bitmap slab live at a time. Right answer when the
+  bank fits comfortably in VMEM (small-to-medium single-chip indexes).
+* ``fused_verify_prefetch`` (scalar-prefetch variant): the selected leaf-id
+  matrix rides in as a *scalar-prefetch* operand
+  (``pltpu.PrefetchScalarGridSpec``) and drives the bank BlockSpec index
+  maps over a ``(M, T)`` grid, so the pipeline issues exactly one DMA per
+  (query, slot) block -- only the selected ``(1, OBJ)`` / ``(1, OBJ, W)``
+  leaf rows ever enter VMEM. This keeps the fused path (and its
+  one-HBM-pass byte profile) for leaf banks far beyond VMEM, where the
+  VMEM variant cannot compile.
+
+Auto-selection lives in ``ops.fused_gather_verify(variant="auto")``, the
+default the engine's ``serve/engine.py::_verify_leaves`` passes through: it
+compares the bank's byte size (``leaf_bank_bytes``, the ``obj_x/y/bm/id``
+rows) against ``ops.FUSED_VMEM_BANK_BYTES`` and picks the VMEM variant
+below the cutoff, the prefetch variant above it -- so the engine never
+falls back to the unfused HBM round-trip on bank-size grounds (only a live
+DeltaBuffer disables fusion). ``variant="vmem"``/``"prefetch"`` force
+either side for A/B rows and the beyond-VMEM oracle sweeps.
+
+The keyword test in both kernels is one packed word-plane AND + a single
+``any``-reduction over the word axis (popcount-style), matching
+skr_verify's restructured inner loop.
 """
 from __future__ import annotations
 
@@ -36,6 +54,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _fused_verify_kernel(
@@ -52,7 +71,6 @@ def _fused_verify_kernel(
     oid = oid_ref[...]
     K = ox.shape[0]
     OBJ = ox.shape[1]
-    W = qb.shape[1]
     safe = jnp.clip(tl, 0, K - 1)
     for t in range(tl.shape[1]):  # static unroll over selected leaf slots
         leaf = safe[:, t]  # (BM,)
@@ -66,9 +84,7 @@ def _fused_verify_kernel(
             & (cy <= qr[:, 3:4])
         )  # (BM, OBJ)
         cbm = obm[leaf]  # (BM, OBJ, W): one slot's bitmap slab live at a time
-        kw = jnp.zeros(inr.shape, dtype=jnp.bool_)
-        for w in range(W):  # skr_verify's static word unroll
-            kw = kw | ((cbm[:, :, w] & qb[:, w][:, None]) != 0)
+        kw = jnp.any((cbm & qb[:, None, :]) != 0, axis=-1)  # (BM, OBJ)
         valid = (cid >= 0) & ok[:, t][:, None]
         match = inr & kw & valid
         ids_ref[:, t * OBJ : (t + 1) * OBJ] = jnp.where(match, cid, -1)
@@ -89,7 +105,7 @@ def fused_verify(
     interpret: bool = False,
 ):
     """(ids (M, T*OBJ) i32, kwv (M, T) i32): fused gather+verify over the
-    leaf bank. Query rows padded to tile multiples by ops.py."""
+    VMEM-resident leaf bank. Query rows padded to tile multiples by ops.py."""
     M, T = top_leaf.shape
     K, OBJ = obj_x.shape
     W = q_bm.shape[1]
@@ -118,3 +134,78 @@ def fused_verify(
         ],
         interpret=interpret,
     )(q_rects, q_bm, top_leaf, leaf_ok, obj_x, obj_y, obj_bm, obj_id)
+
+
+def _fused_prefetch_kernel(
+    tl_ref,  # scalar-prefetch: (M, T) int32 clamped leaf ids
+    q_rects_ref, q_bm_ref, leaf_ok_ref, ox_ref, oy_ref, obm_ref, oid_ref,
+    ids_ref, kwv_ref,
+):
+    qr = q_rects_ref[...]  # (1, 4)
+    qb = q_bm_ref[...]  # (1, W) uint32
+    ok = leaf_ok_ref[...] > 0  # (1, 1)
+    cx = ox_ref[...]  # (1, OBJ) -- the one DMA'd leaf row
+    cy = oy_ref[...]
+    cid = oid_ref[...]
+    inr = (
+        (cx >= qr[:, 0:1])
+        & (cx <= qr[:, 2:3])
+        & (cy >= qr[:, 1:2])
+        & (cy <= qr[:, 3:4])
+    )  # (1, OBJ)
+    kw = jnp.any((obm_ref[...] & qb[:, None, :]) != 0, axis=-1)  # (1, OBJ)
+    valid = (cid >= 0) & ok
+    match = inr & kw & valid
+    ids_ref[...] = jnp.where(match, cid, -1)
+    kwv_ref[...] = jnp.sum(kw & valid, axis=1, keepdims=True).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_verify_prefetch(
+    q_rects: jax.Array,  # (M, 4) f32
+    q_bm: jax.Array,  # (M, W) u32
+    top_leaf: jax.Array,  # (M, T) int32 selected leaf ids (dirty ids allowed)
+    leaf_ok: jax.Array,  # (M, T) int8 (1 = slot holds a selected leaf)
+    obj_x: jax.Array,  # (K, OBJ) f32 leaf object bank (HBM-resident)
+    obj_y: jax.Array,  # (K, OBJ) f32
+    obj_bm: jax.Array,  # (K, OBJ, W) u32
+    obj_id: jax.Array,  # (K, OBJ) int32, -1 pad
+    interpret: bool = False,
+):
+    """Scalar-prefetched twin of ``fused_verify`` for banks beyond VMEM.
+
+    The clamped leaf-id matrix is the scalar-prefetch operand; the ``(M, T)``
+    grid's bank BlockSpecs index through it, so each grid step DMAs exactly
+    the one ``(1, OBJ)`` / ``(1, OBJ, W)`` leaf row that (query, slot) pair
+    selected. Elementwise-identical outputs to ``fused_verify`` (same clamp +
+    ``leaf_ok``/``cid`` validity semantics)."""
+    M, T = top_leaf.shape
+    K, OBJ = obj_x.shape
+    W = q_bm.shape[1]
+    safe = jnp.clip(top_leaf.astype(jnp.int32), 0, K - 1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(M, T),
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda i, t, tl: (i, 0)),
+            pl.BlockSpec((1, W), lambda i, t, tl: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, t, tl: (i, t)),
+            pl.BlockSpec((1, OBJ), lambda i, t, tl: (tl[i, t], 0)),
+            pl.BlockSpec((1, OBJ), lambda i, t, tl: (tl[i, t], 0)),
+            pl.BlockSpec((1, OBJ, W), lambda i, t, tl: (tl[i, t], 0, 0)),
+            pl.BlockSpec((1, OBJ), lambda i, t, tl: (tl[i, t], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, OBJ), lambda i, t, tl: (i, t)),
+            pl.BlockSpec((1, 1), lambda i, t, tl: (i, t)),
+        ],
+    )
+    return pl.pallas_call(
+        _fused_prefetch_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((M, T * OBJ), jnp.int32),
+            jax.ShapeDtypeStruct((M, T), jnp.int32),
+        ],
+        interpret=interpret,
+    )(safe, q_rects, q_bm, leaf_ok, obj_x, obj_y, obj_bm, obj_id)

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: Boolean-kNN frontier distance filtering (DESIGN.md §6).
+"""Pallas TPU kernels: Boolean-kNN frontier distance filtering (DESIGN.md §6).
 
 The distance-bounded descent generalizes the range frontier filter
 (``kernels/frontier.py``): instead of an intersect/bitmap boolean, each
@@ -9,11 +9,19 @@ one VMEM-resident pass. Slots that fail the bitmap AND (or are ``-1``
 padding) come back as ``+inf`` -- the natural "never survives a distance
 bound" sentinel, mirroring the NEVER_RECT padding of the range path.
 
+Like the range path, two variants share the predicate: ``knn_filter`` on
+full-width f32/uint32 planes (A/B baseline and delta-augmented fallback)
+and ``knn_filter_narrow`` on int16 rank-coded MBR planes + packed word
+planes. The narrow kernel dequantizes the codes to exact f32 via a VMEM
+dictionary gather before the distance computation, so the emitted distances
+are bit-identical to the f32 kernel's -- the bound-tightening descent and
+top-k merges see the same numbers on either path.
+
 Layout notes (TPU): identical tiling to ``frontier_filter`` -- the minor
-dimension is the frontier width (BF = 128 lanes by default), the bitmap
-plane ``(BM, BF, W)`` streams through VMEM one word-plane at a time via the
-static W unroll, and only the (BM, BF) distance/keyword accumulators stay
-live.
+dimension is the frontier width (BF = 128 lanes by default). The keyword
+test is one packed word-plane AND + a single ``any``-reduction over the
+word axis per tile (popcount-style); only the (BM, BF) distance/keyword
+accumulators stay live.
 """
 from __future__ import annotations
 
@@ -24,21 +32,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def _mbr_sq_dist(px, py, xlo, ylo, xhi, yhi):
+    # squared min-distance from point to (closed) MBR: clamp the outside gap
+    dx = jnp.maximum(jnp.maximum(xlo - px, px - xhi), 0.0)
+    dy = jnp.maximum(jnp.maximum(ylo - py, py - yhi), 0.0)
+    return dx * dx + dy * dy
+
+
 def _knn_kernel(q_pts_ref, q_bm_ref, f_mbrs_ref, f_bm_ref, f_valid_ref, out_ref):
     qp = q_pts_ref[...]  # (BM, 2)
     fm = f_mbrs_ref[...]  # (BM, BF, 4)
-    px = qp[:, 0:1]
-    py = qp[:, 1:2]
-    # squared min-distance from point to (closed) MBR: clamp the outside gap
-    dx = jnp.maximum(jnp.maximum(fm[:, :, 0] - px, px - fm[:, :, 2]), 0.0)
-    dy = jnp.maximum(jnp.maximum(fm[:, :, 1] - py, py - fm[:, :, 3]), 0.0)
-    d2 = dx * dx + dy * dy  # (BM, BF)
+    d2 = _mbr_sq_dist(qp[:, 0:1], qp[:, 1:2], fm[:, :, 0], fm[:, :, 1], fm[:, :, 2], fm[:, :, 3])
     qb = q_bm_ref[...]  # (BM, W) uint32
     fb = f_bm_ref[...]  # (BM, BF, W) uint32
-    W = qb.shape[1]
-    kw = jnp.zeros(d2.shape, dtype=jnp.bool_)
-    for w in range(W):  # static unroll over bitmap words (frontier_filter inner loop)
-        kw = kw | ((fb[:, :, w] & qb[:, w][:, None]) != 0)
+    kw = jnp.any((fb & qb[:, None, :]) != 0, axis=-1)  # (BM, BF)
     ok = kw & (f_valid_ref[...] > 0)
     out_ref[...] = jnp.where(ok, d2, jnp.inf).astype(jnp.float32)
 
@@ -75,3 +82,58 @@ def knn_filter(
         out_shape=jax.ShapeDtypeStruct((M, F), jnp.float32),
         interpret=interpret,
     )(q_pts, q_bm, f_mbrs, f_bm, f_valid)
+
+
+def _knn_narrow_kernel(
+    q_pts_ref, q_bits_ref, f_codes_ref, f_bm_ref, f_valid_ref, dict_x_ref, dict_y_ref, out_ref
+):
+    qp = q_pts_ref[...]  # (BM, 2) f32
+    fc = f_codes_ref[...].astype(jnp.int32)  # (BM, BF, 4) int16 rank codes
+    dx = dict_x_ref[...]  # (Dx,) f32
+    dy = dict_y_ref[...]  # (Dy,) f32
+    d2 = _mbr_sq_dist(
+        qp[:, 0:1], qp[:, 1:2], dx[fc[:, :, 0]], dy[fc[:, :, 1]], dx[fc[:, :, 2]], dy[fc[:, :, 3]]
+    )
+    qb = q_bits_ref[...]  # (BM, Wp) uint32 packed query words
+    fb = f_bm_ref[...]  # (BM, BF, Wp) uint32
+    kw = jnp.any((fb & qb[:, None, :]) != 0, axis=-1)
+    ok = kw & (f_valid_ref[...] > 0)
+    out_ref[...] = jnp.where(ok, d2, jnp.inf).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bf", "interpret"))
+def knn_filter_narrow(
+    q_pts: jax.Array,  # (M, 2) f32
+    q_bits: jax.Array,  # (M, Wp) uint32 packed query words (ops.pack_query_words)
+    f_codes: jax.Array,  # (M, F, 4) int16 MBR rank codes
+    f_bm: jax.Array,  # (M, F, Wp) uint32 packed node word planes
+    f_valid: jax.Array,  # (M, F) int8
+    dict_x: jax.Array,  # (Dx,) f32
+    dict_y: jax.Array,  # (Dy,) f32
+    bm: int = 8,
+    bf: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """(M, F) f32 squared MBR min-distances, bit-identical to ``knn_filter``
+    on the dequantized planes (+inf sentinel semantics unchanged)."""
+    M, F = f_valid.shape
+    Wp = q_bits.shape[1]
+    bm = min(bm, M)
+    bf = min(bf, F)
+    grid = (pl.cdiv(M, bm), pl.cdiv(F, bf))
+    return pl.pallas_call(
+        _knn_narrow_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 2), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, Wp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, bf, 4), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bm, bf, Wp), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bm, bf), lambda i, j: (i, j)),
+            pl.BlockSpec(dict_x.shape, lambda i, j: (0,)),
+            pl.BlockSpec(dict_y.shape, lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bf), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, F), jnp.float32),
+        interpret=interpret,
+    )(q_pts, q_bits, f_codes, f_bm, f_valid, dict_x, dict_y)

@@ -15,9 +15,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from .cdf_mlp import cdf_mlp_bank
-from .frontier import frontier_filter
-from .fused_verify import fused_verify
-from .knn_filter import knn_filter
+from .frontier import frontier_filter, frontier_filter_narrow
+from .fused_verify import fused_verify, fused_verify_prefetch
+from .knn_filter import knn_filter, knn_filter_narrow
 from .skr_filter import skr_filter
 from .skr_verify import skr_verify
 from . import ref
@@ -30,6 +30,54 @@ def _on_cpu() -> bool:
 # sentinel rectangle that intersects nothing under the closed-rect predicate
 # (xlo > xhi): used for node/query padding here and in serve.plan
 NEVER_RECT = (2.0, 2.0, -2.0, -2.0)
+
+# Leaf-bank byte budget above which the engine routes fused verification to
+# the scalar-prefetched kernel instead of mapping the bank whole into VMEM.
+# Half of a ~16 MiB per-core VMEM: leaves headroom for the query tiles, the
+# per-slot bitmap slab, and the output blocks. serve.engine._verify_leaves
+# applies the rule; fused_gather_verify(variant=...) overrides it.
+FUSED_VMEM_BANK_BYTES = 8 * 1024 * 1024
+
+
+def leaf_bank_bytes(n_leaves: int, obj_per_leaf: int, n_words: int) -> int:
+    """Bytes of the fused-verify leaf bank (obj_x/y/id f32+i32 rows plus the
+    (K, OBJ, W) u32 bitmap slab) -- the quantity the engine compares against
+    ``FUSED_VMEM_BANK_BYTES`` to pick the fused variant."""
+    return int(n_leaves) * int(obj_per_leaf) * (3 * 4 + int(n_words) * 4)
+
+
+def pack_query_words(q_bm, min_bucket: int = 4):
+    """Pack each query bitmap down to its nonzero words (host-side).
+
+    Returns ``(wids, bits)``: word indices (M, Wp) int32 and the word values
+    (M, Wp) uint32, with Wp the power-of-two bucket of the batch's max
+    nonzero-word count (capped at W). Slots past a query's own count index
+    one of its zero words, so their value is 0 and they can never
+    contribute a bit -- packing is exact: ``OR_w (bm & q) == OR_p (bits &
+    gathered)``. The engine gathers only the ``wids`` word planes per
+    frontier slot, shrinking the descent's biggest operand from (M, F, W)
+    to (M, F, Wp).
+
+    Host-side on purpose: Wp must be a *static* shape, and the batch's
+    bitmaps are concrete before any jitted descent step runs (the sharded
+    path packs before ``shard_map`` so every shard agrees on Wp).
+    """
+    q = np.asarray(q_bm, dtype=np.uint32)
+    M, W = q.shape
+    nnz = int((q != 0).sum(axis=1).max()) if M else 0
+    wp = max(int(nnz), 1)
+    # power-of-two bucket (>= min_bucket) to bound distinct jit shapes, as
+    # everywhere else in the width discipline; never wider than W itself
+    b = max(min_bucket, 1)
+    while b < wp:
+        b *= 2
+    wp = min(b, W)
+    # stable argsort of the "is zero" flag keeps nonzero words first, in
+    # original word order; zero-word slots carry value 0 and are inert
+    order = np.argsort(q == 0, axis=1, kind="stable")
+    wids = order[:, :wp].astype(np.int32)
+    bits = np.take_along_axis(q, wids, axis=1).astype(np.uint32)
+    return jnp.asarray(wids), jnp.asarray(bits)
 
 
 def padded_tile_len(n: int, tile: int = 128) -> int:
@@ -90,6 +138,33 @@ def filter_frontier(
     return out[:M, :F]
 
 
+def filter_frontier_narrow(
+    q_rects, q_bits, f_codes, f_bm, f_valid, dict_x, dict_y,
+    bm: int = 8, bf: int = 128, interpret: Optional[bool] = None,
+) -> jax.Array:
+    """(M, F) int8 frontier-survivor matrix on the bandwidth-lean planes:
+    int16 MBR rank codes (dequantized in-kernel through the per-level
+    coordinate dictionaries -- exact) and packed nonzero word planes from
+    ``pack_query_words``. Bit-identical survivors to ``filter_frontier`` on
+    the corresponding f32/full-width operands."""
+    if interpret is None:
+        interpret = _on_cpu()
+    M, F = f_valid.shape
+    bm_ = min(bm, max(M, 1))
+    bf_ = min(bf, max(F, 1))
+    qr = _pad_dim(jnp.asarray(q_rects, jnp.float32), 0, bm_)
+    qb = _pad_dim(jnp.asarray(q_bits, jnp.uint32), 0, bm_)
+    fc = _pad_dim(_pad_dim(jnp.asarray(f_codes, jnp.int16), 0, bm_), 1, bf_)
+    fb = _pad_dim(_pad_dim(jnp.asarray(f_bm, jnp.uint32), 0, bm_), 1, bf_)
+    fv = _pad_dim(_pad_dim(jnp.asarray(f_valid, jnp.int8), 0, bm_), 1, bf_)
+    out = frontier_filter_narrow(
+        qr, qb, fc, fb, fv,
+        jnp.asarray(dict_x, jnp.float32), jnp.asarray(dict_y, jnp.float32),
+        bm=bm_, bf=bf_, interpret=interpret,
+    )
+    return out[:M, :F]
+
+
 def knn_frontier_dist(
     q_pts, q_bm, f_mbrs, f_bm, f_valid, bm: int = 8, bf: int = 128,
     interpret: Optional[bool] = None,
@@ -107,6 +182,31 @@ def knn_frontier_dist(
     fb = _pad_dim(_pad_dim(jnp.asarray(f_bm, jnp.uint32), 0, bm_), 1, bf_)
     fv = _pad_dim(_pad_dim(jnp.asarray(f_valid, jnp.int8), 0, bm_), 1, bf_)
     out = knn_filter(qp, qb, fm, fb, fv, bm=bm_, bf=bf_, interpret=interpret)
+    return out[:M, :F]
+
+
+def knn_frontier_dist_narrow(
+    q_pts, q_bits, f_codes, f_bm, f_valid, dict_x, dict_y,
+    bm: int = 8, bf: int = 128, interpret: Optional[bool] = None,
+) -> jax.Array:
+    """(M, F) f32 squared frontier MBR min-distances on the bandwidth-lean
+    planes (int16 rank codes + packed word planes); bit-identical distances
+    to ``knn_frontier_dist`` on the corresponding f32/full-width operands."""
+    if interpret is None:
+        interpret = _on_cpu()
+    M, F = f_valid.shape
+    bm_ = min(bm, max(M, 1))
+    bf_ = min(bf, max(F, 1))
+    qp = _pad_dim(jnp.asarray(q_pts, jnp.float32), 0, bm_)
+    qb = _pad_dim(jnp.asarray(q_bits, jnp.uint32), 0, bm_)
+    fc = _pad_dim(_pad_dim(jnp.asarray(f_codes, jnp.int16), 0, bm_), 1, bf_)
+    fb = _pad_dim(_pad_dim(jnp.asarray(f_bm, jnp.uint32), 0, bm_), 1, bf_)
+    fv = _pad_dim(_pad_dim(jnp.asarray(f_valid, jnp.int8), 0, bm_), 1, bf_)
+    out = knn_filter_narrow(
+        qp, qb, fc, fb, fv,
+        jnp.asarray(dict_x, jnp.float32), jnp.asarray(dict_y, jnp.float32),
+        bm=bm_, bf=bf_, interpret=interpret,
+    )
     return out[:M, :F]
 
 
@@ -132,32 +232,48 @@ def verify_candidates(
 
 def fused_gather_verify(
     q_rects, q_bm, top_leaf, leaf_ok, obj_x, obj_y, obj_bm, obj_id,
-    bm: int = 8, interpret: Optional[bool] = None,
+    bm: int = 8, interpret: Optional[bool] = None, variant: str = "auto",
 ):
-    """Fused leaf gather + verify via the Pallas fused kernel (DESIGN.md §3.5).
+    """Fused leaf gather + verify via the Pallas fused kernels (DESIGN.md §3.5).
 
     Consumes the frontier descent's selected leaves (``top_leaf``/``leaf_ok``)
     and the snapshot's leaf object bank; the per-query candidate gather
-    happens inside the kernel (VMEM), so the ``(M, T*OBJ, W)`` gathered
-    bitmap plane never materializes in HBM. Returns ``(ids, kwv)``:
+    happens inside the kernel, so the ``(M, T*OBJ, W)`` gathered bitmap
+    plane never materializes in HBM. Returns ``(ids, kwv)``:
     ids (M, T*OBJ) i32 matching object ids (``-1`` fill, leaf-slot-major --
     bit-identical to the unfused gather -> ``verify_candidates`` ordering)
     and kwv (M, T) i32 per-slot Eq.1 ``verified`` partial counts.
+
+    ``variant`` picks the kernel: ``"vmem"`` maps the bank whole into VMEM
+    (static-T in-VMEM gathers), ``"prefetch"`` uses the scalar-prefetched
+    (M, T) leaf-id grid that DMAs one leaf row per (query, slot) block and
+    keeps fusion for banks beyond VMEM, ``"auto"`` compares the bank bytes
+    against ``FUSED_VMEM_BANK_BYTES``. Both variants are elementwise
+    identical (tests/test_kernels.py).
     """
     if interpret is None:
         interpret = _on_cpu()
+    if variant not in ("auto", "vmem", "prefetch"):
+        raise ValueError(f"unknown fused-verify variant: {variant!r}")
+    if variant == "auto":
+        K, OBJ = obj_x.shape
+        W = q_bm.shape[1]
+        big = leaf_bank_bytes(K, OBJ, W) > FUSED_VMEM_BANK_BYTES
+        variant = "prefetch" if big else "vmem"
     M = q_rects.shape[0]
     bm_ = min(bm, max(M, 1))
     qr = _pad_dim(jnp.asarray(q_rects, jnp.float32), 0, bm_)
     qb = _pad_dim(jnp.asarray(q_bm, jnp.uint32), 0, bm_)
     tl = _pad_dim(jnp.asarray(top_leaf, jnp.int32), 0, bm_)
     ok = _pad_dim(jnp.asarray(leaf_ok, jnp.int8), 0, bm_)
-    ids, kwv = fused_verify(
-        qr, qb, tl, ok,
+    bank = (
         jnp.asarray(obj_x, jnp.float32), jnp.asarray(obj_y, jnp.float32),
         jnp.asarray(obj_bm, jnp.uint32), jnp.asarray(obj_id, jnp.int32),
-        bm=bm_, interpret=interpret,
     )
+    if variant == "prefetch":
+        ids, kwv = fused_verify_prefetch(qr, qb, tl, ok, *bank, interpret=interpret)
+    else:
+        ids, kwv = fused_verify(qr, qb, tl, ok, *bank, bm=bm_, interpret=interpret)
     return ids[:M], kwv[:M]
 
 
@@ -179,10 +295,15 @@ def cdf_bank_forward(
 
 
 __all__ = [
+    "FUSED_VMEM_BANK_BYTES",
     "filter_pairs",
     "filter_frontier",
+    "filter_frontier_narrow",
     "fused_gather_verify",
     "knn_frontier_dist",
+    "knn_frontier_dist_narrow",
+    "leaf_bank_bytes",
+    "pack_query_words",
     "verify_candidates",
     "cdf_bank_forward",
     "ref",

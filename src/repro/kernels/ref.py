@@ -51,6 +51,27 @@ def frontier_filter_ref(
     return (inter & kw & (f_valid > 0)).astype(jnp.int8)
 
 
+def frontier_filter_narrow_ref(
+    q_rects: jax.Array,  # (M, 4) f32
+    q_bits: jax.Array,  # (M, Wp) uint32 -- packed nonzero query words
+    f_codes: jax.Array,  # (M, F, 4) int16 -- MBR rank codes
+    f_bm: jax.Array,  # (M, F, Wp) uint32 -- packed node word planes
+    f_valid: jax.Array,  # (M, F) int8
+    dict_x: jax.Array,  # (Dx,) f32 sorted distinct x coords
+    dict_y: jax.Array,  # (Dy,) f32 sorted distinct y coords
+) -> jax.Array:
+    """Narrow-plane twin of ``frontier_filter_ref``: dequantize the int16
+    rank codes through the per-level coordinate dictionaries (exact -- every
+    code indexes the f32 value it was built from), then apply the identical
+    intersect/keyword/validity predicate on the packed word planes."""
+    fc = f_codes.astype(jnp.int32)
+    f_mbrs = jnp.stack(
+        [dict_x[fc[:, :, 0]], dict_y[fc[:, :, 1]], dict_x[fc[:, :, 2]], dict_y[fc[:, :, 3]]],
+        axis=-1,
+    )
+    return frontier_filter_ref(q_rects, q_bits, f_mbrs, f_bm, f_valid)
+
+
 def knn_filter_ref(
     q_pts: jax.Array,  # (M, 2) f32
     q_bm: jax.Array,  # (M, W) uint32
@@ -68,6 +89,25 @@ def knn_filter_ref(
     d2 = dx * dx + dy * dy
     kw = jnp.any((f_bm & q_bm[:, None, :]) != 0, axis=-1)
     return jnp.where(kw & (f_valid > 0), d2, jnp.inf).astype(jnp.float32)
+
+
+def knn_filter_narrow_ref(
+    q_pts: jax.Array,  # (M, 2) f32
+    q_bits: jax.Array,  # (M, Wp) uint32 -- packed nonzero query words
+    f_codes: jax.Array,  # (M, F, 4) int16 -- MBR rank codes
+    f_bm: jax.Array,  # (M, F, Wp) uint32 -- packed node word planes
+    f_valid: jax.Array,  # (M, F) int8
+    dict_x: jax.Array,  # (Dx,) f32
+    dict_y: jax.Array,  # (Dy,) f32
+) -> jax.Array:
+    """Narrow-plane twin of ``knn_filter_ref`` (exact dictionary
+    dequantization, then identical distance/keyword semantics)."""
+    fc = f_codes.astype(jnp.int32)
+    f_mbrs = jnp.stack(
+        [dict_x[fc[:, :, 0]], dict_y[fc[:, :, 1]], dict_x[fc[:, :, 2]], dict_y[fc[:, :, 3]]],
+        axis=-1,
+    )
+    return knn_filter_ref(q_pts, q_bits, f_mbrs, f_bm, f_valid)
 
 
 def skr_verify_ref(

@@ -5,8 +5,11 @@ pass whether each (query, node) pair is *relevant*: the query rectangle
 intersects the node MBR AND the query keyword bitmap shares >=1 bit with the
 node bitmap. This is the hot loop of level-synchronous traversal: on HBM it
 touches ``M*4 + M*W + K*4 + K*W`` words and emits ``M*K`` bytes, so blocking
-both operands into VMEM and unrolling the bitmap-word loop keeps it at one
-HBM read per operand tile instead of one per pair.
+both operands into VMEM and reducing the bitmap-word axis in one packed
+``any``-reduction keeps it at one HBM read per operand tile instead of one
+per pair. (The node planes here are *shared* across the query tile --
+node-major -- so, unlike the frontier kernels, there is no per-query packed
+gather to exploit; the full W words stay resident.)
 
 Layout notes (TPU): the minor dimension of the output tile is the node tile
 (BK = 128 lanes); rect coordinates ride along as 4-wide minor arrays which
@@ -32,10 +35,8 @@ def _filter_kernel(q_rects_ref, q_bm_ref, n_mbrs_ref, n_bm_ref, out_ref):
     )  # (BM, BK)
     qb = q_bm_ref[...]  # (BM, W) uint32
     nb = n_bm_ref[...]  # (BK, W) uint32
-    W = qb.shape[1]
-    kw = jnp.zeros(inter.shape, dtype=jnp.bool_)
-    for w in range(W):  # static unroll over bitmap words
-        kw = kw | ((qb[:, w][:, None] & nb[:, w][None, :]) != 0)
+    # packed word-plane AND + single any-reduction per tile (popcount-style)
+    kw = jnp.any((qb[:, None, :] & nb[None, :, :]) != 0, axis=-1)  # (BM, BK)
     out_ref[...] = (inter & kw).astype(jnp.int8)
 
 

@@ -3,8 +3,11 @@
 After filtering, each query holds a capacity-padded candidate list (gathered
 from the leaf inverted files). The kernel verifies in-rectangle membership +
 keyword bitmap overlap + validity for a (query-tile x candidate-tile) block
-entirely in VMEM. The bitmap plane ``(BM, BC, W)`` is the big operand; we
-unroll the W word loop so only ``(BM, BC)`` registers accumulate.
+entirely in VMEM. The bitmap plane ``(BM, BC, W)`` is the big operand; the
+word axis collapses in one packed ``any``-reduction (popcount-style) so only
+``(BM, BC)`` registers accumulate. Candidates re-check in exact f32 here --
+this is the stage that guarantees the narrow-plane descent (frontier.py)
+cannot change reported ids.
 """
 from __future__ import annotations
 
@@ -27,10 +30,8 @@ def _verify_kernel(q_rects_ref, q_bm_ref, cx_ref, cy_ref, cbm_ref, cv_ref, out_r
     )
     qb = q_bm_ref[...]  # (BM, W)
     cb = cbm_ref[...]  # (BM, BC, W)
-    W = qb.shape[1]
-    kw = jnp.zeros(inr.shape, dtype=jnp.bool_)
-    for w in range(W):
-        kw = kw | ((cb[:, :, w] & qb[:, w][:, None]) != 0)
+    # packed word-plane AND + single any-reduction per tile (popcount-style)
+    kw = jnp.any((cb & qb[:, None, :]) != 0, axis=-1)  # (BM, BC)
     out_ref[...] = (inr & kw & (cv_ref[...] > 0)).astype(jnp.int8)
 
 

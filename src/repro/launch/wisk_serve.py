@@ -51,6 +51,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..sharding.compat import shard_map
 
 from ..configs.wisk import WiskServeConfig
+from ..kernels import ops
 from ..kernels.ref import skr_filter_ref, skr_verify_ref
 from ..serve.delta import DeltaBuffer, DeltaLog
 from ..serve.engine import (
@@ -404,13 +405,16 @@ def _pmax_needs(needs, dp):
     return jax.lax.pmax(arr, dp) if dp else arr
 
 
-def _skr_shard_body(snap, delta, q_rects, q_bm, *, widths, take, dp):
+def _skr_shard_body(snap, delta, q_rects, q_bm, wids, bits, *, widths, take, dp, narrow):
     """Per-shard SKR serving: the real frontier descent on the local query
     shard against the replicated snapshot (and replicated delta, when one
-    is live; no cross-shard collectives except the width-maxima pmax)."""
+    is live; no cross-shard collectives except the width-maxima pmax).
+    ``narrow`` (static) routes the descent through the bandwidth-lean planes
+    using the pre-sharded packed query words (``wids``/``bits`` -- packed
+    before ``shard_map`` so every shard agrees on the static Wp)."""
     plan = ExecutionPlan(tag="skr", widths=widths)
     frontier, surv, nodes_checked, _, needs = _descend_frontier(
-        snap, q_rects, q_bm, plan, delta
+        snap, q_rects, q_bm, plan, delta, (wids, bits) if narrow else None
     )
     top_leaf, leaf_ok, overflow = _select_leaves_frontier(
         frontier, surv, take, snap.n_leaves
@@ -419,20 +423,23 @@ def _skr_shard_body(snap, delta, q_rects, q_bm, *, widths, take, dp):
     return ids, counts, nodes_checked, kw_scanned, overflow, _pmax_needs(needs, dp)
 
 
-@functools.partial(jax.jit, static_argnames=("mesh", "widths", "take"))
-def _skr_sharded_exec(snap, delta, q_rects, q_bm, mesh, widths, take):
+@functools.partial(jax.jit, static_argnames=("mesh", "widths", "take", "narrow"))
+def _skr_sharded_exec(snap, delta, q_rects, q_bm, wids, bits, mesh, widths, take, narrow):
     dp = dp_axes(mesh)
-    body = functools.partial(_skr_shard_body, widths=widths, take=take, dp=dp)
+    body = functools.partial(
+        _skr_shard_body, widths=widths, take=take, dp=dp, narrow=narrow
+    )
     fn = shard_map(
         body,
         mesh=mesh,
         # snapshot + delta replicated (P() prefix; delta=None is an empty
-        # pytree, so the same spec covers the no-delta fast path)
-        in_specs=(P(), P(), P(dp, None), P(dp, None)),
+        # pytree, so the same spec covers the no-delta fast path); queries
+        # and their packed words sharded on the data axes
+        in_specs=(P(), P(), P(dp, None), P(dp, None), P(dp, None), P(dp, None)),
         out_specs=(P(dp, None), P(dp), P(dp), P(dp), P(dp), P()),
         check_vma=False,
     )
-    return fn(snap, delta, q_rects, q_bm)
+    return fn(snap, delta, q_rects, q_bm, wids, bits)
 
 
 def serve_sharded(
@@ -469,14 +476,20 @@ def serve_sharded(
     rects, bms, m = pad_queries_to_bucket(
         q_rects, q_bm, minimum_bucket, shards=mesh_dp_size(mesh)
     )
-    rects, bms = _shard_queries(mesh, rects, bms)
+    # pack the padded batch's query words before sharding (static Wp shared
+    # by every shard; pad rows are all-zero bitmaps, so their words are 0)
+    narrow = delta is None and snap.has_narrow_planes
+    wids, bits = ops.pack_query_words(bms)
+    rects, bms, wids, bits = _shard_queries(mesh, rects, bms, wids, bits)
     snap_r = _replicated(snap, mesh)
     delta_r = _replicated(delta, mesh) if delta is not None else None
 
     def run(widths):
         leaf_width = widths[-1] if widths else snap.root_width()
         take = min(max_leaves, snap.n_leaves, leaf_width)
-        return _skr_sharded_exec(snap_r, delta_r, rects, bms, mesh, widths, take)
+        return _skr_sharded_exec(
+            snap_r, delta_r, rects, bms, wids, bits, mesh, widths, take, narrow
+        )
 
     widths, out = _converge_widths(snap, cache, "skr", run)
     ids, counts, nodes_checked, kw_scanned, overflow, _ = out
@@ -492,11 +505,15 @@ def serve_sharded(
     )
 
 
-def _knn_shard_body(snap, delta, points, q_bm, *, widths, k, kb, dp):
+def _knn_shard_body(snap, delta, points, q_bm, wids, bits, *, widths, k, kb, dp, narrow):
     """Per-shard Boolean kNN: the real distance-bounded descent on the local
-    query shard against the replicated snapshot (and replicated delta)."""
+    query shard against the replicated snapshot (and replicated delta).
+    ``narrow`` (static) routes the level filters through the bandwidth-lean
+    planes with the pre-sharded packed query words."""
     plan = ExecutionPlan(tag="knn", widths=widths)
-    result, needs = _descend_knn(snap, points, q_bm, k, kb, plan, delta)
+    result, needs = _descend_knn(
+        snap, points, q_bm, k, kb, plan, delta, (wids, bits) if narrow else None
+    )
     top_d, top_id, nodes_checked, verified, leaves_verified, pruned, _ = result
     fin = jnp.isfinite(top_d[:, :k])
     ids = jnp.where(fin, top_id[:, :k], -1)
@@ -506,21 +523,23 @@ def _knn_shard_body(snap, delta, points, q_bm, *, widths, k, kb, dp):
     )
 
 
-@functools.partial(jax.jit, static_argnames=("mesh", "widths", "k", "kb"))
-def _knn_sharded_exec(snap, delta, points, q_bm, mesh, widths, k, kb):
+@functools.partial(jax.jit, static_argnames=("mesh", "widths", "k", "kb", "narrow"))
+def _knn_sharded_exec(snap, delta, points, q_bm, wids, bits, mesh, widths, k, kb, narrow):
     dp = dp_axes(mesh)
-    body = functools.partial(_knn_shard_body, widths=widths, k=k, kb=kb, dp=dp)
+    body = functools.partial(
+        _knn_shard_body, widths=widths, k=k, kb=kb, dp=dp, narrow=narrow
+    )
     fn = shard_map(
         body,
         mesh=mesh,
         # snapshot + delta replicated (P() prefix; None delta = empty pytree)
-        in_specs=(P(), P(), P(dp, None), P(dp, None)),
+        in_specs=(P(), P(), P(dp, None), P(dp, None), P(dp, None), P(dp, None)),
         out_specs=(
             P(dp, None), P(dp, None), P(dp), P(dp), P(dp), P(dp), P(),
         ),
         check_vma=False,
     )
-    return fn(snap, delta, points, q_bm)
+    return fn(snap, delta, points, q_bm, wids, bits)
 
 
 def serve_knn_sharded(
@@ -559,14 +578,18 @@ def serve_knn_sharded(
     pts, bms, m = pad_knn_queries_to_bucket(
         points, q_bm, minimum_bucket, shards=mesh_dp_size(mesh)
     )
-    pts, bms = _shard_queries(mesh, pts, bms)
+    narrow = delta is None and snap.has_narrow_planes
+    wids, bits = ops.pack_query_words(bms)
+    pts, bms, wids, bits = _shard_queries(mesh, pts, bms, wids, bits)
     snap_r = _replicated(snap, mesh)
     delta_r = _replicated(delta, mesh) if delta is not None else None
     kb = round_up_bucket(k, min_topk_bucket)
 
     widths, out = _converge_widths(
         snap, cache, "knn",
-        lambda widths: _knn_sharded_exec(snap_r, delta_r, pts, bms, mesh, widths, k, kb),
+        lambda widths: _knn_sharded_exec(
+            snap_r, delta_r, pts, bms, wids, bits, mesh, widths, k, kb, narrow
+        ),
     )
     ids, dist2, nodes_checked, verified, leaves_verified, pruned, _ = out
     used = [snap.root_width(), *widths]

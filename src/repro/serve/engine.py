@@ -56,6 +56,15 @@ cost counters:
 * ``verified``/``overflow`` -- Eq.1 verification cost and ``max_leaves``
   spill accounting (kNN: ``verified``/``leaves_verified``/``pruned``).
 
+Bandwidth-lean descent (DESIGN.md §3.5): when the snapshot carries narrow
+planes (int16 rank-coded shadow MBRs + coordinate dictionaries,
+serve/snapshot.py:encode_mbr_planes) and no delta is live, the frontier and
+kNN level filters run on those planes plus per-query *packed* bitmap words
+(ops.pack_query_words), moving ~F*8 + F*Wp*4 bytes per (query, level)
+instead of F*16 + F*W*4. Dequantization happens inside the kernels via the
+dictionaries, so survivors/distances are bit-identical to the f32 path --
+the ``quantized`` knob on ``retrieve``/``retrieve_knn`` exists only for A/B.
+
 Incremental serving (DESIGN.md §7): every executor takes an optional
 ``delta`` (serve/delta.py:DeltaBuffer). When present, descents filter
 against the delta's *augmented* per-level MBR/bitmap arrays (widened by
@@ -100,6 +109,20 @@ def _level_arrays(snap: IndexSnapshot, delta: Optional[DeltaBuffer], li: int):
     return snap.level_mbrs[li], snap.level_bms[li]
 
 
+def _narrow_words(q_bm, delta, snap: IndexSnapshot, quantized: Optional[bool]):
+    """The packed query words driving the bandwidth-lean descent, or None.
+
+    ``quantized=None`` (auto) packs whenever the snapshot carries narrow
+    planes and no delta is live (a live delta's insert-widened MBRs are not
+    in the snapshot's coordinate dictionaries, so the descent falls back to
+    the f32 planes -- DESIGN.md §3.5). ``quantized=False`` forces the f32
+    full-width A/B baseline. Host-side: Wp must be a static shape.
+    """
+    if quantized is False or delta is not None or not snap.has_narrow_planes:
+        return None
+    return ops.pack_query_words(np.asarray(q_bm))
+
+
 # ------------------------------------------------------------ frontier steps
 @jax.jit
 def _filter_frontier_level(mbrs, bms, q_rects, q_bm, frontier):
@@ -107,6 +130,21 @@ def _filter_frontier_level(mbrs, bms, q_rects, q_bm, frontier):
     valid = frontier >= 0
     safe = jnp.clip(frontier, 0, mbrs.shape[0] - 1)
     surv = ops.filter_frontier(q_rects, q_bm, mbrs[safe], bms[safe], valid.astype(jnp.int8))
+    return surv, jnp.sum(valid, axis=1).astype(jnp.int32)
+
+
+@jax.jit
+def _filter_frontier_level_narrow(codes, bms, dict_x, dict_y, q_rects, wids, bits, frontier):
+    """Bandwidth-lean twin of ``_filter_frontier_level``: gathers int16 MBR
+    rank codes and only the query's packed bitmap word planes (the (M, F, W)
+    slab shrinks to (M, F, Wp)), then runs the narrow Pallas kernel --
+    bit-identical survivors (tests/test_query_parity.py)."""
+    valid = frontier >= 0
+    safe = jnp.clip(frontier, 0, codes.shape[0] - 1)
+    f_bm = bms[safe[:, :, None], wids[:, None, :]]  # (M, F, Wp)
+    surv = ops.filter_frontier_narrow(
+        q_rects, bits, codes[safe], f_bm, valid.astype(jnp.int8), dict_x, dict_y
+    )
     return surv, jnp.sum(valid, axis=1).astype(jnp.int32)
 
 
@@ -154,23 +192,31 @@ def _select_leaves_frontier(frontier, surv, take: int, n_leaf: int):
 
 
 def _verify_leaves(
-    snap: IndexSnapshot, q_rects, q_bm, top_leaf, leaf_ok, delta=None, fused=None
+    snap: IndexSnapshot, q_rects, q_bm, top_leaf, leaf_ok, delta=None, fused=None,
+    fused_variant: Optional[str] = None,
 ):
     """Capacity-bounded verification of the selected leaves (shared by modes).
 
     ``fused=None`` (auto) routes the static (no-delta) case through the
-    fused gather+verify Pallas kernel (DESIGN.md §3.5): the selected leaves'
-    object blocks are gathered and verified inside one kernel, so the
-    ``(M, T*OBJ, W)`` candidate bitmap plane never round-trips HBM between
-    the gather and ``skr_verify``. ``fused=False`` forces the unfused
-    gather -> ``verify_candidates`` pipeline (the A/B baseline); both paths
-    return identical ids/counters (tests/test_query_parity.py).
+    fused gather+verify Pallas kernels (DESIGN.md §3.5): the selected
+    leaves' object blocks are gathered and verified inside one kernel, so
+    the ``(M, T*OBJ, W)`` candidate bitmap plane never round-trips HBM
+    between the gather and ``skr_verify``. ``fused=False`` forces the
+    unfused gather -> ``verify_candidates`` pipeline (the A/B baseline);
+    both paths return identical ids/counters (tests/test_query_parity.py).
+
+    ``fused_variant`` picks the fused kernel: None (auto) compares the leaf
+    bank's bytes against ``ops.FUSED_VMEM_BANK_BYTES`` -- the VMEM-resident
+    kernel below the cutoff, the scalar-prefetched (M, T)-grid kernel above
+    it -- so banks beyond VMEM keep the fused path instead of falling back
+    to the unfused HBM round-trip. ``"vmem"``/``"prefetch"`` force a kernel
+    (A/B rows, beyond-VMEM tests).
 
     With a live ``delta``, each selected leaf's insert-buffer slots are
     appended to its snapshot object block as extra candidates and deleted
     snapshot objects are masked out, so the match set is exactly the merged
     (base + inserts - deletes) object set -- the delta path always runs
-    unfused (the fused kernel verifies snapshot blocks only).
+    unfused (the fused kernels verify snapshot blocks only).
     """
     if fused is None:
         fused = delta is None
@@ -178,6 +224,7 @@ def _verify_leaves(
         ids, kwv = ops.fused_gather_verify(
             q_rects, q_bm, top_leaf, leaf_ok.astype(jnp.int8),
             snap.leaf_obj_x, snap.leaf_obj_y, snap.leaf_obj_bm, snap.leaf_obj_id,
+            variant=fused_variant if fused_variant is not None else "auto",
         )
         counts = jnp.sum((ids >= 0).astype(jnp.int32), axis=1)
         return ids, counts, jnp.sum(kwv, axis=1)
@@ -219,7 +266,7 @@ def _root_frontier(snap: IndexSnapshot, M: int) -> jnp.ndarray:
 
 
 def _descend_frontier(
-    snap: IndexSnapshot, q_rects, q_bm, plan: ExecutionPlan, delta=None
+    snap: IndexSnapshot, q_rects, q_bm, plan: ExecutionPlan, delta=None, words=None
 ):
     """Shared range-query frontier descent.
 
@@ -228,9 +275,14 @@ def _descend_frontier(
     and overflow retries). ``plan.widths=(...)``: cached mode -- no per-level
     syncs; per-level child-count maxima are returned as device scalars for
     the caller's single batched overflow check. ``delta`` swaps in the
-    insert-widened level arrays (DESIGN.md §7).
+    insert-widened level arrays (DESIGN.md §7). ``words`` (the
+    ``(wids, bits)`` pair from ``ops.pack_query_words``) switches the level
+    filters to the bandwidth-lean narrow planes -- int16 MBR rank codes and
+    packed bitmap word planes, bit-identical survivors (DESIGN.md §3.5);
+    requires ``snap.has_narrow_planes`` and no live delta.
     """
     M = q_rects.shape[0]
+    narrow = words is not None and delta is None and snap.has_narrow_planes
     frontier = _root_frontier(snap, M)
     nodes_checked = jnp.zeros((M,), jnp.int32)
     used: List[int] = []
@@ -238,8 +290,15 @@ def _descend_frontier(
     surv = None
     for li in range(snap.n_levels):
         used.append(int(frontier.shape[1]))
-        mbrs, bms = _level_arrays(snap, delta, li)
-        surv, n_valid = _filter_frontier_level(mbrs, bms, q_rects, q_bm, frontier)
+        if narrow:
+            surv, n_valid = _filter_frontier_level_narrow(
+                snap.level_mbr_codes[li], snap.level_bms[li],
+                snap.level_dict_x[li], snap.level_dict_y[li],
+                q_rects, words[0], words[1], frontier,
+            )
+        else:
+            mbrs, bms = _level_arrays(snap, delta, li)
+            surv, n_valid = _filter_frontier_level(mbrs, bms, q_rects, q_bm, frontier)
         nodes_checked = nodes_checked + n_valid
         if li < snap.n_levels - 1:
             need = _frontier_child_counts(snap.child_counts[li], frontier, surv)
@@ -256,10 +315,12 @@ def _retrieve_frontier(
     cache: PlanCache,
     delta=None,
     fused=None,
+    words=None,
+    fused_variant: Optional[str] = None,
 ) -> Dict[str, np.ndarray]:
     M = q_rects.shape[0]
     plan = cache.plan("skr", snap.n_levels - 1)
-    descend = lambda p: _descend_frontier(snap, q_rects, q_bm, p, delta)
+    descend = lambda p: _descend_frontier(snap, q_rects, q_bm, p, delta, words)
     out = descend(plan)
     retried = cache.check_and_retry(plan, out[-1], descend)
     frontier, surv, nodes_checked, used, _ = retried or out
@@ -268,7 +329,7 @@ def _retrieve_frontier(
     take = min(max_leaves, n_leaf, int(frontier.shape[1]))
     top_leaf, leaf_ok, overflow = _select_leaves_frontier(frontier, surv, take, n_leaf)
     ids, counts, kw_scanned = _verify_leaves(
-        snap, q_rects, q_bm, top_leaf, leaf_ok, delta, fused
+        snap, q_rects, q_bm, top_leaf, leaf_ok, delta, fused, fused_variant
     )
     return dict(
         ids=np.asarray(ids),
@@ -301,6 +362,19 @@ def _knn_dist_level(mbrs, bms, points, q_bm, frontier):
     valid = frontier >= 0
     safe = jnp.clip(frontier, 0, mbrs.shape[0] - 1)
     d = ops.knn_frontier_dist(points, q_bm, mbrs[safe], bms[safe], valid.astype(jnp.int8))
+    return d, jnp.sum(valid, axis=1).astype(jnp.int32)
+
+
+@jax.jit
+def _knn_dist_level_narrow(codes, bms, dict_x, dict_y, points, wids, bits, frontier):
+    """Bandwidth-lean twin of ``_knn_dist_level`` (int16 rank codes +
+    packed word planes; bit-identical distances)."""
+    valid = frontier >= 0
+    safe = jnp.clip(frontier, 0, codes.shape[0] - 1)
+    f_bm = bms[safe[:, :, None], wids[:, None, :]]  # (M, F, Wp)
+    d = ops.knn_frontier_dist_narrow(
+        points, bits, codes[safe], f_bm, valid.astype(jnp.int8), dict_x, dict_y
+    )
     return d, jnp.sum(valid, axis=1).astype(jnp.int32)
 
 
@@ -418,7 +492,8 @@ def _knn_leaf_phase(
 
 
 def _descend_knn(
-    snap: IndexSnapshot, points, q_bm, k: int, kb: int, plan: ExecutionPlan, delta=None
+    snap: IndexSnapshot, points, q_bm, k: int, kb: int, plan: ExecutionPlan, delta=None,
+    words=None,
 ):
     """Distance-bounded kNN descent (probe -> bounded sweep -> leaf chunks).
 
@@ -426,10 +501,24 @@ def _descend_knn(
     per level, cached mode runs sync-free and returns device maxima for the
     caller's batched overflow check. ``delta`` swaps in the insert-widened
     level arrays and merges buffered inserts / masks deletes in the verify
-    stages (DESIGN.md §7).
+    stages (DESIGN.md §7). ``words`` switches the probe and sweep level
+    filters to the bandwidth-lean narrow planes (bit-identical distances;
+    leaf scoring stays on the exact f32 object bank either way).
     """
     M = int(points.shape[0])
     L = snap.n_levels
+    narrow = words is not None and delta is None and snap.has_narrow_planes
+
+    def dist_level(li, fr):
+        if narrow:
+            return _knn_dist_level_narrow(
+                snap.level_mbr_codes[li], snap.level_bms[li],
+                snap.level_dict_x[li], snap.level_dict_y[li],
+                points, words[0], words[1], fr,
+            )
+        mbrs, bms = _level_arrays(snap, delta, li)
+        return _knn_dist_level(mbrs, bms, points, q_bm, fr)
+
     top_d = jnp.full((M, kb), jnp.inf, jnp.float32)
     top_id = jnp.full((M, kb), _ID_SENTINEL, jnp.int32)
     nodes_checked = jnp.zeros((M,), jnp.int32)
@@ -442,8 +531,7 @@ def _descend_knn(
     for li in range(L):
         if li > 0:
             cand = _probe_children(snap.child_table[li - 1], cur)
-        mbrs, bms = _level_arrays(snap, delta, li)
-        d, nv = _knn_dist_level(mbrs, bms, points, q_bm, cand)
+        d, nv = dist_level(li, cand)
         nodes_checked = nodes_checked + nv
         cur = _probe_select(d, cand)
     probe_leaf = cur
@@ -461,8 +549,7 @@ def _descend_knn(
     leaf_d = None
     for li in range(L):
         used.append(int(frontier.shape[1]))
-        mbrs, bms = _level_arrays(snap, delta, li)
-        d, nv = _knn_dist_level(mbrs, bms, points, q_bm, frontier)
+        d, nv = dist_level(li, frontier)
         nodes_checked = nodes_checked + nv
         if li < L - 1:
             alive, pr = _bound_prune(d, top_d, k)
@@ -495,6 +582,7 @@ def retrieve_knn(
     min_topk_bucket: int = 8,
     plan_cache: Optional[PlanCache] = None,
     delta: Optional[DeltaBuffer] = None,
+    quantized: Optional[bool] = None,
 ) -> Dict[str, np.ndarray]:
     """Batched Boolean kNN over the device-resident index (DESIGN.md §6).
 
@@ -504,6 +592,9 @@ def retrieve_knn(
     (kw-matching objects scored), ``leaves_verified`` (leaf blocks
     verified), and ``pruned`` (kw-matching frontier slots bounded out).
     ``delta`` merges buffered inserts/deletes on the fly (DESIGN.md §7).
+    ``quantized=None`` (auto) descends on the snapshot's narrow planes when
+    available and no delta is live; ``False`` forces the f32 full-width A/B
+    baseline. Results are bit-identical either way (DESIGN.md §3.5).
     """
     points = jnp.asarray(points, jnp.float32)
     q_bm = jnp.asarray(q_bm, jnp.uint32)
@@ -517,8 +608,9 @@ def retrieve_knn(
         )
     kb = round_up_bucket(k, min_topk_bucket)
     cache = plan_cache if plan_cache is not None else default_plan_cache(snap)
+    words = _narrow_words(q_bm, delta, snap, quantized)
     plan = cache.plan("knn", snap.n_levels - 1)
-    descend = lambda p: _descend_knn(snap, points, q_bm, k, kb, p, delta)
+    descend = lambda p: _descend_knn(snap, points, q_bm, k, kb, p, delta, words)
     out = descend(plan)
     retried = cache.check_and_retry(plan, out[-1], descend)
     top_d, top_id, nodes_checked, verified, leaves_verified, pruned, used = (retried or out)[0]
@@ -589,6 +681,8 @@ def retrieve(
     plan_cache: Optional[PlanCache] = None,
     delta: Optional[DeltaBuffer] = None,
     fused: Optional[bool] = None,
+    quantized: Optional[bool] = None,
+    fused_variant: Optional[str] = None,
 ) -> Dict[str, np.ndarray]:
     """Batched SKR retrieval. Exact as long as <= max_leaves leaves are
     relevant per query (the spill is counted in ``overflow``).
@@ -598,15 +692,26 @@ def retrieve(
     frontier width state across calls; None uses the per-snapshot default.
     ``delta`` merges buffered inserts/deletes on the fly (DESIGN.md §7).
     ``fused`` picks the leaf verification pipeline (DESIGN.md §3.5): None
-    (auto) uses the fused gather+verify kernel whenever no delta is live;
-    False forces the unfused A/B baseline. Both are id- and counter-exact.
+    (auto) uses the fused gather+verify kernels whenever no delta is live;
+    False forces the unfused A/B baseline. ``fused_variant`` further picks
+    the fused kernel (None auto-selects by leaf-bank bytes vs
+    ``ops.FUSED_VMEM_BANK_BYTES``; ``"vmem"``/``"prefetch"`` force one).
+    ``quantized`` controls the bandwidth-lean frontier descent (DESIGN.md
+    §3.5): None (auto) uses the snapshot's int16 shadow MBR planes + packed
+    bitmap words when available and no delta is live; False forces the f32
+    full-width baseline. Every combination is id- and counter-exact.
     """
     q_rects = jnp.asarray(q_rects, jnp.float32)
     q_bm = jnp.asarray(q_bm, jnp.uint32)
     if mode == "frontier":
         cache = plan_cache if plan_cache is not None else default_plan_cache(snap)
-        return _retrieve_frontier(snap, q_rects, q_bm, max_leaves, cache, delta, fused)
+        words = _narrow_words(q_bm, delta, snap, quantized)
+        return _retrieve_frontier(
+            snap, q_rects, q_bm, max_leaves, cache, delta, fused, words, fused_variant
+        )
     if mode == "dense":
+        # the dense A/B path scores full levels against full-width planes by
+        # design; the narrow planes only accelerate the frontier descent
         return _retrieve_dense(snap, q_rects, q_bm, max_leaves, delta, fused)
     raise ValueError(f"unknown retrieve mode {mode!r}")
 
@@ -619,6 +724,8 @@ def retrieve_workload(
     plan_cache: Optional[PlanCache] = None,
     delta: Optional[DeltaBuffer] = None,
     fused: Optional[bool] = None,
+    quantized: Optional[bool] = None,
+    fused_variant: Optional[str] = None,
 ):
     return retrieve(
         snap,
@@ -629,4 +736,6 @@ def retrieve_workload(
         plan_cache=plan_cache,
         delta=delta,
         fused=fused,
+        quantized=quantized,
+        fused_variant=fused_variant,
     )

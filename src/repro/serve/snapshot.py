@@ -37,6 +37,45 @@ from ..core.query import padded_child_table, round_up_bucket
 from ..core.types import GeoTextDataset, WiskIndex
 
 
+# int16 code capacity per coordinate dictionary: levels whose distinct
+# coordinate count exceeds this are served on the f32 planes instead
+NARROW_DICT_MAX = 32767
+
+
+def encode_mbr_planes(level_mbrs):
+    """Rank-encode per-level MBR planes into int16 codes + f32 dictionaries.
+
+    Per level, the x dictionary is the sorted distinct set of {xlo, xhi}
+    values (y likewise) and each MBR coordinate is replaced by its rank --
+    ``dict[code]`` reconstructs the exact f32 value, so descending on the
+    codes is lossless (the "never prunes a node the f32 descent keeps"
+    guarantee holds with equality). Returns ``(codes, dicts_x, dicts_y)``
+    as parallel per-level lists, or three empty lists when any level's
+    dictionary would overflow the int16 code space (``NARROW_DICT_MAX``).
+    Host-only (snapshot construction time).
+    """
+    codes, dicts_x, dicts_y = [], [], []
+    for m in level_mbrs:
+        m = np.asarray(m, np.float32)
+        dx = np.unique(m[:, [0, 2]])
+        dy = np.unique(m[:, [1, 3]])
+        if dx.size > NARROW_DICT_MAX or dy.size > NARROW_DICT_MAX:
+            return [], [], []
+        c = np.stack(
+            [
+                np.searchsorted(dx, m[:, 0]),
+                np.searchsorted(dy, m[:, 1]),
+                np.searchsorted(dx, m[:, 2]),
+                np.searchsorted(dy, m[:, 3]),
+            ],
+            axis=1,
+        ).astype(np.int16)
+        codes.append(jnp.asarray(c))
+        dicts_x.append(jnp.asarray(dx.astype(np.float32)))
+        dicts_y.append(jnp.asarray(dy.astype(np.float32)))
+    return codes, dicts_x, dicts_y
+
+
 @dataclasses.dataclass(frozen=True, eq=False)
 class IndexSnapshot:
     """Immutable device-resident arrays for batched serving over a WiskIndex.
@@ -57,6 +96,15 @@ class IndexSnapshot:
     leaf_obj_bm: jnp.ndarray  # (K, OBJ, W)
     leaf_obj_id: jnp.ndarray  # (K, OBJ) int32, -1 pad
     obj_per_leaf: int
+    # Bandwidth-lean shadow MBR planes (DESIGN.md §3.5): per level, int16
+    # rank codes into the sorted distinct-coordinate dictionaries below.
+    # Lossless -- dict[code] reconstructs the exact f32 coordinate -- so the
+    # narrow descent's survivor set is bit-identical to the f32 planes'.
+    # Empty lists when a level's dictionary would overflow int16 (the engine
+    # then descends on the f32 planes).
+    level_mbr_codes: List[jnp.ndarray] = dataclasses.field(default_factory=list)  # (n, 4) i16
+    level_dict_x: List[jnp.ndarray] = dataclasses.field(default_factory=list)  # (Dx,) f32
+    level_dict_y: List[jnp.ndarray] = dataclasses.field(default_factory=list)  # (Dy,) f32
 
     @property
     def n_levels(self) -> int:
@@ -69,6 +117,12 @@ class IndexSnapshot:
     @property
     def n_words(self) -> int:
         return int(self.level_bms[0].shape[1])
+
+    @property
+    def has_narrow_planes(self) -> bool:
+        """True when every level carries int16 shadow MBR codes (the
+        bandwidth-lean descent of DESIGN.md §3.5 is available)."""
+        return len(self.level_mbr_codes) == len(self.level_mbrs) > 0
 
     def root_width(self) -> int:
         """Bucketed width of the root frontier (static)."""
@@ -128,6 +182,7 @@ class IndexSnapshot:
             oy[c, : ids.size] = dataset.locs[ids, 1]
             obm[c, : ids.size] = dataset.kw_bitmap[ids]
             oid[c, : ids.size] = ids
+        codes, dicts_x, dicts_y = encode_mbr_planes([l.mbrs for l in index.levels])
         return IndexSnapshot(
             level_mbrs=mbrs,
             level_bms=bms,
@@ -139,6 +194,9 @@ class IndexSnapshot:
             leaf_obj_bm=jnp.asarray(obm),
             leaf_obj_id=jnp.asarray(oid),
             obj_per_leaf=OBJ,
+            level_mbr_codes=codes,
+            level_dict_x=dicts_x,
+            level_dict_y=dicts_y,
         )
 
 
@@ -152,6 +210,9 @@ _ARRAY_FIELDS = (
     "leaf_obj_y",
     "leaf_obj_bm",
     "leaf_obj_id",
+    "level_mbr_codes",
+    "level_dict_x",
+    "level_dict_y",
 )
 
 

@@ -166,6 +166,7 @@ def test_scoreboard_modules_are_known():
     assert set(SCOREBOARD.values()) == {
         "BENCH_serving.json", "BENCH_knn.json",
         "BENCH_construction.json", "BENCH_dynamic.json",
+        "BENCH_roofline.json",
     }
 
 

@@ -246,3 +246,175 @@ def test_fused_verify_matches_unfused_gather_pipeline():
     exp_ids = np.where(match > 0, cid, -1)
     ids, _ = ops.fused_gather_verify(qr, qb, tl, ok, ox, oy, ob, oid)
     np.testing.assert_array_equal(np.asarray(ids), exp_ids)
+
+# ------------------------------------------------- narrow (bandwidth-lean) path
+
+def _narrow_operands(rng, m, f, w):
+    """Random narrow-descent operands: rank-coded MBR planes gathered at
+    random frontier slots + packed query word planes (DESIGN.md §3.5)."""
+    from repro.serve.snapshot import encode_mbr_planes
+
+    n = max(2 * f, 4)
+    lo = rng.uniform(0, 1, (n, 2)).astype(np.float32)
+    mbrs = np.concatenate(
+        [lo, lo + rng.uniform(0, 0.3, (n, 2)).astype(np.float32)], axis=1
+    )
+    codes, dicts_x, dicts_y = encode_mbr_planes([mbrs])
+    n_bm = (rng.integers(0, 2 ** 32, (n, w), dtype=np.uint32)
+            * rng.integers(0, 2, (n, w), dtype=np.uint32))
+    qb = (rng.integers(0, 2 ** 32, (m, w), dtype=np.uint32)
+          * rng.integers(0, 2, (m, w), dtype=np.uint32))
+    wids, bits = ops.pack_query_words(qb)
+    wids = np.asarray(wids)
+    idx = rng.integers(0, n, (m, f))
+    f_codes = np.asarray(codes[0])[idx]
+    f_bm = n_bm[idx[:, :, None], wids[:, None, :]]
+    fv = rng.integers(0, 2, (m, f)).astype(np.int8)
+    full = (qb, mbrs[idx], n_bm[idx])  # f32/full-width twins for cross-checks
+    return bits, f_codes, f_bm, fv, dicts_x[0], dicts_y[0], full
+
+
+@pytest.mark.parametrize(
+    "m,f,w",
+    [
+        (1, 1, 1),   # degenerate single-slot frontier
+        (5, 37, 3),  # nothing a multiple of the 128-lane tile
+        (9, 130, 4),  # frontier just past one lane tile
+        (33, 257, 8),  # queries and frontier both off-tile
+        (8, 128, 15),  # the fs-profile word width
+    ],
+)
+def test_frontier_filter_narrow_sweep(m, f, w):
+    """Narrow frontier kernel (interpret) vs its jnp oracle AND the f32
+    full-width reference: the rank-code/packed-word descent is lossless, so
+    all three survivor masks must be bit-identical."""
+    rng = np.random.default_rng(m * 7919 + f * 31 + w + 1)
+    qr = _rand_rects(rng, m)
+    bits, fc, fb, fv, dx, dy, (qb, fm_full, fb_full) = _narrow_operands(rng, m, f, w)
+    out = np.asarray(ops.filter_frontier_narrow(qr, bits, fc, fb, fv, dx, dy))
+    exp = np.asarray(ref.frontier_filter_narrow_ref(
+        *map(jnp.asarray, (qr, bits, fc, fb, fv)), dx, dy))
+    np.testing.assert_array_equal(out, exp)
+    wide = np.asarray(ref.frontier_filter_ref(
+        *map(jnp.asarray, (qr, qb, fm_full, fb_full, fv))))
+    np.testing.assert_array_equal(out, wide)
+
+
+@pytest.mark.parametrize(
+    "m,f,w",
+    [
+        (1, 1, 1),
+        (5, 37, 3),
+        (9, 130, 4),
+        (33, 257, 8),
+        (8, 128, 15),
+    ],
+)
+def test_knn_filter_narrow_sweep(m, f, w):
+    """Narrow kNN distance kernel (interpret) vs oracle + f32 reference:
+    identical +inf sentinel pattern, distances to float tolerance."""
+    rng = np.random.default_rng(m * 613 + f * 17 + w + 1)
+    qp = rng.uniform(0, 1, (m, 2)).astype(np.float32)
+    bits, fc, fb, fv, dx, dy, (qb, fm_full, fb_full) = _narrow_operands(rng, m, f, w)
+    out = np.asarray(ops.knn_frontier_dist_narrow(qp, bits, fc, fb, fv, dx, dy))
+    exp = np.asarray(ref.knn_filter_narrow_ref(
+        *map(jnp.asarray, (qp, bits, fc, fb, fv)), dx, dy))
+    np.testing.assert_array_equal(np.isinf(out), np.isinf(exp))
+    np.testing.assert_allclose(out[np.isfinite(out)], exp[np.isfinite(exp)], rtol=1e-6)
+    wide = np.asarray(ref.knn_filter_ref(
+        *map(jnp.asarray, (qp, qb, fm_full, fb_full, fv))))
+    np.testing.assert_array_equal(np.isinf(out), np.isinf(wide))
+    np.testing.assert_allclose(out[np.isfinite(out)], wide[np.isfinite(wide)], rtol=1e-6)
+
+
+@pytest.mark.parametrize("m,w,seed", [(1, 1, 0), (7, 15, 1), (16, 15, 2), (5, 32, 3)])
+def test_pack_query_words_properties(m, w, seed):
+    """pack_query_words contracts: packed width a power-of-two bucket (or
+    the full W when the bucket would exceed it), every nonzero word preserved
+    at its original id, pad slots inert, and the AND-any keyword predicate
+    invariant under packing."""
+    rng = np.random.default_rng(seed)
+    q = (rng.integers(0, 2 ** 32, (m, w), dtype=np.uint32)
+         * rng.integers(0, 2, (m, w), dtype=np.uint32))
+    wids, bits = ops.pack_query_words(q)
+    wids, bits = np.asarray(wids), np.asarray(bits)
+    wp = wids.shape[1]
+    assert bits.shape == (m, wp) and wp <= w
+    assert wp >= min(4, w)
+    assert (wp & (wp - 1)) == 0 or wp == w  # power-of-two bucket, capped at W
+    assert int((q != 0).sum(axis=1).max(initial=0)) <= wp  # nothing dropped
+    for i in range(m):
+        got = {(int(a), int(b)) for a, b in zip(wids[i], bits[i]) if b}
+        want = {(int(j), int(q[i, j])) for j in range(w) if q[i, j]}
+        assert got == want
+    node = (rng.integers(0, 2 ** 32, (m, 6, w), dtype=np.uint32)
+            * rng.integers(0, 2, (m, 6, w), dtype=np.uint32))
+    full = np.any((node & q[:, None, :]) != 0, axis=-1)
+    packed = np.any(
+        (node[np.arange(m)[:, None, None], np.arange(6)[None, :, None],
+              wids[:, None, :]] & bits[:, None, :]) != 0, axis=-1)
+    np.testing.assert_array_equal(packed, full)
+
+
+@pytest.mark.parametrize(
+    "m,t,k,obj,w",
+    [
+        (1, 1, 1, 1, 1),    # fully degenerate
+        (5, 3, 9, 16, 3),   # nothing tile-aligned
+        (9, 8, 36, 64, 15), # the fs-profile word width
+        (33, 4, 17, 32, 8), # queries past the default bm tile
+    ],
+)
+def test_fused_verify_prefetch_sweep(m, t, k, obj, w):
+    """Scalar-prefetched fused kernel (interpret) vs the same jnp oracle the
+    VMEM variant is held to, under dirty leaf ids / -1 pads / invalid slots."""
+    rng = np.random.default_rng(m * 7919 + t * 131 + k * 17 + obj + w + 1)
+    args = _fused_operands(rng, m, t, k, obj, w)
+    ids, kwv = ops.fused_gather_verify(*args, variant="prefetch")
+    eids, ekwv = ref.fused_verify_ref(*map(jnp.asarray, args))
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(eids))
+    np.testing.assert_array_equal(np.asarray(kwv), np.asarray(ekwv))
+
+
+def test_fused_verify_prefetch_equals_vmem():
+    """The two fused variants are elementwise interchangeable -- the engine's
+    auto-selection can never change results."""
+    rng = np.random.default_rng(29)
+    args = _fused_operands(rng, 13, 5, 11, 16, 6)
+    v_ids, v_kwv = ops.fused_gather_verify(*args, variant="vmem")
+    p_ids, p_kwv = ops.fused_gather_verify(*args, variant="prefetch")
+    np.testing.assert_array_equal(np.asarray(v_ids), np.asarray(p_ids))
+    np.testing.assert_array_equal(np.asarray(v_kwv), np.asarray(p_kwv))
+
+
+def test_fused_verify_beyond_vmem_bank_stays_fused():
+    """A leaf bank genuinely above FUSED_VMEM_BANK_BYTES: variant="auto"
+    must resolve to the prefetch kernel (observed via monkeypatch counters)
+    and still match the oracle bit-for-bit -- the no-fallback guarantee of
+    DESIGN.md §3.5."""
+    k, obj, w = 512, 256, 15
+    assert ops.leaf_bank_bytes(k, obj, w) > ops.FUSED_VMEM_BANK_BYTES
+    rng = np.random.default_rng(31)
+    args = _fused_operands(rng, 4, 2, k, obj, w)
+    calls = []
+    import repro.kernels.ops as ops_mod
+
+    real = ops_mod.fused_verify_prefetch
+    try:
+        ops_mod.fused_verify_prefetch = (
+            lambda *a, **kw: calls.append("prefetch") or real(*a, **kw)
+        )
+        ids, kwv = ops.fused_gather_verify(*args, variant="auto")
+    finally:
+        ops_mod.fused_verify_prefetch = real
+    assert calls == ["prefetch"], "auto picked the VMEM kernel above the cutoff"
+    eids, ekwv = ref.fused_verify_ref(*map(jnp.asarray, args))
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(eids))
+    np.testing.assert_array_equal(np.asarray(kwv), np.asarray(ekwv))
+
+
+def test_invalid_fused_variant_rejected():
+    rng = np.random.default_rng(37)
+    args = _fused_operands(rng, 2, 2, 4, 8, 2)
+    with pytest.raises(ValueError, match="variant"):
+        ops.fused_gather_verify(*args, variant="hbm")

@@ -292,3 +292,25 @@ def test_fused_auto_falls_back_with_delta():
         not np.array_equal(np.sort(p[p >= 0]), np.sort(q[q >= 0]))
         for p, q in zip(np.asarray(plain["ids"]), np.asarray(base["ids"]))
     )
+
+
+@pytest.mark.parametrize("seed,levels", [(0, 2), (3, 3)])
+def test_narrow_descent_engine_parity(seed, levels):
+    """The bandwidth-lean narrow descent (DESIGN.md §3.5) vs the forced-f32
+    descent at the engine level: ids AND every traversal counter identical
+    (the shadow planes are lossless), and the snapshot actually carries the
+    int16 codes so quantized=None really exercised the narrow path."""
+    ds = make_dataset("fs", n=1500, seed=seed)
+    index, clusters = _build_index(ds, g=6, levels=levels)
+    snap = IndexSnapshot.build(index, ds)
+    assert snap.has_narrow_planes
+    wl = make_workload(ds, m=20, dist="MIX", seed=seed + 10)
+    wide = retrieve_workload(snap, wl, max_leaves=clusters.k, quantized=False)
+    narrow = retrieve_workload(snap, wl, max_leaves=clusters.k, quantized=True)
+    auto = retrieve_workload(snap, wl, max_leaves=clusters.k)
+    for key in ("ids", "counts", "verified", "overflow",
+                "nodes_scanned", "nodes_checked"):
+        np.testing.assert_array_equal(
+            np.asarray(wide[key]), np.asarray(narrow[key]), err_msg=key)
+        np.testing.assert_array_equal(
+            np.asarray(narrow[key]), np.asarray(auto[key]), err_msg=key)

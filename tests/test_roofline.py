@@ -84,3 +84,46 @@ def test_roofline_from_record_picks_bottleneck():
     assert row.bottleneck in ("compute", "memory", "collective")
     assert row.compute_s > 0 and row.memory_s > 0 and row.collective_s > 0
     assert 0 < row.useful_ratio < 2.0
+
+
+def test_descent_bytes_model_arithmetic():
+    """The descent byte model is exact integer arithmetic (scoreboard
+    counters diff bit-for-bit): hand-computed terms for a tiny config."""
+    from repro.roofline import descent_bytes as DB
+
+    # legacy filter: M*F*(16+4W) + M*(16+4W) + M*F
+    assert DB.filter_level_bytes(2, 8, 3) == 2 * 8 * 28 + 2 * 28 + 2 * 8
+    # narrow: M*F*(8+4Wp) + M*(16+4Wp) + M*F + (Dx+Dy)*4
+    got = DB.filter_level_bytes(
+        2, 8, 3, narrow=True, packed_words=2, dict_sizes=(5, 7))
+    assert got == 2 * 8 * 16 + 2 * 24 + 2 * 8 + 12 * 4
+    per_obj = 12 + 4 * 3
+    assert DB.verify_bytes(4, 2, 8, 3, 16, "unfused") == 3 * 4 * 2 * 8 * per_obj
+    assert DB.verify_bytes(4, 2, 8, 3, 16, "prefetch") == 4 * 2 * 8 * per_obj
+    # vmem: ceil(M/bm) blocks re-stream the whole K*OBJ bank
+    assert DB.verify_bytes(9, 2, 8, 3, 16, "vmem", bm=8) == 2 * 16 * 8 * per_obj
+    import pytest
+
+    with pytest.raises(ValueError):
+        DB.verify_bytes(1, 1, 1, 1, 1, "hbm")
+
+
+def test_descent_bytes_narrow_always_cheaper():
+    """For any config with Wp <= W the narrow filter term can't exceed the
+    legacy one by more than the dictionary overhead, and the aggregate
+    helper sums levels + the chosen verify variant."""
+    from repro.roofline import descent_bytes as DB
+
+    legacy = DB.descent_bytes(16, [32, 8], 15)
+    narrow = DB.descent_bytes(
+        16, [32, 8], 15, narrow=True, packed_words=4,
+        dict_sizes=[(10, 10), (6, 6)])
+    assert legacy.total == sum(legacy.per_level)
+    assert narrow.total < legacy.total
+    both = DB.descent_bytes(
+        16, [32, 8], 15, t=4, obj_per_leaf=8, n_leaves=32,
+        verify_variant="prefetch")
+    assert both.total == both.filter_bytes + both.verify_bytes
+    assert both.verify_bytes == DB.verify_bytes(16, 4, 8, 15, 32, "prefetch")
+    cmp = DB.compare(legacy, narrow)
+    assert cmp["ratio"] > 1.0 and cmp["legacy_bytes"] == legacy.total

@@ -36,14 +36,17 @@ MODULE_FILES = (
     "BENCH_knn.json",
     "BENCH_construction.json",
     "BENCH_dynamic.json",
+    "BENCH_roofline.json",
 )
 
 # derived keys that are deterministic given (dataset seed, config): traversal
 # and result counters -- exact equality required. Wall-clock-ish derived keys
 # (qps, scale, speedup, build_s, phase times) are NOT listed: they are noise.
+# "bytes"/"cutoff"/"wp" are the roofline descent model's exact byte counters
+# (analytic ints, not measurements) -- any drift is a model/layout change.
 DETERMINISTIC_KEYS = (
     "scanned", "checked", "verified", "overflow", "cost", "mismatches",
-    "nodes", "sequential", "batched", "devices",
+    "nodes", "sequential", "batched", "devices", "bytes", "cutoff", "wp",
 )
 
 
