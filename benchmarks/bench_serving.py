@@ -41,6 +41,11 @@ from repro.serve.plan import PlanCache
 
 SWEEP_M = 256  # sharded-sweep batch: large enough to give every shard work
 
+# illustrative per-device HBM budget for the quick config: the full replica
+# exceeds it, the 2-way cut fits -- the motivating case of the index-parallel
+# regime (DESIGN.md §3.4)
+DEVICE_BUDGET = 1 << 20
+
 
 def _time_mode(bw, test, max_leaves, mode, reps=3, fused=None, **kw):
     out = retrieve_workload(bw, test, max_leaves=max_leaves, mode=mode, fused=fused, **kw)  # warm
@@ -186,6 +191,94 @@ def _sweep_sharded(rows, snap, test, max_leaves, reps=3):
     return rows, scale
 
 
+def _bytes_lane(rows, snap, budget=DEVICE_BUDGET, shard_counts=(1, 2, 4)):
+    """Analytic per-device footprint of the index-parallel regime (host-only,
+    deterministic -- safe for committed baselines): the bytes each device
+    holds when the snapshot is cut into S shard-local sub-hierarchies,
+    versus replicating the whole index, plus the smallest S that fits an
+    illustrative per-device budget the full replica exceeds."""
+    from repro.serve.snapshot import PartitionedSnapshot, tree_nbytes
+
+    replica = tree_nbytes(snap)
+    n_root = int(snap.level_mbrs[0].shape[0])
+    fits_at = 0
+    for s in shard_counts:
+        if s > n_root:  # cannot cut finer than the root forest
+            continue
+        per = PartitionedSnapshot.build(snap, s).per_shard_bytes()
+        if not fits_at and per <= budget:
+            fits_at = s
+        rows.append(
+            C.row(
+                f"serving/index-shards{s}-bytes", 0.0,
+                f"per_device_bytes={per} replica_bytes={replica} shards={s} "
+                f"shrink={replica / per:.2f}x",
+            )
+        )
+    rows.append(
+        C.row(
+            "serving/index-device-budget", 0.0,
+            f"budget={budget} fits_at={fits_at} "
+            f"(replica {'exceeds' if replica > budget else 'fits'} the budget; "
+            f"fits_at = smallest shard count under it, 0 = none swept)",
+        )
+    )
+    return rows
+
+
+def _sweep_index_sharded(rows, snap, test, max_leaves, n_shards, reps=3):
+    """The index-parallel serving lane (DESIGN.md §3.4): cut the snapshot
+    into ``n_shards`` sub-hierarchies, serve the batch over the
+    (query, index) 2D mesh, assert exact id-set/counter parity with the
+    single-device engine, and report throughput next to the per-device
+    footprint the regime buys."""
+    import jax
+
+    from repro.launch.mesh import make_serving_mesh
+    from repro.launch.wisk_serve import serve_index_sharded
+    from repro.serve.snapshot import PartitionedSnapshot, tree_nbytes
+
+    n_dev = len(jax.devices())
+    if n_dev % n_shards:
+        raise SystemExit(
+            f"--index-shards {n_shards} needs a device count divisible by it "
+            f"(have {n_dev}; combine with --devices)"
+        )
+    ref = retrieve_workload(snap, test, max_leaves=max_leaves, plan_cache=PlanCache())
+    psnap = PartitionedSnapshot.build(snap, n_shards)
+    mesh = make_serving_mesh(query=n_dev // n_shards, index=n_shards)
+    cache = PlanCache()
+    out = serve_index_sharded(  # warm: converges widths + compiles
+        psnap, test.rects, test.kw_bitmap, max_leaves=max_leaves,
+        mesh=mesh, plan_cache=cache,
+    )
+    for key in ("counts", "nodes_checked", "verified", "overflow"):
+        assert np.array_equal(np.asarray(ref[key]), np.asarray(out[key])), (
+            f"index-sharded s{n_shards} {key} mismatch"
+        )
+    for a, b in zip(out["ids"], ref["ids"]):
+        assert np.array_equal(np.sort(a[a >= 0]), np.sort(b[b >= 0])), (
+            f"index-sharded s{n_shards} result mismatch"
+        )
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        serve_index_sharded(
+            psnap, test.rects, test.kw_bitmap, max_leaves=max_leaves,
+            mesh=mesh, plan_cache=cache,
+        )
+    dt = (time.perf_counter() - t0) / reps
+    rows.append(
+        C.row(
+            f"serving/index-sharded-s{n_shards}",
+            dt / test.m * 1e6,
+            f"qps={test.m / dt:.0f} per_device_bytes={psnap.per_shard_bytes()} "
+            f"replica_bytes={tree_nbytes(snap)} shards={n_shards} "
+            f"query_par={n_dev // n_shards}",
+        )
+    )
+    return rows
+
+
 def quick_snapshot():
     """The deterministic quick serving config (no DQN build): a grid
     hierarchy over the fs profile, frozen into a snapshot. Shared with
@@ -212,12 +305,26 @@ def quick_snapshot():
     return ds, snap, clusters.k
 
 
+def _index_shards_arg():
+    """The ``--index-shards N`` value, or None when the lane is off."""
+    if "--index-shards" not in sys.argv:
+        return None
+    i = sys.argv.index("--index-shards") + 1
+    if i >= len(sys.argv) or not sys.argv[i].isdigit():
+        sys.exit(
+            "usage: python -m benchmarks.bench_serving "
+            "[--quick] [--devices N] [--index-shards S]"
+        )
+    return int(sys.argv[i])
+
+
 def run_quick():
     """CI smoke: deterministic grid hierarchy (no DQN build), the fused-vs-
     unfused / vmem-vs-prefetch / narrow-vs-f32 A/Bs (identical ids/counters
-    asserted), and the sharded sweep -- asserts sharded-vs-single-device
-    parity on every mesh size and that aggregate throughput scales (>1x)
-    from 1 to full mesh."""
+    asserted), the sharded sweep -- asserts sharded-vs-single-device parity
+    on every mesh size and that aggregate throughput scales (>1x) from 1 to
+    full mesh -- plus the analytic per-device-bytes lane of the
+    index-parallel regime (and its live sweep with ``--index-shards``)."""
     import jax
 
     from repro.data.workloads import make_workload
@@ -230,6 +337,10 @@ def run_quick():
     rows, scale = _sweep_sharded(rows, snap, test, max_leaves=max_leaves)
     if len(jax.devices()) > 1:
         assert scale > 1.0, f"no aggregate throughput scaling: {scale:.2f}x"
+    rows = _bytes_lane(rows, snap)
+    n_shards = _index_shards_arg()
+    if n_shards:
+        rows = _sweep_index_sharded(rows, snap, test, max_leaves, n_shards)
     return rows
 
 
@@ -275,7 +386,12 @@ def run():
     sweep = C.workload("fs", C.DEFAULT_N, SWEEP_M, "MIX", 0.0005, 5, 25)
     # frontier-only snapshot for the sweep: the dense A/B adjacency matrices
     # would otherwise be replicated to every device without ever being read
-    rows, _ = _sweep_sharded(rows, IndexSnapshot.build(art.index, ds), sweep, max_leaves)
+    lean = IndexSnapshot.build(art.index, ds)
+    rows, _ = _sweep_sharded(rows, lean, sweep, max_leaves)
+    rows = _bytes_lane(rows, lean)
+    n_shards = _index_shards_arg()
+    if n_shards:
+        rows = _sweep_index_sharded(rows, lean, sweep, max_leaves, n_shards)
     return rows
 
 

@@ -86,7 +86,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: Path, causal_impl:
     t0 = time.time()
 
     if arch == "wisk":
-        from .wisk_serve import lower_wisk_serve
+        from .flat_legacy import lower_wisk_serve
 
         lowered = lower_wisk_serve(mesh, two_stage=(shape == "serve2"))
         rec["kind"] = "serve"

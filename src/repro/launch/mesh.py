@@ -21,3 +21,14 @@ def make_host_mesh(data: int = 1, model: int = 1):
     data = min(data, n)
     model = min(model, max(n // data, 1))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_serving_mesh(*, query: int = 1, index: int = 1):
+    """The 2D serving mesh: ``query`` query-parallel replicas x ``index``
+    index shards, axes ``("data", "index")``. Requires ``query * index``
+    devices. The "data" axis carries the query batch (``dp_axes`` picks it
+    up unchanged); the "index" axis carries the ``PartitionedSnapshot``'s
+    stacked per-shard rows (sharding/rules.py routes the ``leaf`` logical
+    axis to it). ``index=1`` degenerates to the replicated regime's mesh.
+    """
+    return jax.make_mesh((query, index), ("data", "index"))

@@ -1,6 +1,6 @@
 """WISK serving on the production mesh (DESIGN.md §3.4).
 
-Two distribution regimes share this front door:
+Three distribution regimes share this front door:
 
 * **Query-parallel, replicated index** (``serve_sharded`` /
   ``serve_knn_sharded``) -- the default and the throughput-scaling path.
@@ -18,22 +18,31 @@ Two distribution regimes share this front door:
   point -- lossless for the same reason the §3.2 overflow retry is, and
   sync-free in steady state.
 
-* **Leaf-sharded flat fallback** (``wisk_serve_step`` / ``lower_wisk_serve``)
-  -- the original one-level scan kept for indexes too large to replicate:
-  leaves (with object blocks) shard over ``model``, every device filters its
-  local leaves against the replicated queries, and per-query counts /
-  scanned / overflow are ``psum``-ed over ``model``. On TPU the inner loops
-  are the Pallas kernels; the dry-run lowers the jnp reference math
-  (identical semantics -- Mosaic kernels cannot target the CPU placeholder
-  backend).
+* **Index-parallel, partitioned hierarchy** (``serve_index_sharded`` /
+  ``serve_knn_index_sharded``) -- the big-index path. A
+  ``PartitionedSnapshot`` (serve/snapshot.py) cuts the root forest into
+  balanced shard-local sub-hierarchies placed over the serving mesh's
+  ``index`` axis (~1/S of the index bytes per device); each shard runs the
+  same engine descent from its masked local root frontier, and per-query
+  results are combined by collectives -- an id-union + psum'd Eq.1 counters
+  for SKR, a global top-k merge with bound exchange for kNN. Composes with
+  query parallelism on the 2D ``(query, index)`` mesh
+  (``mesh.make_serving_mesh``); exact id/counter parity with the
+  single-device engine is pinned by tests/test_index_sharded_parity.py.
 
-On top of both regimes sits the incremental-maintenance front door
+* **Legacy flat fallback** (launch/flat_legacy.py; ``wisk_serve_step`` /
+  ``lower_wisk_serve`` re-exported here) -- the retired hierarchy-free
+  leaf-sharded scan, kept as the dry-run/roofline lowering surface and the
+  A/B floor.
+
+On top of these regimes sits the incremental-maintenance front door
 (DESIGN.md §7): ``LiveIndex`` buffers object inserts/deletes in a
-``DeltaBuffer`` merged into every descent, watches workload drift through
-the observed Eq.1 counters, and atomically swaps in warm-start rebuilds as
-new ``ServingGeneration``s while in-flight batches finish on the old one.
-Every front door here is host-side orchestration around the jit-traced
-engine paths of serve/engine.py.
+``DeltaBuffer`` merged into every descent (routed to the owning shards in
+the index-parallel regime via ``delta.partition_delta``), watches workload
+drift through the observed Eq.1 counters, and atomically swaps in
+warm-start rebuilds as new ``ServingGeneration``s while in-flight batches
+finish on the old one. Every front door here is host-side orchestration
+around the jit-traced engine paths of serve/engine.py.
 """
 from __future__ import annotations
 
@@ -50,15 +59,16 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..sharding.compat import shard_map
 
-from ..configs.wisk import WiskServeConfig
 from ..kernels import ops
-from ..kernels.ref import skr_filter_ref, skr_verify_ref
-from ..serve.delta import DeltaBuffer, DeltaLog
+from ..serve.delta import DeltaBuffer, DeltaLog, partition_delta
 from ..serve.engine import (
     IndexSnapshot,
     _descend_frontier,
     _descend_knn,
+    _descend_knn_indexed,
+    _local_root_frontier,
     _select_leaves_frontier,
+    _select_leaves_indexed,
     _verify_leaves,
     retrieve,
     retrieve_knn,
@@ -71,11 +81,9 @@ from ..serve.plan import (
     pad_knn_queries_to_bucket,  # noqa: F401  (re-export: historical home)
     pad_queries_to_bucket,  # noqa: F401  (re-export: historical home)
 )
+from ..serve.snapshot import PartitionedSnapshot
 from ..sharding.rules import default_rules, dp_axes, spec_for
-from .mesh import make_host_mesh
-
-OBJ_PER_LEAF = 512
-TOP_LEAVES_LOCAL = 4
+from .mesh import make_host_mesh, make_serving_mesh
 
 
 # --------------------------------------------------- single-device front door
@@ -129,6 +137,7 @@ def serve_knn_batch(
     minimum_bucket: int = 8,
     plan_cache: Optional[PlanCache] = None,
     delta: Optional[DeltaBuffer] = None,
+    knn_dtype: str = "f32",
 ):
     """Bucketed front door for batched Boolean kNN: pad -> retrieve -> slice.
 
@@ -142,6 +151,9 @@ def serve_knn_batch(
         minimum_bucket: smallest power-of-two batch bucket.
         plan_cache: frontier width state (None: per-snapshot default).
         delta: optional ``DeltaBuffer`` merged on the fly (DESIGN.md §7).
+        knn_dtype: ``"f32"`` (exact) or ``"bf16"`` -- reduced-precision
+            bounded-sweep pruning with a conservative exact-f32 retry; ids
+            are always identical to f32 (see ``retrieve_knn``).
 
     Returns ``retrieve_knn``'s dict: ``ids``/``dist2`` (m, k) ascending by
     (dist^2, id) with ``-1`` fill, plus Eq.1 counters, pads sliced off.
@@ -149,7 +161,8 @@ def serve_knn_batch(
     """
     pts, bms, m = pad_knn_queries_to_bucket(points, q_bm, minimum_bucket)
     out = retrieve_knn(
-        snap, jnp.asarray(pts), jnp.asarray(bms), k, plan_cache=plan_cache, delta=delta
+        snap, jnp.asarray(pts), jnp.asarray(bms), k, plan_cache=plan_cache,
+        delta=delta, knn_dtype=knn_dtype,
     )
     per_query = ("ids", "dist2", "nodes_checked", "verified", "leaves_verified", "pruned")
     return {key: (v[:m] if key in per_query else v) for key, v in out.items()}
@@ -514,7 +527,7 @@ def _knn_shard_body(snap, delta, points, q_bm, wids, bits, *, widths, k, kb, dp,
     result, needs = _descend_knn(
         snap, points, q_bm, k, kb, plan, delta, (wids, bits) if narrow else None
     )
-    top_d, top_id, nodes_checked, verified, leaves_verified, pruned, _ = result
+    top_d, top_id, nodes_checked, verified, leaves_verified, pruned, _, _ = result
     fin = jnp.isfinite(top_d[:, :k])
     ids = jnp.where(fin, top_id[:, :k], -1)
     return (
@@ -604,6 +617,332 @@ def serve_knn_sharded(
     )
 
 
+# --------------------------------- index-parallel sharded serving (§3.4)
+def mesh_index_size(mesh: Mesh) -> int:
+    """Number of index shards: the size of the mesh's ``index`` axis."""
+    return int(mesh.shape["index"]) if "index" in mesh.axis_names else 1
+
+
+def default_index_mesh(n_shards: int) -> Mesh:
+    """All local devices as a (query, index) serving mesh with ``n_shards``
+    index shards (the remaining factor goes to query parallelism)."""
+    n = len(jax.devices())
+    if n % n_shards:
+        raise ValueError(f"{n} devices not divisible into {n_shards} index shards")
+    return make_serving_mesh(query=n // n_shards, index=n_shards)
+
+
+# Placement memos, mirroring _REPLICATED: sharding a production-scale
+# partition (or a delta routed to its shards) must happen once per
+# (object, mesh), not once per served batch.
+_PLACED: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _placed(psnap: PartitionedSnapshot, mesh: Mesh) -> PartitionedSnapshot:
+    per_mesh = _PLACED.get(psnap)
+    if per_mesh is None:
+        per_mesh = {}
+        _PLACED[psnap] = per_mesh
+    got = per_mesh.get(mesh)
+    if got is None:
+        got = psnap.shard(mesh)
+        per_mesh[mesh] = got
+    return got
+
+
+# Keyed by the (immutable) DeltaBuffer: every LiveIndex update produces a
+# NEW buffer, so a fresh buffer is partitioned -- routed to its owning
+# shards -- exactly once, on its first served batch.
+_PARTITIONED_DELTA: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _partitioned_delta(delta: DeltaBuffer, psnap: PartitionedSnapshot, mesh: Mesh):
+    per_key = _PARTITIONED_DELTA.get(delta)
+    if per_key is None:
+        per_key = {}
+        _PARTITIONED_DELTA[delta] = per_key
+    got = per_key.get((mesh, psnap.part))
+    if got is None:
+        got = jax.device_put(
+            partition_delta(delta, psnap.part),
+            NamedSharding(mesh, P("index")),
+        )
+        per_key[(mesh, psnap.part)] = got
+    return got
+
+
+def _converge_widths_indexed(cache: PlanCache, tag: str, n_shards: int, n_links: int, run):
+    """Index-sharded twin of ``_converge_widths``: the observed per-level
+    child-count maxima come back as an (S, n_links) matrix (each index
+    shard's own hierarchy has its own fan-outs), the cache learns per-shard
+    sub-tags, and every shard of the next descent traces at the max width
+    over shards (``seeded_shard_plan`` -- SPMD needs one static shape)."""
+    while True:
+        widths = cache.seeded_shard_plan(tag, n_shards, n_links).widths
+        out = run(widths)
+        maxima = np.asarray(jax.device_get(out[-1])).reshape(n_shards, -1)
+        cache.observe_shards(tag, maxima)
+        if not n_links or not np.any(maxima.max(axis=0) > np.asarray(widths)):
+            return widths, out
+
+
+def _ix_skr_body(
+    psnap, delta, q_rects, q_bm, wids, bits,
+    *, widths, take_g, take_loc, n_shards, dp, narrow,
+):
+    """Per-(query shard, index shard) SKR body: the unchanged engine descent
+    on this device's sub-hierarchy from its masked local root frontier, then
+    two collectives over ``index`` -- the global smallest-gid leaf selection
+    (``_select_leaves_indexed``: one bound exchange + psum'd overflow) and
+    the psum of the Eq.1 counters. Result ids stay local (the out_spec
+    concatenates the per-shard id unions); counters leave the body already
+    global, exactly matching the single-device descent."""
+    snap = psnap.local_view()
+    M = q_rects.shape[0]
+    n_root_local = psnap.level_counts[0, 0]
+    plan = ExecutionPlan(tag="skr_ix", widths=widths)
+    root = _local_root_frontier(snap.root_width(), n_root_local, M)
+    frontier, surv, nodes_checked, _, needs = _descend_frontier(
+        snap, q_rects, q_bm, plan, delta, (wids, bits) if narrow else None,
+        root=root,
+    )
+    top_leaf, leaf_ok, overflow = _select_leaves_indexed(
+        frontier, surv, psnap.leaf_gid, take_g, take_loc, n_shards, "index"
+    )
+    ids, counts, kw_scanned = _verify_leaves(
+        snap, q_rects, q_bm, top_leaf, leaf_ok, delta
+    )
+    counts = jax.lax.psum(counts, "index")
+    nodes_checked = jax.lax.psum(nodes_checked, "index")
+    kw_scanned = jax.lax.psum(kw_scanned, "index")
+    needs_all = jax.lax.all_gather(_pmax_needs(needs, dp), "index")  # (S, links)
+    return ids, counts, nodes_checked, kw_scanned, overflow, needs_all
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mesh", "widths", "take_g", "take_loc", "n_shards", "narrow")
+)
+def _ix_skr_exec(
+    psnap, delta, q_rects, q_bm, wids, bits, mesh, widths, take_g, take_loc,
+    n_shards, narrow,
+):
+    dp = dp_axes(mesh)
+    body = functools.partial(
+        _ix_skr_body, widths=widths, take_g=take_g, take_loc=take_loc,
+        n_shards=n_shards, dp=dp, narrow=narrow,
+    )
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        # partition + routed delta sharded over "index" (single prefix spec
+        # over the whole pytree; None delta is an empty pytree); queries and
+        # packed words sharded over the data axes, replicated over "index"
+        in_specs=(
+            P("index"), P("index"), P(dp, None), P(dp, None), P(dp, None), P(dp, None),
+        ),
+        # ids: concat of the per-shard id unions; counters already psum'd
+        out_specs=(P(dp, "index"), P(dp), P(dp), P(dp), P(dp), P()),
+        check_vma=False,
+    )
+    return fn(psnap, delta, q_rects, q_bm, wids, bits)
+
+
+def serve_index_sharded(
+    psnap: PartitionedSnapshot,
+    q_rects,
+    q_bm,
+    max_leaves: int = 32,
+    mesh: Optional[Mesh] = None,
+    plan_cache: Optional[PlanCache] = None,
+    minimum_bucket: int = 8,
+    delta: Optional[DeltaBuffer] = None,
+) -> Dict[str, np.ndarray]:
+    """Index-parallel SKR serving: the hierarchy itself sharded (§3.4).
+
+    Args:
+        psnap: a ``PartitionedSnapshot`` (``PartitionedSnapshot.build``);
+            each device holds only its ~1/S slab after placement.
+        q_rects: (m, 4) f32 query rectangles; ``q_bm``: (m, W) u32 bitmaps.
+        max_leaves: per-query verification capacity (global: the selection
+            keeps the ``max_leaves`` smallest-id surviving leaves ACROSS
+            shards, exactly like the single-device engine; spill ->
+            ``overflow``).
+        mesh: a serving mesh with an ``index`` axis of size
+            ``psnap.n_shards`` (None: all local devices, query x index).
+        plan_cache: frontier width state (None: per-partition default);
+            learns per-shard sub-tags (``PlanCache.seeded_shard_plan``).
+        minimum_bucket: smallest per-query-shard power-of-two batch bucket.
+        delta: optional ``DeltaBuffer`` in the ordinary global layout --
+            routed to the owning shards (``delta.partition_delta``, memoized
+            per buffer) and merged shard-locally.
+
+    Returns the ``retrieve`` dict: ``counts``/``nodes_checked``/``verified``
+    /``overflow`` exactly equal to the single-device engine, ``ids`` the
+    same id SET per query (order is shard-concatenation order, not the
+    single-device capacity order). ``nodes_scanned`` sums every shard's
+    frontier slots -- the only counter that is layout-dependent by design
+    (see tests/test_index_sharded_parity.py).
+    """
+    S = psnap.n_shards
+    mesh = mesh if mesh is not None else default_index_mesh(S)
+    if mesh_index_size(mesh) != S:
+        raise ValueError(
+            f"mesh index axis {mesh_index_size(mesh)} != partition shards {S}"
+        )
+    cache = plan_cache if plan_cache is not None else default_plan_cache(psnap)
+    rects, bms, m = pad_queries_to_bucket(
+        q_rects, q_bm, minimum_bucket, shards=mesh_dp_size(mesh)
+    )
+    narrow = delta is None and psnap.has_narrow_planes
+    wids, bits = ops.pack_query_words(bms)
+    rects, bms, wids, bits = _shard_queries(mesh, rects, bms, wids, bits)
+    psnap_s = _placed(psnap, mesh)
+    delta_s = _partitioned_delta(delta, psnap, mesh) if delta is not None else None
+    n_links = psnap.n_levels - 1
+
+    def run(widths):
+        leaf_width = widths[-1] if widths else psnap.local_root_width()
+        take_g = min(max_leaves, psnap.n_leaves_global)
+        take_loc = min(take_g, leaf_width)
+        return _ix_skr_exec(
+            psnap_s, delta_s, rects, bms, wids, bits, mesh, widths,
+            take_g, take_loc, S, narrow,
+        )
+
+    widths, out = _converge_widths_indexed(cache, "skr_ix", S, n_links, run)
+    ids, counts, nodes_checked, kw_scanned, overflow, _ = out
+    used = [psnap.local_root_width(), *widths]
+    return dict(
+        ids=np.asarray(ids)[:m],
+        counts=np.asarray(counts)[:m],
+        nodes_checked=np.asarray(nodes_checked, np.int64)[:m],
+        nodes_scanned=np.full((m,), sum(used) * S, np.int64),
+        verified=np.asarray(kw_scanned)[:m],
+        overflow=np.asarray(overflow)[:m],
+        frontier_widths=np.asarray(used, np.int32),
+    )
+
+
+def _ix_knn_body(
+    psnap, delta, points, q_bm, wids, bits, *, widths, k, kb, n_shards, dp, narrow,
+):
+    """Per-(query shard, index shard) kNN body: ``_descend_knn_indexed``
+    (canonical-probe election, shard-local bounded sweep, global-rank leaf
+    phase) plus the counter psums. The top-k buffers leave the descent
+    already replicated across shards (the leaf phase ends on a global
+    merge), so the out_spec just takes one copy."""
+    snap = psnap.local_view()
+    n_root_local = psnap.level_counts[0, 0]
+    plan = ExecutionPlan(tag="knn_ix", widths=widths)
+    result, needs = _descend_knn_indexed(
+        snap, psnap.root_gid, psnap.leaf_gid, n_root_local, points, q_bm,
+        k, kb, plan, n_shards, "index", delta, (wids, bits) if narrow else None,
+    )
+    top_d, top_id, nodes_checked, verified, leaves_verified, pruned, _ = result
+    nodes_checked = jax.lax.psum(nodes_checked, "index")
+    verified = jax.lax.psum(verified, "index")
+    leaves_verified = jax.lax.psum(leaves_verified, "index")
+    pruned = jax.lax.psum(pruned, "index")
+    fin = jnp.isfinite(top_d[:, :k])
+    ids = jnp.where(fin, top_id[:, :k], -1)
+    needs_all = jax.lax.all_gather(_pmax_needs(needs, dp), "index")  # (S, links)
+    return (
+        ids, top_d[:, :k], nodes_checked, verified, leaves_verified, pruned,
+        needs_all,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mesh", "widths", "k", "kb", "n_shards", "narrow")
+)
+def _ix_knn_exec(psnap, delta, points, q_bm, wids, bits, mesh, widths, k, kb, n_shards, narrow):
+    dp = dp_axes(mesh)
+    body = functools.partial(
+        _ix_knn_body, widths=widths, k=k, kb=kb, n_shards=n_shards, dp=dp,
+        narrow=narrow,
+    )
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P("index"), P("index"), P(dp, None), P(dp, None), P(dp, None), P(dp, None),
+        ),
+        # top-k buffers are replicated over "index" after the final merge
+        out_specs=(
+            P(dp, None), P(dp, None), P(dp), P(dp), P(dp), P(dp), P(),
+        ),
+        check_vma=False,
+    )
+    return fn(psnap, delta, points, q_bm, wids, bits)
+
+
+def serve_knn_index_sharded(
+    psnap: PartitionedSnapshot,
+    points,
+    q_bm,
+    k: int,
+    mesh: Optional[Mesh] = None,
+    plan_cache: Optional[PlanCache] = None,
+    minimum_bucket: int = 8,
+    min_topk_bucket: int = 8,
+    delta: Optional[DeltaBuffer] = None,
+) -> Dict[str, np.ndarray]:
+    """Index-parallel Boolean kNN serving: the hierarchy itself sharded.
+
+    Same contract as ``serve_knn_sharded`` but over a
+    ``PartitionedSnapshot``: ids/dist2 AND every counter except
+    ``frontier_widths`` are exactly equal to the single-device
+    ``retrieve_knn`` (the bound-exchange collectives in
+    ``_descend_knn_indexed`` reproduce the same probe chain, prune
+    decisions, and chunked leaf order -- tests/test_index_sharded_parity.py).
+    ``delta`` arrives in the global layout and is routed to the owning
+    shards. Always exact f32 (``knn_dtype`` is a replicated-path flag).
+    """
+    if k <= 0:  # delegate: one source of truth for the degenerate shape
+        M = int(np.asarray(points).reshape(-1, 2).shape[0])
+        z = np.zeros(M, np.int64)
+        return dict(
+            ids=np.zeros((M, 0), np.int32), dist2=np.zeros((M, 0), np.float32),
+            nodes_checked=z, verified=z.copy(), leaves_verified=z.copy(),
+            pruned=z.copy(), frontier_widths=np.zeros(0, np.int32),
+        )
+    S = psnap.n_shards
+    mesh = mesh if mesh is not None else default_index_mesh(S)
+    if mesh_index_size(mesh) != S:
+        raise ValueError(
+            f"mesh index axis {mesh_index_size(mesh)} != partition shards {S}"
+        )
+    cache = plan_cache if plan_cache is not None else default_plan_cache(psnap)
+    pts, bms, m = pad_knn_queries_to_bucket(
+        points, q_bm, minimum_bucket, shards=mesh_dp_size(mesh)
+    )
+    narrow = delta is None and psnap.has_narrow_planes
+    wids, bits = ops.pack_query_words(bms)
+    pts, bms, wids, bits = _shard_queries(mesh, pts, bms, wids, bits)
+    psnap_s = _placed(psnap, mesh)
+    delta_s = _partitioned_delta(delta, psnap, mesh) if delta is not None else None
+    kb = round_up_bucket(k, min_topk_bucket)
+    n_links = psnap.n_levels - 1
+
+    widths, out = _converge_widths_indexed(
+        cache, "knn_ix", S, n_links,
+        lambda widths: _ix_knn_exec(
+            psnap_s, delta_s, pts, bms, wids, bits, mesh, widths, k, kb, S, narrow
+        ),
+    )
+    ids, dist2, nodes_checked, verified, leaves_verified, pruned, _ = out
+    used = [psnap.local_root_width(), *widths]
+    return dict(
+        ids=np.asarray(ids)[:m],
+        dist2=np.asarray(dist2)[:m],
+        nodes_checked=np.asarray(nodes_checked, np.int64)[:m],
+        verified=np.asarray(verified, np.int64)[:m],
+        leaves_verified=np.asarray(leaves_verified, np.int64)[:m],
+        pruned=np.asarray(pruned, np.int64)[:m],
+        frontier_widths=np.asarray(used, np.int32),
+    )
+
+
 # ------------------------------- incremental maintenance front door (§7)
 @dataclasses.dataclass(frozen=True)
 class ServingGeneration:
@@ -622,6 +961,9 @@ class ServingGeneration:
     delta_log: DeltaLog
     plan_cache: PlanCache
     seq: int = 0
+    # index-parallel regime: the snapshot's partition, rebuilt per
+    # generation (a rebuild re-cuts the fresh hierarchy); None = replicated
+    partitioned: Optional[PartitionedSnapshot] = None
 
     def delta(self) -> Optional[DeltaBuffer]:
         """The live delta, or None when no updates are buffered (the
@@ -656,12 +998,23 @@ class LiveIndex:
         max_recent: int = 512,
         slots_per_leaf: int = 8,
         result_cache: Optional[HotQueryCache] = None,
+        index_shards: int = 1,
+        index_mesh: Optional[Mesh] = None,
     ) -> None:
         from ..core.build import BuildConfig, build_wisk
         from ..core.drift import DriftMonitor
 
         self.build_config = build_config or BuildConfig()
         self._slots_per_leaf = slots_per_leaf
+        # index-parallel serving (§3.4): partition every generation's
+        # snapshot into this many shard-local sub-hierarchies and serve over
+        # the (query, index) mesh; updates keep landing in the global-layout
+        # DeltaLog and are routed to their owning shards per served batch
+        # (memoized per buffer -- see _partitioned_delta)
+        self.index_shards = int(index_shards)
+        self.index_mesh = index_mesh
+        if self.index_mesh is not None and self.index_shards == 1:
+            self.index_shards = mesh_index_size(self.index_mesh)
         # hot-query result cache (§3.5): exact results keyed on the current
         # served state, so every state change below must invalidate it
         self.result_cache = result_cache
@@ -679,6 +1032,10 @@ class LiveIndex:
 
     def _make_generation(self, artifacts, dataset, seq: int) -> ServingGeneration:
         snapshot = IndexSnapshot.build(artifacts.index, dataset)
+        partitioned = (
+            PartitionedSnapshot.build(snapshot, self.index_shards)
+            if self.index_shards > 1 else None
+        )
         return ServingGeneration(
             artifacts=artifacts,
             dataset=dataset,
@@ -686,6 +1043,7 @@ class LiveIndex:
             delta_log=DeltaLog(artifacts.index, dataset, snapshot, self._slots_per_leaf),
             plan_cache=PlanCache(),
             seq=seq,
+            partitioned=partitioned,
         )
 
     @property
@@ -709,8 +1067,25 @@ class LiveIndex:
         With a ``result_cache`` the batch goes through ``serve_batch_cached``
         and only MISS rows feed the monitor -- cache hits cost nothing, and
         counting them would mask drift in exactly the hot traffic a rebuild
-        should follow."""
+        should follow.
+
+        In the index-parallel regime (``index_shards > 1``) the batch goes
+        through ``serve_index_sharded`` over the partitioned snapshot, with
+        the live delta routed to its owning shards; the result cache is
+        bypassed (counters are identical either way, so the monitor feed is
+        unchanged)."""
         gen = self._gen
+        if gen.partitioned is not None:
+            out = serve_index_sharded(
+                gen.partitioned, q_rects, q_bm, max_leaves,
+                mesh=self.index_mesh, plan_cache=gen.plan_cache,
+                delta=gen.delta(),
+            )
+            self._record(q_rects, q_bm)
+            self.monitor.observe_counters(
+                np.asarray(out["nodes_checked"]), np.asarray(out["verified"])
+            )
+            return out
         if self.result_cache is not None:
             out = serve_batch_cached(
                 gen.snapshot, q_rects, q_bm, self.result_cache, max_leaves,
@@ -736,10 +1111,17 @@ class LiveIndex:
         rects, so kNN-driven drift both trips the monitor AND steers the
         rebuild's training workload toward the traffic that tripped it."""
         gen = self._gen
-        out = serve_knn_batch(
-            gen.snapshot, points, q_bm, k,
-            plan_cache=gen.plan_cache, delta=gen.delta(),
-        )
+        if gen.partitioned is not None:
+            out = serve_knn_index_sharded(
+                gen.partitioned, points, q_bm, k,
+                mesh=self.index_mesh, plan_cache=gen.plan_cache,
+                delta=gen.delta(),
+            )
+        else:
+            out = serve_knn_batch(
+                gen.snapshot, points, q_bm, k,
+                plan_cache=gen.plan_cache, delta=gen.delta(),
+            )
         pts = np.asarray(points, np.float32).reshape(-1, 2)
         self._record(np.concatenate([pts, pts], axis=1), q_bm)
         self.monitor.observe_counters(out["nodes_checked"], out["verified"])
@@ -803,114 +1185,14 @@ class LiveIndex:
         return True
 
 
-# ----------------------------------------- leaf-sharded flat fallback (§3.4)
-def wisk_serve_step(q_rects, q_bm, leaf_mbrs, leaf_bm, obj_x, obj_y, obj_bm, obj_valid,
-                    two_stage: bool = False, stage2_cap: int = 512):
-    """Local (per-device) filter + verify; counts/scanned/overflow psum'd
-    over 'model'.
-
-    q_*: local query shard; leaf_*/obj_*: local leaf shard.
-
-    ``two_stage``: verify in-rectangle membership on the 8-byte (x, y) pairs
-    first and gather the 512-byte keyword bitmaps only for the (capacity-
-    bounded) spatial survivors -- the memory-roofline hillclimb of
-    EXPERIMENTS.md section Perf (bitmap traffic drops ~C/stage2_cap).
-    ``overflow`` counts the spatial survivors beyond ``stage2_cap`` whose
-    matches the capacity bound dropped -- callers must surface it (counts
-    are a lower bound whenever it is nonzero).
-    """
-    M = q_rects.shape[0]
-    rel = skr_filter_ref(q_rects, q_bm, leaf_mbrs, leaf_bm)  # (Mloc, Kloc) int8
-    sizes = jnp.sum(obj_valid > 0, axis=1)  # (Kloc,)
-    score = rel.astype(jnp.int32) * (1 + sizes[None, :])
-    _, top_leaf = jax.lax.top_k(score, TOP_LEAVES_LOCAL)  # (Mloc, L)
-    # gather candidate coordinate blocks for each (query, local leaf)
-    cx = obj_x[top_leaf].reshape(M, -1)
-    cy = obj_y[top_leaf].reshape(M, -1)
-    cval = obj_valid[top_leaf].reshape(M, -1)
-    # leaves not relevant contribute nothing
-    leaf_ok = jnp.take_along_axis(rel, top_leaf, axis=1)  # (Mloc, L)
-    cval = cval * jnp.repeat(leaf_ok, OBJ_PER_LEAF, axis=1)
-
-    if two_stage:
-        inr = (
-            (cx >= q_rects[:, 0:1]) & (cx <= q_rects[:, 2:3])
-            & (cy >= q_rects[:, 1:2]) & (cy <= q_rects[:, 3:4])
-            & (cval > 0)
-        )
-        cap = min(stage2_cap, inr.shape[1])
-        val2, idx2 = jax.lax.top_k(inr.astype(jnp.int32), cap)  # (Mloc, cap)
-        # map surviving candidate slots back to (leaf, slot) for a narrow gather
-        leaf_of = jnp.repeat(top_leaf, OBJ_PER_LEAF, axis=1)  # (Mloc, C)
-        slot_of = jnp.tile(jnp.arange(OBJ_PER_LEAF), (M, TOP_LEAVES_LOCAL))
-        sel_leaf = jnp.take_along_axis(leaf_of, idx2, axis=1)
-        sel_slot = jnp.take_along_axis(slot_of, idx2, axis=1)
-        cbm2 = obj_bm[sel_leaf, sel_slot]  # (Mloc, cap, W): bitmaps of survivors only
-        kw = jnp.any((cbm2 & q_bm[:, None, :]) != 0, axis=-1)
-        match = (kw & (val2 > 0)).astype(jnp.int32)
-        counts = jnp.sum(match, axis=1)
-        overflow = jnp.maximum(jnp.sum(inr.astype(jnp.int32), axis=1) - cap, 0)
-    else:
-        cbm = obj_bm[top_leaf].reshape(M, -1, q_bm.shape[1])
-        match = skr_verify_ref(q_rects, q_bm, cx, cy, cbm, cval)  # (Mloc, C) int8
-        counts = jnp.sum(match.astype(jnp.int32), axis=1)
-        overflow = jnp.zeros_like(counts)
-    counts = jax.lax.psum(counts, "model")
-    scanned = jax.lax.psum(jnp.sum(rel.astype(jnp.int32), axis=1), "model")
-    overflow = jax.lax.psum(overflow, "model")
-    return counts, scanned, overflow
-
-
-def make_inputs(cfg: WiskServeConfig):
-    """Abstract ``ShapeDtypeStruct`` inputs of the flat fallback step (for
-    ``jit.lower`` dry-runs; host-only, nothing is allocated)."""
-    W = cfg.vocab // 32
-    sds = jax.ShapeDtypeStruct
-    return dict(
-        q_rects=sds((cfg.n_queries, 4), jnp.float32),
-        q_bm=sds((cfg.n_queries, W), jnp.uint32),
-        leaf_mbrs=sds((cfg.n_nodes, 4), jnp.float32),
-        leaf_bm=sds((cfg.n_nodes, W), jnp.uint32),
-        obj_x=sds((cfg.n_nodes, OBJ_PER_LEAF), jnp.float32),
-        obj_y=sds((cfg.n_nodes, OBJ_PER_LEAF), jnp.float32),
-        obj_bm=sds((cfg.n_nodes, OBJ_PER_LEAF, W), jnp.uint32),
-        obj_valid=sds((cfg.n_nodes, OBJ_PER_LEAF), jnp.int8),
-    )
-
-
-def lower_wisk_serve(mesh: Mesh, cfg: WiskServeConfig = None, two_stage: bool = False):
-    """Lower (never execute) the leaf-sharded fallback on ``mesh``: queries
-    replicated over 'model', leaves + object blocks sharded, counts/scanned/
-    overflow psum'd. Returns the jitted computation's ``Lowered`` handle --
-    the dry-run surface for roofline/HLO inspection (host-only)."""
-    cfg = cfg or WiskServeConfig()
-    rules = default_rules(mesh)
-    dp = dp_axes(mesh)
-    qspec = spec_for(("query", None), rules)
-    lspec = spec_for(("leaf", None), rules)
-    ospec = spec_for(("leaf", "obj_slot", "word"), rules)
-    in_specs = (qspec, qspec, lspec, lspec, lspec, lspec, ospec, lspec)
-    out_specs = (P(dp), P(dp), P(dp))
-
-    fn = shard_map(
-        functools.partial(wisk_serve_step, two_stage=two_stage),
-        mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False,
-    )
-    inputs = make_inputs(cfg)
-    shardings = dict(
-        q_rects=NamedSharding(mesh, qspec),
-        q_bm=NamedSharding(mesh, qspec),
-        leaf_mbrs=NamedSharding(mesh, lspec),
-        leaf_bm=NamedSharding(mesh, lspec),
-        obj_x=NamedSharding(mesh, lspec),
-        obj_y=NamedSharding(mesh, lspec),
-        obj_bm=NamedSharding(mesh, ospec),
-        obj_valid=NamedSharding(mesh, lspec),
-    )
-    order = list(inputs.keys())
-    jitted = jax.jit(
-        lambda *args: fn(*args),
-        in_shardings=tuple(shardings[k] for k in order),
-        out_shardings=tuple(NamedSharding(mesh, P(dp)) for _ in range(3)),
-    )
-    return jitted.lower(*[inputs[k] for k in order])
+# ------------------------------------ legacy flat fallback (retired, §3.4)
+# The hierarchy-free leaf-sharded scan now lives in launch/flat_legacy.py as
+# a documented legacy path (dry-run/roofline surface + A/B floor); these
+# re-exports keep historical imports working.
+from .flat_legacy import (  # noqa: E402,F401
+    OBJ_PER_LEAF as OBJ_PER_LEAF,
+    TOP_LEAVES_LOCAL as TOP_LEAVES_LOCAL,
+    lower_wisk_serve,
+    make_inputs,
+    wisk_serve_step,
+)

@@ -168,6 +168,52 @@ def _delta_unflatten(aux, children) -> DeltaBuffer:
 jax.tree_util.register_pytree_node(DeltaBuffer, _delta_flatten, _delta_unflatten)
 
 
+def partition_delta(delta: DeltaBuffer, part) -> DeltaBuffer:
+    """Route a replicated ``DeltaBuffer`` to the owning index shards.
+
+    Returns a new ``DeltaBuffer`` whose rows follow the stacked
+    ``PartitionedSnapshot`` layout for ``part`` (an ``IndexPartition``):
+    level arrays become ``(S*pad_li, ...)`` with each shard's slice holding
+    its own nodes' augmented MBRs/bitmaps (pads: never-intersecting rect,
+    empty bitmap), insert buffers and the delete mask become ``(S*Kp, ...)``
+    with each leaf's buffered inserts and alive mask living only on the
+    shard that owns the leaf. Under the shard_map front doors the whole
+    buffer shards with the same single ``P("index")`` prefix spec as the
+    snapshot, so every shard merges exactly its own deltas (host-only;
+    launch/wisk_serve.py memoizes the result per buffer).
+    """
+    from ..kernels.ops import NEVER_RECT
+    from .snapshot import _stack_shard_rows
+
+    L = delta.n_levels
+    leaf_ids = part.nodes[L - 1]
+    Kp = part.level_pads[L - 1]
+    never = np.asarray(NEVER_RECT, np.float32)
+    aug_mbrs = []
+    aug_bms = []
+    for li in range(L):
+        mb = np.asarray(delta.aug_mbrs[li])
+        bm = np.asarray(delta.aug_bms[li])
+        aug_mbrs.append(jnp.asarray(
+            _stack_shard_rows(mb, part.nodes[li], part.level_pads[li], never)
+        ))
+        aug_bms.append(jnp.asarray(
+            _stack_shard_rows(bm, part.nodes[li], part.level_pads[li], 0)
+        ))
+    return DeltaBuffer(
+        aug_mbrs=aug_mbrs,
+        aug_bms=aug_bms,
+        ins_x=jnp.asarray(_stack_shard_rows(np.asarray(delta.ins_x), leaf_ids, Kp, 0)),
+        ins_y=jnp.asarray(_stack_shard_rows(np.asarray(delta.ins_y), leaf_ids, Kp, 0)),
+        ins_bm=jnp.asarray(_stack_shard_rows(np.asarray(delta.ins_bm), leaf_ids, Kp, 0)),
+        ins_id=jnp.asarray(_stack_shard_rows(np.asarray(delta.ins_id), leaf_ids, Kp, -1)),
+        base_alive=jnp.asarray(
+            _stack_shard_rows(np.asarray(delta.base_alive), leaf_ids, Kp, 1)
+        ),
+        slots_per_leaf=delta.slots_per_leaf,
+    )
+
+
 def parent_chains(index: WiskIndex) -> List[np.ndarray]:
     """Per non-root level: ``parents[li][node] = parent id at level li-1``.
 

@@ -191,6 +191,46 @@ def _select_leaves_frontier(frontier, surv, take: int, n_leaf: int):
     return top_leaf, leaf_ok, overflow
 
 
+# -------------------------------------- index-sharded collectives (DESIGN §3.4)
+def _gather_cat(x, index_axis: str):
+    """all_gather over the ``index`` mesh axis, shards concatenated along
+    axis 1: the (M, F) per-shard view becomes the (M, S*F) global view.
+    Traced inside shard_map bodies only."""
+    g = jax.lax.all_gather(x, index_axis)  # (S, M, ...)
+    return jnp.moveaxis(g, 0, 1).reshape(x.shape[0], -1)
+
+
+def _select_leaves_indexed(
+    frontier, surv, leaf_gid, take_g: int, take_loc: int, n_shards: int,
+    index_axis: str,
+):
+    """Index-sharded twin of ``_select_leaves_frontier``: keep the globally
+    ``take_g`` smallest-GLOBAL-id surviving leaves, exactly matching the
+    single-device selection (and therefore its ``overflow`` drops).
+
+    One bound exchange: each shard gathers its ``take_loc`` smallest
+    surviving global leaf ids, the all-gathered (S*take_loc) candidates are
+    sorted, and the ``take_g``-th smallest becomes the keep threshold. A
+    shard can contribute at most ``take_loc`` (>= its survivor count, the
+    caller passes its leaf frontier width) of the global winners, so the
+    threshold is exact. ``overflow`` is the psum'd global survivor count
+    beyond ``take_g`` -- identical per query to the single-device counter.
+    """
+    K = leaf_gid.shape[0]
+    ok = (surv > 0) & (frontier >= 0)
+    gid = jnp.where(ok, leaf_gid[jnp.clip(frontier, 0, K - 1)], _ID_SENTINEL)
+    neg, _ = jax.lax.top_k(_ID_SENTINEL - gid, take_loc)
+    small = _ID_SENTINEL - neg  # ascending local minima, sentinel-padded
+    g = jax.lax.all_gather(small, index_axis)  # (S, M, take_loc)
+    g = jnp.sort(jnp.moveaxis(g, 0, 1).reshape(small.shape[0], -1), axis=1)
+    thr = g[:, min(take_g, n_shards * take_loc) - 1]
+    keep = (ok & (gid <= thr[:, None])).astype(jnp.int8)
+    top_leaf, leaf_ok, _ = _select_leaves_frontier(frontier, keep, take_loc, K)
+    total = jax.lax.psum(jnp.sum(ok.astype(jnp.int32), axis=1), index_axis)
+    overflow = jnp.maximum(total - take_g, 0)
+    return top_leaf, leaf_ok, overflow
+
+
 def _verify_leaves(
     snap: IndexSnapshot, q_rects, q_bm, top_leaf, leaf_ok, delta=None, fused=None,
     fused_variant: Optional[str] = None,
@@ -265,8 +305,20 @@ def _root_frontier(snap: IndexSnapshot, M: int) -> jnp.ndarray:
     return jnp.tile(jnp.asarray(root)[None, :], (M, 1))
 
 
+def _local_root_frontier(width: int, n_root_local, M: int) -> jnp.ndarray:
+    """Shard-local root frontier for the index-sharded descent: the first
+    ``n_root_local`` (a per-shard device scalar -- shards own different
+    numbers of root subtrees) slots hold local root ids, the rest are ``-1``
+    pads. Masking by the REAL local count keeps psum'd ``nodes_checked``
+    exactly equal to the single-device root scan."""
+    slot = jnp.arange(width, dtype=jnp.int32)
+    root = jnp.where(slot < n_root_local, slot, -1)
+    return jnp.tile(root[None, :], (M, 1))
+
+
 def _descend_frontier(
-    snap: IndexSnapshot, q_rects, q_bm, plan: ExecutionPlan, delta=None, words=None
+    snap: IndexSnapshot, q_rects, q_bm, plan: ExecutionPlan, delta=None, words=None,
+    root=None,
 ):
     """Shared range-query frontier descent.
 
@@ -279,11 +331,14 @@ def _descend_frontier(
     ``(wids, bits)`` pair from ``ops.pack_query_words``) switches the level
     filters to the bandwidth-lean narrow planes -- int16 MBR rank codes and
     packed bitmap word planes, bit-identical survivors (DESIGN.md §3.5);
-    requires ``snap.has_narrow_planes`` and no live delta.
+    requires ``snap.has_narrow_planes`` and no live delta. ``root`` overrides
+    the level-0 frontier -- the index-sharded path starts each shard from its
+    masked local root frontier (``_local_root_frontier``) instead of the full
+    forest.
     """
     M = q_rects.shape[0]
     narrow = words is not None and delta is None and snap.has_narrow_planes
-    frontier = _root_frontier(snap, M)
+    frontier = root if root is not None else _root_frontier(snap, M)
     nodes_checked = jnp.zeros((M,), jnp.int32)
     used: List[int] = []
     needs: List = []
@@ -344,6 +399,23 @@ def _retrieve_frontier(
 
 # ------------------------------------------------------- kNN (Boolean, §6)
 _ID_SENTINEL = np.int32(np.iinfo(np.int32).max)
+
+# bf16 carries an 8-bit mantissa: rounding a finite f32 distance to bf16
+# perturbs it by at most 2^-9 relative. The retry guard below divides by a
+# 2^-6 margin -- comfortably conservative -- to lower-bound what the true
+# f32 distance of a bf16-pruned node could have been.
+_BF16_RISK_TOL = 2.0 ** -6
+
+
+def _quantize_dist(d, knn_dtype: str):
+    """Model reduced-precision distance math in the bounded sweep: round the
+    kernel's f32 squared distances to bf16 (``knn_dtype="bf16"``). On TPU
+    the cast moves into the kernel (halving the distance-plane bytes); the
+    rounding here is the same numerics, so the retry contract is identical.
+    """
+    if knn_dtype == "bf16":
+        return d.astype(jnp.bfloat16).astype(jnp.float32)
+    return d
 
 
 def _merge_topk(top_d, top_id, cand_d, cand_id, kb: int):
@@ -449,6 +521,11 @@ def _knn_leaf_phase(
     With a live ``delta``, every chunk leaf's insert-buffer slots are
     verified alongside its snapshot block and deleted objects are masked
     out of the top-k merge.
+
+    Also returns ``rm``, the per-query minimum over bounded-out chunk slots
+    of ``dc * (1 - _BF16_RISK_TOL)`` -- the bf16 retry guard's conservative
+    lower bound on what a pruned leaf could still contain (inf under f32
+    serving or when nothing was pruned; see ``retrieve_knn``'s ``knn_dtype``).
     """
     M, F = leaf_d.shape
     d = jnp.where(frontier == probe_leaf[:, None], jnp.inf, leaf_d)
@@ -458,7 +535,7 @@ def _knn_leaf_phase(
     l_ch = jnp.moveaxis(leaf_s.reshape(M, nch, ch), 1, 0)
 
     def step(carry, inp):
-        top_d, top_id, lv, ver, pr = carry
+        top_d, top_id, lv, ver, pr, rm = carry
         dc, lc = inp  # (M, ch)
         bound = top_d[:, k - 1]
         active = jnp.isfinite(dc) & (dc <= bound[:, None])
@@ -484,16 +561,23 @@ def _knn_leaf_phase(
         lv = lv + jnp.sum(active, axis=1).astype(jnp.int32)
         ver = ver + jnp.sum(valid, axis=(1, 2)).astype(jnp.int32)
         pr = pr + jnp.sum(jnp.isfinite(dc) & ~active, axis=1).astype(jnp.int32)
-        return (top_d2, top_id2, lv, ver, pr), None
+        lower = jnp.where(
+            jnp.isfinite(dc) & ~active, dc * (1.0 - _BF16_RISK_TOL), jnp.inf
+        )
+        rm = jnp.minimum(rm, jnp.min(lower, axis=1))
+        return (top_d2, top_id2, lv, ver, pr, rm), None
 
     z = jnp.zeros((M,), jnp.int32)
-    (top_d, top_id, lv, ver, pr), _ = jax.lax.scan(step, (top_d, top_id, z, z, z), (d_ch, l_ch))
-    return top_d, top_id, lv, ver, pr
+    rm0 = jnp.full((M,), jnp.inf, jnp.float32)
+    (top_d, top_id, lv, ver, pr, rm), _ = jax.lax.scan(
+        step, (top_d, top_id, z, z, z, rm0), (d_ch, l_ch)
+    )
+    return top_d, top_id, lv, ver, pr, rm
 
 
 def _descend_knn(
     snap: IndexSnapshot, points, q_bm, k: int, kb: int, plan: ExecutionPlan, delta=None,
-    words=None,
+    words=None, knn_dtype: str = "f32",
 ):
     """Distance-bounded kNN descent (probe -> bounded sweep -> leaf chunks).
 
@@ -504,6 +588,13 @@ def _descend_knn(
     stages (DESIGN.md §7). ``words`` switches the probe and sweep level
     filters to the bandwidth-lean narrow planes (bit-identical distances;
     leaf scoring stays on the exact f32 object bank either way).
+
+    ``knn_dtype="bf16"`` rounds the bounded sweep's node distances to bf16
+    before pruning and tracks ``risk`` -- the minimum conservative lower
+    bound over everything pruned; the caller retries in exact f32 whenever
+    ``risk`` reaches the final bound (``retrieve_knn``). Object distances in
+    the verify stages stay exact f32 either way, so a descent whose risk
+    stays above the final bound is already id-exact.
     """
     M = int(points.shape[0])
     L = snap.n_levels
@@ -547,6 +638,222 @@ def _descend_knn(
     used: List[int] = []
     needs: List = []
     leaf_d = None
+    risk_min = jnp.full((M,), jnp.inf, jnp.float32)
+    for li in range(L):
+        used.append(int(frontier.shape[1]))
+        d, nv = dist_level(li, frontier)
+        d = _quantize_dist(d, knn_dtype)
+        nodes_checked = nodes_checked + nv
+        if li < L - 1:
+            alive, pr = _bound_prune(d, top_d, k)
+            pruned = pruned + pr
+            lower = jnp.where(
+                jnp.isfinite(d) & ~(alive > 0), d * (1.0 - _BF16_RISK_TOL), jnp.inf
+            )
+            risk_min = jnp.minimum(risk_min, jnp.min(lower, axis=1))
+            need = _frontier_child_counts(snap.child_counts[li], frontier, alive)
+            f_next = plan.pick_width(need, li, needs)
+            frontier = _expand_frontier(snap.child_table[li], frontier, alive, f_next)
+        else:
+            leaf_d = d
+
+    F = int(frontier.shape[1])
+    ch = 4 if F % 4 == 0 else 1
+    top_d, top_id, lv, ver, pr, rm = _knn_leaf_phase(
+        points, q_bm, leaf_d, frontier, probe_leaf,
+        snap.leaf_obj_x, snap.leaf_obj_y, snap.leaf_obj_bm, snap.leaf_obj_id,
+        top_d, top_id, k, kb, ch, delta,
+    )
+    result = (
+        top_d, top_id, nodes_checked, verified + ver,
+        leaves_verified + lv, pruned + pr, used,
+        jnp.minimum(risk_min, rm),
+    )
+    return result, needs
+
+
+def _knn_leaf_phase_indexed(
+    points, q_bm, leaf_d, frontier, probe_leaf, leaf_gid,
+    obj_x, obj_y, obj_bm, obj_id, top_d, top_id, k: int, kb: int, ch: int,
+    n_shards: int, index_axis: str, delta=None,
+):
+    """Index-sharded twin of ``_knn_leaf_phase`` (shard_map bodies only).
+
+    Parity with the single-device leaf phase needs the *global* ascending
+    (min-dist, global leaf id) chunk order, because each chunk's bound is
+    tightened by every previous chunk. Each shard ranks its local leaves
+    against the all-gathered global (dist, gid) key set and scatters them
+    into their global-rank slots; slots owned by other shards stay
+    ``(inf, -1)`` locally, so every shard walks the same global chunk
+    sequence with exactly its own leaves materialized. After each chunk the
+    shards exchange their local top-kb candidates and merge into a shared
+    buffer -- the truncation is lossless (a chunk contributes at most kb of
+    the new top-kb) -- so the bound sequence, and therefore which leaves get
+    verified vs bounded out, is identical to the single-device scan.
+    Counters are per-shard (each real leaf counted only by its owner); the
+    caller psums them over ``index_axis``.
+    """
+    M, F = leaf_d.shape
+    K = obj_x.shape[0]
+    d = jnp.where(frontier == probe_leaf[:, None], jnp.inf, leaf_d)
+    gid = jnp.where(frontier >= 0, leaf_gid[jnp.clip(frontier, 0, K - 1)], _ID_SENTINEL)
+    gid = jnp.where(jnp.isfinite(d), gid, _ID_SENTINEL)
+    d_s, gid_s, leaf_s = jax.lax.sort((d, gid, frontier), dimension=1, num_keys=2)
+
+    # global rank of each local leaf under the (dist, gid) total order
+    T = n_shards * F
+    gd = _gather_cat(d_s, index_axis)  # (M, T)
+    gg = _gather_cat(gid_s, index_axis)
+    less = (gd[:, None, :] < d_s[:, :, None]) | (
+        (gd[:, None, :] == d_s[:, :, None]) & (gg[:, None, :] < gid_s[:, :, None])
+    )
+    rank = jnp.sum(less, axis=2).astype(jnp.int32)  # (M, F)
+
+    nch = -(-T // ch)
+    rows = jnp.arange(M, dtype=jnp.int32)[:, None]
+    fin = jnp.isfinite(d_s)
+    tgt = jnp.where(fin, rank, nch * ch)  # pads land in the dump slot
+    buf_d = jnp.full((M, nch * ch + 1), jnp.inf, jnp.float32)
+    buf_l = jnp.full((M, nch * ch + 1), -1, jnp.int32)
+    buf_d = buf_d.at[rows, tgt].set(jnp.where(fin, d_s, jnp.inf))
+    buf_l = buf_l.at[rows, tgt].set(jnp.where(fin, leaf_s, -1))
+    d_ch = jnp.moveaxis(buf_d[:, : nch * ch].reshape(M, nch, ch), 1, 0)
+    l_ch = jnp.moveaxis(buf_l[:, : nch * ch].reshape(M, nch, ch), 1, 0)
+
+    def step(carry, inp):
+        top_d, top_id, lv, ver, pr, rm = carry
+        dc, lc = inp  # (M, ch)
+        bound = top_d[:, k - 1]
+        active = jnp.isfinite(dc) & (dc <= bound[:, None])
+        safe = jnp.clip(lc, 0, K - 1)
+        ox, oy = obj_x[safe], obj_y[safe]  # (M, ch, OBJ)
+        obm, oid = obj_bm[safe], obj_id[safe]
+        base_ok = oid >= 0
+        if delta is not None:
+            base_ok = base_ok & (delta.base_alive[safe] > 0)
+            ox = jnp.concatenate([ox, delta.ins_x[safe]], axis=2)
+            oy = jnp.concatenate([oy, delta.ins_y[safe]], axis=2)
+            obm = jnp.concatenate([obm, delta.ins_bm[safe]], axis=2)
+            oid = jnp.concatenate([oid, delta.ins_id[safe]], axis=2)
+            base_ok = jnp.concatenate([base_ok, delta.ins_id[safe] >= 0], axis=2)
+        dx = ox - points[:, 0][:, None, None]
+        dy = oy - points[:, 1][:, None, None]
+        od2 = dx * dx + dy * dy
+        kw = jnp.any((obm & q_bm[:, None, None, :]) != 0, axis=-1)
+        valid = base_ok & kw & active[:, :, None]
+        cd = jnp.where(valid, od2, jnp.inf).reshape(M, -1)
+        cid = jnp.where(valid, oid, _ID_SENTINEL).reshape(M, -1)
+        loc_d = jnp.full((M, kb), jnp.inf, jnp.float32)
+        loc_id = jnp.full((M, kb), _ID_SENTINEL, jnp.int32)
+        loc_d, loc_id = _merge_topk(loc_d, loc_id, cd, cid, kb)
+        g_d = _gather_cat(loc_d, index_axis)  # (M, S*kb)
+        g_id = _gather_cat(loc_id, index_axis)
+        top_d2, top_id2 = _merge_topk(top_d, top_id, g_d, g_id, kb)
+        lv = lv + jnp.sum(active, axis=1).astype(jnp.int32)
+        ver = ver + jnp.sum(valid, axis=(1, 2)).astype(jnp.int32)
+        pr = pr + jnp.sum(jnp.isfinite(dc) & ~active, axis=1).astype(jnp.int32)
+        lower = jnp.where(
+            jnp.isfinite(dc) & ~active, dc * (1.0 - _BF16_RISK_TOL), jnp.inf
+        )
+        rm = jnp.minimum(rm, jnp.min(lower, axis=1))
+        return (top_d2, top_id2, lv, ver, pr, rm), None
+
+    z = jnp.zeros((M,), jnp.int32)
+    rm0 = jnp.full((M,), jnp.inf, jnp.float32)
+    (top_d, top_id, lv, ver, pr, rm), _ = jax.lax.scan(
+        step, (top_d, top_id, z, z, z, rm0), (d_ch, l_ch)
+    )
+    return top_d, top_id, lv, ver, pr, rm
+
+
+def _descend_knn_indexed(
+    snap: IndexSnapshot, root_gid, leaf_gid, n_root_local, points, q_bm,
+    k: int, kb: int, plan: ExecutionPlan, n_shards: int, index_axis: str,
+    delta=None, words=None,
+):
+    """Index-sharded kNN descent (shard_map bodies only; DESIGN.md §3.4).
+
+    ``snap`` is a shard's ``PartitionedSnapshot.local_view()``;
+    ``root_gid``/``leaf_gid`` map local slots to global ids and
+    ``n_root_local`` is the shard's real root count. Three collective
+    exchanges keep exact parity with ``_descend_knn``:
+
+    1. *Probe*: every shard scans its local roots (their psum'd count equals
+       the global root scan), then the shards exchange their best
+       ``(dist, root gid)`` -- the lexicographic minimum picks the one
+       *canonical* shard whose greedy chain matches the single-device
+       probe's smallest-id argmin tie-break. Only the canonical shard counts
+       sub-root probe levels and verifies its probe leaf; the seeded top-k
+       buffer is then shared via an all-gather + sort.
+    2. *Sweep*: purely shard-local -- the bound is static during the sweep,
+       so per-node prune decisions match the single-device sweep and the
+       counters psum exactly.
+    3. *Leaf phase*: ``_knn_leaf_phase_indexed`` walks the global
+       (dist, gid)-ordered chunk sequence with a shared bound.
+
+    Always exact f32 (``knn_dtype`` stays a single-device/replicated-path
+    flag). Returns the 7-tuple result (no risk) plus per-shard ``needs``.
+    """
+    M = int(points.shape[0])
+    L = snap.n_levels
+    narrow = words is not None and delta is None and snap.has_narrow_planes
+
+    def dist_level(li, fr):
+        if narrow:
+            return _knn_dist_level_narrow(
+                snap.level_mbr_codes[li], snap.level_bms[li],
+                snap.level_dict_x[li], snap.level_dict_y[li],
+                points, words[0], words[1], fr,
+            )
+        mbrs, bms = _level_arrays(snap, delta, li)
+        return _knn_dist_level(mbrs, bms, points, q_bm, fr)
+
+    top_d = jnp.full((M, kb), jnp.inf, jnp.float32)
+    top_id = jnp.full((M, kb), _ID_SENTINEL, jnp.int32)
+    nodes_checked = jnp.zeros((M,), jnp.int32)
+    pruned = jnp.zeros((M,), jnp.int32)
+
+    # probe: local root scan, then one (dist, gid) exchange elects the
+    # canonical shard that owns the single-device greedy chain
+    cand = _local_root_frontier(snap.root_width(), n_root_local, M)
+    d0, nv0 = dist_level(0, cand)
+    nodes_checked = nodes_checked + nv0
+    best = jnp.argmin(d0, axis=1)  # ties: lowest slot == smallest gid
+    bd = jnp.take_along_axis(d0, best[:, None], axis=1)[:, 0]
+    bslot = jnp.take_along_axis(cand, best[:, None], axis=1)[:, 0]
+    bgid = jnp.where(
+        (bslot >= 0) & jnp.isfinite(bd),
+        root_gid[jnp.clip(bslot, 0, root_gid.shape[0] - 1)], _ID_SENTINEL,
+    )
+    g_bd = jax.lax.all_gather(jnp.where(jnp.isfinite(bd), bd, jnp.inf), index_axis)
+    g_bg = jax.lax.all_gather(bgid, index_axis)  # (S, M)
+    wd, wg = jax.lax.sort((g_bd, g_bg), dimension=0, num_keys=2)
+    win_d, win_gid = wd[0], wg[0]
+    canonical = jnp.isfinite(bd) & (bd == win_d) & (bgid == win_gid)
+    cur = jnp.where(jnp.isfinite(bd), bslot, -1)
+    for li in range(1, L):
+        cand = _probe_children(snap.child_table[li - 1], cur)
+        d, nv = dist_level(li, cand)
+        nodes_checked = nodes_checked + jnp.where(canonical, nv, 0)
+        cur = _probe_select(d, cand)
+    probe_leaf = jnp.where(canonical, cur, -1)
+    top_d, top_id, ver0 = _knn_probe_verify(
+        points, q_bm, snap.leaf_obj_x, snap.leaf_obj_y, snap.leaf_obj_bm,
+        snap.leaf_obj_id, probe_leaf, top_d, top_id, kb, delta,
+    )
+    verified = ver0
+    leaves_verified = (probe_leaf >= 0).astype(jnp.int32)
+    # share the canonical shard's seed so every shard sweeps the same bound
+    g_d = _gather_cat(top_d, index_axis)
+    g_id = _gather_cat(top_id, index_axis)
+    d_sh, id_sh = jax.lax.sort((g_d, g_id), dimension=1, num_keys=2)
+    top_d, top_id = d_sh[:, :kb], id_sh[:, :kb]
+
+    # bounded sweep: shard-local (the bound is static until the leaf phase)
+    frontier = _local_root_frontier(snap.root_width(), n_root_local, M)
+    used: List[int] = []
+    needs: List = []
+    leaf_d = None
     for li in range(L):
         used.append(int(frontier.shape[1]))
         d, nv = dist_level(li, frontier)
@@ -562,10 +869,10 @@ def _descend_knn(
 
     F = int(frontier.shape[1])
     ch = 4 if F % 4 == 0 else 1
-    top_d, top_id, lv, ver, pr = _knn_leaf_phase(
-        points, q_bm, leaf_d, frontier, probe_leaf,
+    top_d, top_id, lv, ver, pr, _ = _knn_leaf_phase_indexed(
+        points, q_bm, leaf_d, frontier, probe_leaf, leaf_gid,
         snap.leaf_obj_x, snap.leaf_obj_y, snap.leaf_obj_bm, snap.leaf_obj_id,
-        top_d, top_id, k, kb, ch, delta,
+        top_d, top_id, k, kb, ch, n_shards, index_axis, delta,
     )
     result = (
         top_d, top_id, nodes_checked, verified + ver,
@@ -583,6 +890,7 @@ def retrieve_knn(
     plan_cache: Optional[PlanCache] = None,
     delta: Optional[DeltaBuffer] = None,
     quantized: Optional[bool] = None,
+    knn_dtype: str = "f32",
 ) -> Dict[str, np.ndarray]:
     """Batched Boolean kNN over the device-resident index (DESIGN.md §6).
 
@@ -595,7 +903,18 @@ def retrieve_knn(
     ``quantized=None`` (auto) descends on the snapshot's narrow planes when
     available and no delta is live; ``False`` forces the f32 full-width A/B
     baseline. Results are bit-identical either way (DESIGN.md §3.5).
+
+    ``knn_dtype="bf16"`` runs the bounded sweep's node-distance pruning in
+    bf16 (ROADMAP item 5). Object distances stay exact f32, so the result
+    differs from f32 only when a node was pruned on a rounded-down distance
+    that an exact sweep would have expanded; the descent tracks a
+    conservative ``risk`` lower bound over everything pruned and retries the
+    whole batch in exact f32 whenever that risk reaches the final k-th
+    bound. The output dict gains ``knn_dtype_retried`` and ids are always
+    identical to the f32 path.
     """
+    if knn_dtype not in ("f32", "bf16"):
+        raise ValueError(f"knn_dtype must be 'f32' or 'bf16', got {knn_dtype!r}")
     points = jnp.asarray(points, jnp.float32)
     q_bm = jnp.asarray(q_bm, jnp.uint32)
     M = int(points.shape[0])
@@ -610,13 +929,27 @@ def retrieve_knn(
     cache = plan_cache if plan_cache is not None else default_plan_cache(snap)
     words = _narrow_words(q_bm, delta, snap, quantized)
     plan = cache.plan("knn", snap.n_levels - 1)
-    descend = lambda p: _descend_knn(snap, points, q_bm, k, kb, p, delta, words)
+    descend = lambda p: _descend_knn(
+        snap, points, q_bm, k, kb, p, delta, words, knn_dtype=knn_dtype
+    )
     out = descend(plan)
     retried = cache.check_and_retry(plan, out[-1], descend)
-    top_d, top_id, nodes_checked, verified, leaves_verified, pruned, used = (retried or out)[0]
+    (top_d, top_id, nodes_checked, verified, leaves_verified,
+     pruned, used, risk) = (retried or out)[0]
+    if knn_dtype == "bf16":
+        bound = np.asarray(top_d[:, k - 1])
+        risk_np = np.asarray(risk)
+        if bool(np.any(np.isfinite(risk_np) & (risk_np <= bound))):
+            exact = retrieve_knn(
+                snap, points, q_bm, k, min_topk_bucket=min_topk_bucket,
+                plan_cache=cache, delta=delta, quantized=quantized,
+                knn_dtype="f32",
+            )
+            exact["knn_dtype_retried"] = True
+            return exact
     fin = jnp.isfinite(top_d[:, :k])
     ids = jnp.where(fin, top_id[:, :k], -1)
-    return dict(
+    result = dict(
         ids=np.asarray(ids),
         dist2=np.asarray(top_d[:, :k]),
         nodes_checked=np.asarray(nodes_checked, np.int64),
@@ -625,6 +958,9 @@ def retrieve_knn(
         pruned=np.asarray(pruned, np.int64),
         frontier_widths=np.asarray(used, np.int32),
     )
+    if knn_dtype == "bf16":
+        result["knn_dtype_retried"] = False
+    return result
 
 
 # --------------------------------------------------------------- dense path

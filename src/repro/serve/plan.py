@@ -102,6 +102,31 @@ class PlanCache:
             widths=tuple(self.widths.get((tag, li), minimum) for li in range(n_links)),
         )
 
+    def seeded_shard_plan(
+        self, tag: str, n_shards: int, n_links: int,
+        minimum: int = MIN_WIDTH_BUCKET,
+    ) -> ExecutionPlan:
+        """Per-shard width cache for the index-sharded descents: shard ``s``
+        learns under the sub-tag ``f"{tag}/s{s}"``, but every shard of one
+        shard_map'd descent must trace the SAME static widths (SPMD), so the
+        plan's per-level width is the max over the shard slots. A hot shard
+        widens the others' frontiers (pad slots are inert) without a second
+        shape family per shard."""
+        ws = []
+        for li in range(n_links):
+            ws.append(max(
+                self.widths.get((f"{tag}/s{s}", li), minimum)
+                for s in range(n_shards)
+            ))
+        return ExecutionPlan(tag=tag, widths=tuple(ws))
+
+    def observe_shards(self, tag: str, per_shard_maxima) -> None:
+        """Grow the per-shard slots from an (S, n_links) matrix of observed
+        child-count maxima (one row per index shard)."""
+        per_shard_maxima = np.asarray(per_shard_maxima)
+        for s in range(per_shard_maxima.shape[0]):
+            self.observe(f"{tag}/s{s}", per_shard_maxima[s])
+
     def observe(self, tag: str, maxima: Sequence[int]) -> None:
         """Monotone growth from observed per-level child-count maxima keeps
         the compiled shape family log-bounded: each (tag, level) slot can

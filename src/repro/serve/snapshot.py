@@ -20,13 +20,23 @@ with independent (or shared) planning state, and *object updates* live in
 mutates -- adapting to updates or drift always swaps in a freshly built
 snapshot atomically (launch/wisk_serve.py:LiveIndex).
 
+Index-parallel serving (DESIGN.md §3.4): for indexes too large to
+replicate, ``partition_index`` cuts the level-0 (root) forest into
+``n_shards`` balanced sub-hierarchies and ``PartitionedSnapshot`` stacks
+the per-shard slabs along axis 0 so one ``shard(mesh)`` placement call
+splits the whole pytree over the mesh's ``index`` axis. Inside a
+``shard_map`` body each device sees exactly its own slab, and
+``local_view()`` re-wraps it as an ordinary ``IndexSnapshot`` -- the
+engine's descent runs unchanged per shard (launch/wisk_serve.py:
+``serve_index_sharded`` / ``serve_knn_index_sharded``).
+
 Host-only vs traced: ``IndexSnapshot.build`` and ``.replicate`` run on
 host; the snapshot's arrays are consumed inside jit-traced descents.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Tuple
 
 import numpy as np
 
@@ -35,6 +45,7 @@ import jax.numpy as jnp
 
 from ..core.query import padded_child_table, round_up_bucket
 from ..core.types import GeoTextDataset, WiskIndex
+from ..kernels.ops import NEVER_RECT
 
 
 # int16 code capacity per coordinate dictionary: levels whose distinct
@@ -227,4 +238,362 @@ def _snapshot_unflatten(aux, children) -> IndexSnapshot:
 
 jax.tree_util.register_pytree_node(
     IndexSnapshot, _snapshot_flatten, _snapshot_unflatten
+)
+
+
+def tree_nbytes(tree) -> int:
+    """Total bytes of a pytree's array leaves (host-only; bench/telemetry)."""
+    return int(
+        sum(
+            np.prod(x.shape) * jnp.dtype(x.dtype).itemsize
+            for x in jax.tree_util.tree_leaves(tree)
+            if hasattr(x, "shape")
+        )
+    )
+
+
+# ------------------------------------------------ index-parallel partitioning
+@dataclasses.dataclass(frozen=True, eq=False)
+class IndexPartition:
+    """Host-side cut of the level-0 (root) forest into shard-local subtrees.
+
+    Each root subtree is assigned whole to one shard (greedy LPT on subtree
+    leaf counts, deterministic tie-breaks), so every shard's node set is
+    closed under the child relation and its sub-hierarchy is a self-contained
+    index. ``nodes[li][s]`` lists shard ``s``'s global node ids at level
+    ``li`` (sorted ascending -- local id order IS global id order within a
+    shard, which the engine's smallest-id tie-breaks rely on);
+    ``shard_of``/``local_of`` are the per-level inverse maps. Host-only.
+    """
+
+    n_shards: int
+    root_to_shard: np.ndarray  # (n_root,) owning shard per root subtree
+    nodes: List[List[np.ndarray]]  # [li][s] sorted global node ids
+    shard_of: List[np.ndarray]  # [li] (n_li,) owning shard per node
+    local_of: List[np.ndarray]  # [li] (n_li,) local index within the shard
+    level_pads: Tuple[int, ...]  # stacked per-shard slab height per level
+    n_leaves: int  # global leaf count
+
+    @property
+    def leaf_pad(self) -> int:
+        return self.level_pads[-1]
+
+
+def partition_index(snap: IndexSnapshot, n_shards: int) -> IndexPartition:
+    """Cut ``snap``'s root forest into ``n_shards`` balanced subtree groups.
+
+    Greedy LPT: roots are sorted by descending subtree leaf count (ties:
+    smallest root id) and each is assigned to the currently lightest shard
+    (ties: lowest shard id) -- deterministic, and within ~max-subtree of the
+    optimal balance. Requires ``n_root >= n_shards`` (the level-0 forest is
+    the cut line; WISK roots are wide by construction). Host-only.
+    """
+    L = snap.n_levels
+    n_root = int(snap.level_mbrs[0].shape[0])
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if n_root < n_shards:
+        raise ValueError(
+            f"cannot cut {n_root} root subtrees into {n_shards} shards; "
+            "rebuild with a wider root forest or fewer index shards"
+        )
+    table = [np.asarray(t) for t in snap.child_table]
+    # per-root per-level membership by BFS down the CSR tables
+    members: List[List[np.ndarray]] = []
+    for r in range(n_root):
+        per_level = [np.array([r], np.int64)]
+        for li in range(L - 1):
+            rows = table[li][per_level[-1]]
+            per_level.append(np.sort(rows[rows >= 0]).astype(np.int64))
+        members.append(per_level)
+    weights = [int(m[-1].size) for m in members]
+    order = sorted(range(n_root), key=lambda r: (-weights[r], r))
+    load = [0] * n_shards
+    root_to_shard = np.zeros(n_root, np.int64)
+    for r in order:
+        s = min(range(n_shards), key=lambda i: (load[i], i))
+        root_to_shard[r] = s
+        load[s] += weights[r]
+    nodes: List[List[np.ndarray]] = []
+    for li in range(L):
+        row = []
+        for s in range(n_shards):
+            ms = [members[r][li] for r in range(n_root) if root_to_shard[r] == s]
+            row.append(
+                np.sort(np.concatenate(ms)).astype(np.int64)
+                if ms
+                else np.zeros(0, np.int64)
+            )
+        nodes.append(row)
+    shard_of, local_of = [], []
+    for li in range(L):
+        n_li = int(snap.level_mbrs[li].shape[0])
+        so = np.full(n_li, -1, np.int64)
+        lo = np.full(n_li, -1, np.int64)
+        for s in range(n_shards):
+            so[nodes[li][s]] = s
+            lo[nodes[li][s]] = np.arange(nodes[li][s].size)
+        shard_of.append(so)
+        local_of.append(lo)
+    level_pads = tuple(
+        max(nodes[li][s].size for s in range(n_shards)) for li in range(L)
+    )
+    return IndexPartition(
+        n_shards=n_shards,
+        root_to_shard=root_to_shard,
+        nodes=nodes,
+        shard_of=shard_of,
+        local_of=local_of,
+        level_pads=level_pads,
+        n_leaves=snap.n_leaves,
+    )
+
+
+def _stack_shard_rows(arr: np.ndarray, ids_per_shard, pad_to: int, fill):
+    """Stack per-shard row subsets of ``arr`` into one (S*pad_to, ...) slab.
+
+    Pad rows get ``fill`` (scalar, or a per-column row like ``NEVER_RECT``).
+    Host-only partitioning helper: axis 0 of the result is the ``index``
+    mesh axis's sharded dimension.
+    """
+    S = len(ids_per_shard)
+    out = np.empty((S * pad_to, *arr.shape[1:]), arr.dtype)
+    out[:] = fill
+    for s, ids in enumerate(ids_per_shard):
+        out[s * pad_to : s * pad_to + ids.size] = arr[ids]
+    return out
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PartitionedSnapshot:
+    """The index cut into shard-local sub-hierarchies, stacked for shard_map.
+
+    Every per-node / per-leaf array of the base ``IndexSnapshot`` is
+    re-laid-out as ``(n_shards * pad, ...)``: shard ``s``'s slab occupies
+    rows ``[s*pad, (s+1)*pad)``, padded with inert rows (``NEVER_RECT``
+    MBRs, zero bitmaps, ``-1`` ids). Child tables hold shard-LOCAL ids, so
+    each slab is a closed sub-hierarchy; ``leaf_obj_id`` keeps GLOBAL object
+    ids and ``root_gid``/``leaf_gid`` map local node slots back to global
+    ids (the collectives' tie-break currency). The narrow int16 shadow
+    planes are re-encoded per shard against shard-local coordinate
+    dictionaries (still lossless; disabled for the whole partition if any
+    shard's dictionary overflows ``NARROW_DICT_MAX``).
+
+    ``shard(mesh)`` places the pytree with every leaf split over the mesh's
+    ``index`` axis (logical axis ``"leaf"`` in sharding/rules.py), so inside
+    ``shard_map`` (in_spec prefix ``P("index")``) each device holds exactly
+    its own slab and ``local_view()`` re-wraps it as a plain
+    ``IndexSnapshot`` for the unchanged engine descent.
+    """
+
+    level_mbrs: List[jnp.ndarray]  # per level: (S*Np, 4) f32
+    level_bms: List[jnp.ndarray]  # per level: (S*Np, W) u32
+    child_table: List[jnp.ndarray]  # (S*Np, fan) i32, shard-LOCAL child ids
+    child_counts: List[jnp.ndarray]  # (S*Np,) i32
+    leaf_obj_x: jnp.ndarray  # (S*Kp, OBJ) f32
+    leaf_obj_y: jnp.ndarray
+    leaf_obj_bm: jnp.ndarray  # (S*Kp, OBJ, W) u32
+    leaf_obj_id: jnp.ndarray  # (S*Kp, OBJ) i32 GLOBAL object ids, -1 pad
+    root_gid: jnp.ndarray  # (S*Np0,) i32 global node id per local root, -1 pad
+    leaf_gid: jnp.ndarray  # (S*Kp,) i32 global leaf id per local leaf, -1 pad
+    level_counts: jnp.ndarray  # (S, L) i32 real node count per (shard, level)
+    obj_per_leaf: int
+    n_shards: int
+    part: IndexPartition  # host-side cut (aux; hashable by identity)
+    # per-shard narrow planes (DESIGN.md §3.5); empty lists when disabled
+    level_mbr_codes: List[jnp.ndarray] = dataclasses.field(default_factory=list)
+    level_dict_x: List[jnp.ndarray] = dataclasses.field(default_factory=list)  # (S*Dx,)
+    level_dict_y: List[jnp.ndarray] = dataclasses.field(default_factory=list)
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.level_mbrs)
+
+    @property
+    def n_leaves_global(self) -> int:
+        return self.part.n_leaves
+
+    @property
+    def has_narrow_planes(self) -> bool:
+        return len(self.level_mbr_codes) == len(self.level_mbrs) > 0
+
+    def local_root_width(self) -> int:
+        """Bucketed width of one shard's root frontier (static)."""
+        return round_up_bucket(self.part.level_pads[0])
+
+    def per_shard_bytes(self) -> int:
+        """Device-resident bytes per index shard (each device holds exactly
+        one slab of every stacked array)."""
+        return tree_nbytes(self) // self.n_shards
+
+    def local_view(self) -> IndexSnapshot:
+        """Re-wrap (inside a shard_map body) this device's slab as a plain
+        ``IndexSnapshot``: after ``shard_map`` slices every leaf over the
+        ``index`` axis, the arrays ARE one shard's self-contained
+        sub-hierarchy, so the engine descends on them unchanged. Traced."""
+        return IndexSnapshot(
+            level_mbrs=self.level_mbrs,
+            level_bms=self.level_bms,
+            child_table=self.child_table,
+            child_counts=self.child_counts,
+            child_matrix=[],
+            leaf_obj_x=self.leaf_obj_x,
+            leaf_obj_y=self.leaf_obj_y,
+            leaf_obj_bm=self.leaf_obj_bm,
+            leaf_obj_id=self.leaf_obj_id,
+            obj_per_leaf=self.obj_per_leaf,
+            level_mbr_codes=self.level_mbr_codes,
+            level_dict_x=self.level_dict_x,
+            level_dict_y=self.level_dict_y,
+        )
+
+    def shard(self, mesh) -> "PartitionedSnapshot":
+        """Place the partition over ``mesh``: one ``device_put`` of the whole
+        pytree with every array split along axis 0 over the ``index`` mesh
+        axis (logical axis ``"leaf"``) -- the index-parallel sibling of
+        ``IndexSnapshot.replicate``. Each device ends up holding only its
+        own ~1/n_shards slab."""
+        from ..sharding.rules import named_sharding
+
+        return jax.device_put(self, named_sharding(mesh, ("leaf",)))
+
+    @staticmethod
+    def build(snap: IndexSnapshot, n_shards: int) -> "PartitionedSnapshot":
+        """Partition a built ``IndexSnapshot`` into ``n_shards`` stacked
+        shard-local sub-hierarchies (host-only; see ``partition_index``)."""
+        part = partition_index(snap, n_shards)
+        L = snap.n_levels
+        S = n_shards
+        pads = part.level_pads
+        never = np.asarray(NEVER_RECT, np.float32)
+        level_mbrs, level_bms, child_table, child_counts = [], [], [], []
+        for li in range(L):
+            ids = part.nodes[li]
+            m = np.asarray(snap.level_mbrs[li], np.float32)
+            level_mbrs.append(jnp.asarray(_stack_shard_rows(m, ids, pads[li], never)))
+            b = np.asarray(snap.level_bms[li])
+            level_bms.append(jnp.asarray(_stack_shard_rows(b, ids, pads[li], 0)))
+            if li < L - 1:
+                tbl = np.asarray(snap.child_table[li])
+                stacked = _stack_shard_rows(tbl, ids, pads[li], -1)
+                # remap global child ids -> shard-local ids (children live in
+                # the parent's shard: subtrees are assigned whole)
+                loc = part.local_of[li + 1][np.clip(stacked, 0, None)]
+                child_table.append(
+                    jnp.asarray(np.where(stacked >= 0, loc, -1).astype(np.int32))
+                )
+                cc = np.asarray(snap.child_counts[li])
+                child_counts.append(
+                    jnp.asarray(_stack_shard_rows(cc, ids, pads[li], 0))
+                )
+        leaf_ids = part.nodes[L - 1]
+        Kp = pads[L - 1]
+        leaf_obj_x = _stack_shard_rows(np.asarray(snap.leaf_obj_x), leaf_ids, Kp, 0.0)
+        leaf_obj_y = _stack_shard_rows(np.asarray(snap.leaf_obj_y), leaf_ids, Kp, 0.0)
+        leaf_obj_bm = _stack_shard_rows(np.asarray(snap.leaf_obj_bm), leaf_ids, Kp, 0)
+        leaf_obj_id = _stack_shard_rows(np.asarray(snap.leaf_obj_id), leaf_ids, Kp, -1)
+        gid_src = [np.arange(int(snap.level_mbrs[li].shape[0]), dtype=np.int32) for li in (0, L - 1)]
+        root_gid = _stack_shard_rows(gid_src[0], part.nodes[0], pads[0], -1)
+        leaf_gid = _stack_shard_rows(gid_src[1], leaf_ids, Kp, -1)
+        level_counts = np.stack(
+            [[part.nodes[li][s].size for li in range(L)] for s in range(S)]
+        ).astype(np.int32)
+        # per-shard narrow planes: re-encode against shard-local dictionaries
+        codes_l, dx_l, dy_l = [], [], []
+        narrow_ok = snap.has_narrow_planes
+        if narrow_ok:
+            per_level = []
+            for li in range(L):
+                m = np.asarray(snap.level_mbrs[li], np.float32)
+                row = []
+                for s in range(S):
+                    ml = m[part.nodes[li][s]]
+                    dx = np.unique(ml[:, [0, 2]])
+                    dy = np.unique(ml[:, [1, 3]])
+                    if dx.size > NARROW_DICT_MAX or dy.size > NARROW_DICT_MAX:
+                        narrow_ok = False
+                        break
+                    c = np.stack(
+                        [
+                            np.searchsorted(dx, ml[:, 0]),
+                            np.searchsorted(dy, ml[:, 1]),
+                            np.searchsorted(dx, ml[:, 2]),
+                            np.searchsorted(dy, ml[:, 3]),
+                        ],
+                        axis=1,
+                    ).astype(np.int16)
+                    row.append((c, dx.astype(np.float32), dy.astype(np.float32)))
+                if not narrow_ok:
+                    break
+                per_level.append(row)
+        if narrow_ok:
+            for li in range(L):
+                row = per_level[li]
+                cp = np.zeros((S * pads[li], 4), np.int16)
+                Dx = max(r[1].size for r in row)
+                Dy = max(r[2].size for r in row)
+                dxp = np.zeros((S * Dx,), np.float32)
+                dyp = np.zeros((S * Dy,), np.float32)
+                for s, (c, dx, dy) in enumerate(row):
+                    cp[s * pads[li] : s * pads[li] + c.shape[0]] = c
+                    # pad dictionaries by repeating the last entry: pad slots
+                    # are never addressed by a real (in-range) code
+                    dxp[s * Dx : (s + 1) * Dx] = np.pad(dx, (0, Dx - dx.size), mode="edge")
+                    dyp[s * Dy : (s + 1) * Dy] = np.pad(dy, (0, Dy - dy.size), mode="edge")
+                codes_l.append(jnp.asarray(cp))
+                dx_l.append(jnp.asarray(dxp))
+                dy_l.append(jnp.asarray(dyp))
+        return PartitionedSnapshot(
+            level_mbrs=level_mbrs,
+            level_bms=level_bms,
+            child_table=child_table,
+            child_counts=child_counts,
+            leaf_obj_x=jnp.asarray(leaf_obj_x),
+            leaf_obj_y=jnp.asarray(leaf_obj_y),
+            leaf_obj_bm=jnp.asarray(leaf_obj_bm),
+            leaf_obj_id=jnp.asarray(leaf_obj_id),
+            root_gid=jnp.asarray(root_gid),
+            leaf_gid=jnp.asarray(leaf_gid),
+            level_counts=jnp.asarray(level_counts),
+            obj_per_leaf=snap.obj_per_leaf,
+            n_shards=S,
+            part=part,
+            level_mbr_codes=codes_l,
+            level_dict_x=dx_l,
+            level_dict_y=dy_l,
+        )
+
+
+_PSNAP_ARRAY_FIELDS = (
+    "level_mbrs",
+    "level_bms",
+    "child_table",
+    "child_counts",
+    "leaf_obj_x",
+    "leaf_obj_y",
+    "leaf_obj_bm",
+    "leaf_obj_id",
+    "root_gid",
+    "leaf_gid",
+    "level_counts",
+    "level_mbr_codes",
+    "level_dict_x",
+    "level_dict_y",
+)
+
+
+def _psnap_flatten(s: PartitionedSnapshot):
+    children = tuple(getattr(s, f) for f in _PSNAP_ARRAY_FIELDS)
+    return children, (s.obj_per_leaf, s.n_shards, s.part)
+
+
+def _psnap_unflatten(aux, children) -> PartitionedSnapshot:
+    kw = dict(zip(_PSNAP_ARRAY_FIELDS, children))
+    return PartitionedSnapshot(
+        obj_per_leaf=aux[0], n_shards=aux[1], part=aux[2], **kw
+    )
+
+
+jax.tree_util.register_pytree_node(
+    PartitionedSnapshot, _psnap_flatten, _psnap_unflatten
 )

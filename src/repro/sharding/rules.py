@@ -52,14 +52,21 @@ def default_rules(mesh: Mesh) -> Dict[str, Axis]:
         "inner": "model",  # mamba d_inner / xlstm inner: channel TP
         "conv": None,
         "repeat": None,
-        # WISK serving (launch/wisk_serve.py, DESIGN.md §3.4): the
-        # query-parallel path shards the query batch over the data axes with
-        # the IndexSnapshot replicated; the flat leaf-sharded fallback
-        # distributes leaves (and their object blocks) over model.
+        # WISK serving (launch/wisk_serve.py, DESIGN.md §3.4) -- three
+        # regimes share these names:
+        #  * replicated: queries shard over the data axes, the whole
+        #    IndexSnapshot replicates (P() -- no logical axis in play);
+        #  * index-sharded: a serving mesh carries an "index" axis and the
+        #    PartitionedSnapshot's stacked per-shard rows (subtree nodes,
+        #    leaves, object blocks, delta buffers) shard their leading dim
+        #    over it -- "leaf" resolves to "index" on such meshes;
+        #  * legacy flat (launch/flat_legacy.py): the hierarchy-free
+        #    fallback distributes leaf rows over "model" on the training-
+        #    style meshes, which have no "index" axis.
         "query": dp,
-        "leaf": "model",
+        "leaf": "index" if "index" in mesh.axis_names else "model",
         "word": None,  # keyword bitmap words stay unsharded
-        "obj_slot": None,  # per-leaf object block slots stay unsharded
+        "obj_slot": None,  # per-leaf object blocks ride their leaf's shard
     }
 
 

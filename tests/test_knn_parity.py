@@ -157,3 +157,46 @@ def test_knn_bounded_descent_prunes_leaves():
     sync = knn_level_sync(index, ds, points, wl.kw_bitmap, 10)
     for a, b in zip(out["ids"], sync["ids"]):
         np.testing.assert_array_equal(_trim(a), _trim(b))
+
+
+# --------------------------------------------- bf16 sweep (ROADMAP item 5)
+def test_knn_bf16_sweep_matches_f32_exactly():
+    """``knn_dtype="bf16"`` prunes the bounded sweep on bf16-rounded node
+    distances but must stay id- and distance-identical to f32: object
+    distances are exact, and a conservative risk bound retries the batch in
+    f32 whenever a rounded-down prune could have clipped a true neighbor."""
+    ds = make_dataset("fs", n=2500, seed=5)
+    index, _ = _build_index(ds, g=8, levels=3)
+    snap = IndexSnapshot.build(index, ds)
+    wl = make_workload(ds, m=24, dist="MIX", seed=6)
+    points = _points_from(wl)
+    for k in (1, 10):
+        f32 = retrieve_knn(snap, points, wl.kw_bitmap, k)
+        bf = retrieve_knn(snap, points, wl.kw_bitmap, k, knn_dtype="bf16")
+        np.testing.assert_array_equal(f32["ids"], bf["ids"])
+        np.testing.assert_array_equal(f32["dist2"], bf["dist2"])
+        assert bf["knn_dtype_retried"] in (False, True)
+        assert "knn_dtype_retried" not in f32  # flag only on the bf16 path
+    with pytest.raises(ValueError, match="knn_dtype"):
+        retrieve_knn(snap, points, wl.kw_bitmap, 5, knn_dtype="f16")
+
+
+def test_knn_bf16_forced_retry_falls_back_to_exact(monkeypatch):
+    """When the risk bound reaches the final k-th distance the whole batch
+    re-runs in f32. Inflating the risk tolerance to 100% makes every prune
+    look risky, so the retry MUST fire -- and the output must be the exact
+    f32 answer with ``knn_dtype_retried=True``."""
+    import repro.serve.engine as engine
+
+    ds = make_dataset("fs", n=1500, seed=4)
+    index, _ = _build_index(ds, g=6, levels=2)
+    snap = IndexSnapshot.build(index, ds)
+    wl = make_workload(ds, m=11, dist="MIX", seed=8)
+    points = _points_from(wl)
+    f32 = retrieve_knn(snap, points, wl.kw_bitmap, 3)
+    assert f32["pruned"].sum() > 0  # the bound genuinely fires here
+    monkeypatch.setattr(engine, "_BF16_RISK_TOL", 1.0)
+    bf = retrieve_knn(snap, points, wl.kw_bitmap, 3, knn_dtype="bf16")
+    assert bf["knn_dtype_retried"] is True
+    np.testing.assert_array_equal(f32["ids"], bf["ids"])
+    np.testing.assert_array_equal(f32["dist2"], bf["dist2"])

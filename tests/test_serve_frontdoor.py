@@ -1,0 +1,163 @@
+"""Serving front-door unit coverage (DESIGN.md §3.5): HotQueryCache LRU and
+key-quantization behavior, and MicroBatcher ticket/flush lifecycle.
+
+These are host-side control-plane contracts the integration tests only
+exercise incidentally: eviction order under capacity pressure, jittered
+re-issues folding onto one cache key (and genuinely different probes NOT
+folding), empty/double flushes, unknown tickets, and the auto-flush knob.
+"""
+import numpy as np
+import pytest
+
+from repro.data.synth import make_dataset
+from repro.data.workloads import make_workload
+from repro.launch.wisk_serve import HotQueryCache, MicroBatcher, serve_batch
+from repro.serve.engine import IndexSnapshot
+from repro.serve.plan import PlanCache
+
+from test_query_parity import _build_index
+
+
+# ------------------------------------------------------------ HotQueryCache
+def _bm(*words):
+    b = np.zeros(2, np.uint32)
+    for w in words:
+        b[w // 32] |= np.uint32(1 << (w % 32))
+    return b
+
+
+def test_hot_query_cache_evicts_lru_not_mru():
+    """Capacity pressure drops the least-recently-USED entry: a get()
+    refreshes recency, so the untouched entry goes first."""
+    c = HotQueryCache(maxsize=2)
+    ra, rb, rc = ([0.1, 0.1, 0.2, 0.2], [0.3, 0.3, 0.4, 0.4], [0.5, 0.5, 0.6, 0.6])
+    bm = _bm(3)
+    c.put(ra, bm, {"row": "A"})
+    c.put(rb, bm, {"row": "B"})
+    assert c.get(ra, bm) == {"row": "A"}  # refresh A; B is now LRU
+    c.put(rc, bm, {"row": "C"})  # evicts B
+    assert len(c) == 2
+    assert c.get(rb, bm) is None
+    assert c.get(ra, bm) == {"row": "A"}
+    assert c.get(rc, bm) == {"row": "C"}
+    assert c.hits == 3 and c.misses == 1
+
+
+def test_hot_query_cache_quantized_keys_fold_jitter():
+    """Re-issues jittered inside the 1/quant grid share one key and return
+    the FIRST issuer's exact cached row; jitter past the grid pitch is a
+    distinct probe and must miss. Different bitmaps never collide."""
+    c = HotQueryCache(maxsize=8, quant=4096.0)
+    rect = np.array([0.25, 0.25, 0.5, 0.5], np.float32)
+    bm = _bm(1, 7)
+    c.put(rect, bm, {"row": "first"})
+    tiny = rect + 1e-5  # ~0.04 grid cells: quantizes identically
+    assert c.key(tiny, bm) == c.key(rect, bm)
+    assert c.get(tiny, bm) == {"row": "first"}
+    far = rect + 1.0 / 4096.0  # a full grid cell away
+    assert c.key(far, bm) != c.key(rect, bm)
+    assert c.get(far, bm) is None
+    assert c.get(rect, _bm(2)) is None  # same rect, other keywords
+    assert c.hits == 1 and c.misses == 2
+
+
+def test_hot_query_cache_invalidate_drops_everything():
+    c = HotQueryCache(maxsize=4)
+    bm = _bm(0)
+    for i in range(3):
+        c.put([i * 0.1, 0.0, i * 0.1 + 0.05, 0.05], bm, {"i": i})
+    assert len(c) == 3
+    c.invalidate()
+    assert len(c) == 0 and c.invalidations == 1
+    assert c.get([0.0, 0.0, 0.05, 0.05], bm) is None
+
+
+# -------------------------------------------------------------- MicroBatcher
+@pytest.fixture(scope="module")
+def frontdoor():
+    ds = make_dataset("fs", n=800, seed=3)
+    index, clusters = _build_index(ds, g=5, levels=2)
+    snap = IndexSnapshot.build(index, ds)
+    wl = make_workload(ds, m=6, dist="MIX", seed=4)
+    return snap, clusters, wl
+
+
+def test_micro_batcher_rejects_bad_flush_at(frontdoor):
+    snap, clusters, _ = frontdoor
+    with pytest.raises(ValueError, match="flush_at"):
+        MicroBatcher(snap, max_leaves=clusters.k, flush_at=0)
+
+
+def test_micro_batcher_empty_and_double_flush(frontdoor):
+    """Flushing an empty queue is a free no-op (returns 0, no dispatch
+    counted), including immediately after a real flush drained it."""
+    snap, clusters, wl = frontdoor
+    mb = MicroBatcher(snap, max_leaves=clusters.k, flush_at=64,
+                      plan_cache=PlanCache())
+    assert mb.flush() == 0 and mb.flushes == 0
+    t = mb.submit(wl.rects[0], wl.kw_bitmap[0])
+    assert mb.flush() == 1 and mb.flushes == 1
+    assert mb.flush() == 0 and mb.flushes == 1  # double flush: drained
+    assert mb.result(t)["counts"] >= 0
+    assert mb.served == 1
+
+
+def test_micro_batcher_unknown_ticket_raises(frontdoor):
+    """A ticket that was never issued (or already popped) is a hard
+    KeyError -- results are single-consumption rows, not a cache."""
+    snap, clusters, wl = frontdoor
+    mb = MicroBatcher(snap, max_leaves=clusters.k, flush_at=64,
+                      plan_cache=PlanCache())
+    t = mb.submit(wl.rects[0], wl.kw_bitmap[0])
+    row = mb.result(t)  # implicit flush, then pop
+    assert "ids" in row
+    with pytest.raises(KeyError):
+        mb.result(t)  # already consumed
+    with pytest.raises(KeyError):
+        mb.result(10_000)  # never issued
+
+
+def test_micro_batcher_auto_flush_and_row_parity(frontdoor):
+    """flush_at triggers the dispatch on the Nth submit, and every ticket's
+    row matches the plain batched engine call row-for-row."""
+    snap, clusters, wl = frontdoor
+    mb = MicroBatcher(snap, max_leaves=clusters.k, flush_at=3,
+                      plan_cache=PlanCache())
+    tickets = []
+    for i in range(6):
+        tickets.append(mb.submit(wl.rects[i], wl.kw_bitmap[i]))
+        assert mb.pending == (i + 1) % 3  # drained on every 3rd submit
+    assert mb.flushes == 2 and mb.served == 6
+    ref = serve_batch(snap, wl.rects, wl.kw_bitmap, max_leaves=clusters.k,
+                      plan_cache=PlanCache())
+    for i, t in enumerate(tickets):
+        row = mb.result(t)
+        assert row["counts"] == ref["counts"][i]
+        np.testing.assert_array_equal(
+            np.sort(row["ids"][row["ids"] >= 0]),
+            np.sort(ref["ids"][i][ref["ids"][i] >= 0]),
+        )
+
+
+def test_micro_batcher_with_cache_marks_hot_rows(frontdoor):
+    """Behind a HotQueryCache a repeated probe comes back flagged
+    ``cached`` with the identical result row, and the second flush serves
+    only the misses."""
+    snap, clusters, wl = frontdoor
+    cache = HotQueryCache(maxsize=16)
+    mb = MicroBatcher(snap, max_leaves=clusters.k, flush_at=64, cache=cache,
+                      plan_cache=PlanCache())
+    t1 = mb.submit(wl.rects[0], wl.kw_bitmap[0])
+    mb.flush()
+    first = mb.result(t1)
+    assert not bool(first["cached"])
+    t2 = mb.submit(wl.rects[0], wl.kw_bitmap[0])  # hot re-issue
+    t3 = mb.submit(wl.rects[1], wl.kw_bitmap[1])
+    mb.flush()
+    hot, cold = mb.result(t2), mb.result(t3)
+    assert bool(hot["cached"]) and not bool(cold["cached"])
+    assert hot["counts"] == first["counts"]
+    np.testing.assert_array_equal(
+        hot["ids"][hot["ids"] >= 0], first["ids"][first["ids"] >= 0]
+    )
+    assert cache.hits == 1

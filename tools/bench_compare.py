@@ -47,6 +47,7 @@ MODULE_FILES = (
 DETERMINISTIC_KEYS = (
     "scanned", "checked", "verified", "overflow", "cost", "mismatches",
     "nodes", "sequential", "batched", "devices", "bytes", "cutoff", "wp",
+    "per_device_bytes", "replica_bytes", "shards",
 )
 
 
