@@ -9,8 +9,12 @@ Two row families (EXPERIMENTS.md section Roofline):
   quick config and converged frontier widths as bench_serving's quick A/Bs.
   The ``bytes=`` counters are exact ints diffed deterministically by
   tools/bench_compare.py; the legacy/narrow ratio row is the scoreboard
-  evidence for the >=2x descent-bytes reduction of DESIGN.md §3.5 (asserted
-  here so a regression fails the benchmark, not just the diff).
+  evidence for the >=2x descent-bytes reduction of DESIGN.md §3.5, and the
+  verify-compact row for the >=2x leaf-verify reduction of the leaf-local
+  vocabulary bank (both asserted here so a regression fails the benchmark,
+  not just the diff). ``leaf-vocab`` carries the per-leaf word-count
+  distribution (wl_max / wl_p50 / wl_p95 / overflow_leaves) the compact
+  pricing rests on.
 """
 from pathlib import Path
 
@@ -64,14 +68,49 @@ def _descent_rows(rows):
         "roofline/descent/bank", 0.0,
         f"bytes={bank} cutoff={ops.FUSED_VMEM_BANK_BYTES} auto={auto}"))
 
+    # leaf-local vocabulary bank (DESIGN.md §3.5): per-leaf word-count
+    # distribution + compact verify pricing on the auto-selected variant
+    from repro.serve.snapshot import LEAF_DICT_MAX
+
+    obm = np.asarray(snap.leaf_obj_bm)
+    shifts = np.arange(32, dtype=np.uint32)
+    vocab = (
+        (np.bitwise_or.reduce(obm, axis=1)[:, :, None] >> shifts) & 1
+    ).sum(axis=(1, 2)).astype(np.int64)
+    wl_leaf = np.maximum(-(-vocab // 32), 1)
+    overflow = int(np.sum(vocab > LEAF_DICT_MAX))
+    assert snap.has_compact_bank, "quick config must keep the compact bank"
+    Wl = snap.n_compact_words
+    rows.append(C.row(
+        "roofline/descent/leaf-vocab", 0.0,
+        f"wl={Wl} wl_max={int(wl_leaf.max())} "
+        f"wl_p50={int(np.percentile(wl_leaf, 50))} "
+        f"wl_p95={int(np.percentile(wl_leaf, 95))} "
+        f"overflow_leaves={overflow}"))
+    cbank = ops.compact_leaf_bank_bytes(K, OBJ, Wl)
+    cauto = "prefetch" if cbank > ops.FUSED_VMEM_BANK_BYTES else "vmem"
+    cvb = DB.verify_bytes(M, T, OBJ, W, K, cauto, compact_words=Wl)
+    rows.append(C.row(
+        "roofline/descent/verify-compact", 0.0,
+        f"bytes={cvb} ms={DB.modeled_ms(cvb):.4f} variant={cauto}"))
+    rows.append(C.row(
+        "roofline/descent/bank-compact", 0.0,
+        f"bytes={cbank} cutoff={ops.FUSED_VMEM_BANK_BYTES} auto={cauto}"))
+    vmem_vb = DB.verify_bytes(M, T, OBJ, W, K, "vmem")
+    assert vmem_vb >= 2 * cvb, (
+        f"modeled compact-verify reduction fell below 2x vs verify-vmem: "
+        f"{vmem_vb / max(cvb, 1):.2f}x"
+    )
+
     # end-to-end before/after: the seed path (f32 planes + unfused verify)
-    # vs the bandwidth-lean path (narrow planes + auto-selected fused verify)
+    # vs the shipping path (narrow planes + compact bank on the auto variant)
     before = DB.descent_bytes(
         M, widths, W, t=T, obj_per_leaf=OBJ, n_leaves=K,
         verify_variant="unfused")
     after = DB.descent_bytes(
         M, widths, W, narrow=True, packed_words=Wp, dict_sizes=dict_sizes,
-        t=T, obj_per_leaf=OBJ, n_leaves=K, verify_variant=auto)
+        t=T, obj_per_leaf=OBJ, n_leaves=K, verify_variant=cauto,
+        compact_words=Wl)
     cmp = DB.compare(before, after)
     rows.append(C.row(
         "roofline/descent/total-before", 0.0,

@@ -335,7 +335,10 @@ def run_quick():
     rows = _ab_prefetch(rows, snap, test, max_leaves=max_leaves)
     rows = _ab_quantized(rows, snap, test, max_leaves=max_leaves)
     rows, scale = _sweep_sharded(rows, snap, test, max_leaves=max_leaves)
-    if len(jax.devices()) > 1:
+    if 1 < len(jax.devices()) <= (os.cpu_count() or 1):
+        # forced host "devices" beyond the physical core count time-slice one
+        # CPU -- no real parallelism exists to assert on, so the scaling gate
+        # only arms when every device can own a core (the CI lane's runners)
         assert scale > 1.0, f"no aggregate throughput scaling: {scale:.2f}x"
     rows = _bytes_lane(rows, snap)
     n_shards = _index_shards_arg()

@@ -46,6 +46,18 @@ either side for A/B rows and the beyond-VMEM oracle sweeps.
 The keyword test in both kernels is one packed word-plane AND + a single
 ``any``-reduction over the word axis (popcount-style), matching
 skr_verify's restructured inner loop.
+
+Compact-bank twins (DESIGN.md §3.5): ``fused_verify_compact`` /
+``fused_verify_prefetch_compact`` verify against the leaf-local vocabulary
+slab (``(K, OBJ, Wl)`` with ``Wl << W``; serve/snapshot.py:
+``encode_leaf_vocab``). The query side arrives already remapped per
+selected leaf (``ops.remap_query_words``): ``q_cbm (M, T, Wl)`` holds each
+query's words over slot ``t``'s leaf-local bit ids and ``q_sig (M, T)``
+their OR-fold. The keyword test gains a one-word signature prefilter --
+``(obj_sig & q_sig) != 0`` AND the word-plane any-reduction -- which is
+implied by the word test (a real overlap always sets a shared signature
+bit), so outputs stay bit-identical to the full-width kernels while
+non-matching objects are decided on one word instead of ``Wl``.
 """
 from __future__ import annotations
 
@@ -209,3 +221,173 @@ def fused_verify_prefetch(
         ],
         interpret=interpret,
     )(safe, q_rects, q_bm, leaf_ok, obj_x, obj_y, obj_bm, obj_id)
+
+
+# ---------------------------------------------------- compact-bank twins
+def _fused_verify_compact_kernel(
+    q_rects_ref, q_cbm_ref, q_sig_ref, top_leaf_ref, leaf_ok_ref,
+    ox_ref, oy_ref, ocbm_ref, osig_ref, oid_ref, ids_ref, kwv_ref,
+):
+    qr = q_rects_ref[...]  # (BM, 4)
+    qc = q_cbm_ref[...]  # (BM, T, Wl) uint32 -- leaf-local query words
+    qs = q_sig_ref[...]  # (BM, T) uint32 -- OR-fold per (query, slot)
+    tl = top_leaf_ref[...]  # (BM, T) int32
+    ok = leaf_ok_ref[...] > 0  # (BM, T)
+    ox = ox_ref[...]  # (K, OBJ) -- VMEM-resident compact bank
+    oy = oy_ref[...]
+    ocbm = ocbm_ref[...]  # (K, OBJ, Wl)
+    osig = osig_ref[...]  # (K, OBJ)
+    oid = oid_ref[...]
+    K = ox.shape[0]
+    OBJ = ox.shape[1]
+    safe = jnp.clip(tl, 0, K - 1)
+    for t in range(tl.shape[1]):  # static unroll over selected leaf slots
+        leaf = safe[:, t]  # (BM,)
+        cx = ox[leaf]  # (BM, OBJ)
+        cy = oy[leaf]
+        cid = oid[leaf]
+        inr = (
+            (cx >= qr[:, 0:1])
+            & (cx <= qr[:, 2:3])
+            & (cy >= qr[:, 1:2])
+            & (cy <= qr[:, 3:4])
+        )  # (BM, OBJ)
+        # one-word signature prefilter, then the Wl-word any-reduction;
+        # the sig test is implied by the word test, so kw is unchanged
+        sig_hit = (osig[leaf] & qs[:, t][:, None]) != 0  # (BM, OBJ)
+        cbm = ocbm[leaf]  # (BM, OBJ, Wl)
+        kw = sig_hit & jnp.any((cbm & qc[:, t][:, None, :]) != 0, axis=-1)
+        valid = (cid >= 0) & ok[:, t][:, None]
+        match = inr & kw & valid
+        ids_ref[:, t * OBJ : (t + 1) * OBJ] = jnp.where(match, cid, -1)
+        kwv_ref[:, t] = jnp.sum(kw & valid, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def fused_verify_compact(
+    q_rects: jax.Array,  # (M, 4) f32
+    q_cbm: jax.Array,  # (M, T, Wl) u32 leaf-local remapped query words
+    q_sig: jax.Array,  # (M, T) u32 per-(query, slot) signature
+    top_leaf: jax.Array,  # (M, T) int32 selected leaf ids
+    leaf_ok: jax.Array,  # (M, T) int8 (1 = slot holds a selected leaf)
+    obj_x: jax.Array,  # (K, OBJ) f32 leaf object bank
+    obj_y: jax.Array,  # (K, OBJ) f32
+    obj_cbm: jax.Array,  # (K, OBJ, Wl) u32 compact bitmap slab
+    obj_sig: jax.Array,  # (K, OBJ) u32 OR-fold signatures
+    obj_id: jax.Array,  # (K, OBJ) int32, -1 pad
+    bm: int = 8,
+    interpret: bool = False,
+):
+    """Compact-bank twin of ``fused_verify``: identical (ids, kwv) outputs,
+    but the bitmap slab is ``Wl`` leaf-local words + a one-word signature
+    instead of ``W`` global words. Query rows pre-padded by ops.py."""
+    M, T = top_leaf.shape
+    K, OBJ = obj_x.shape
+    Wl = q_cbm.shape[2]
+    bm = min(bm, M)
+    grid = (pl.cdiv(M, bm),)
+    return pl.pallas_call(
+        _fused_verify_compact_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 4), lambda i: (i, 0)),
+            pl.BlockSpec((bm, T, Wl), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bm, T), lambda i: (i, 0)),
+            pl.BlockSpec((bm, T), lambda i: (i, 0)),
+            pl.BlockSpec((bm, T), lambda i: (i, 0)),
+            pl.BlockSpec((K, OBJ), lambda i: (0, 0)),
+            pl.BlockSpec((K, OBJ), lambda i: (0, 0)),
+            pl.BlockSpec((K, OBJ, Wl), lambda i: (0, 0, 0)),
+            pl.BlockSpec((K, OBJ), lambda i: (0, 0)),
+            pl.BlockSpec((K, OBJ), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, T * OBJ), lambda i: (i, 0)),
+            pl.BlockSpec((bm, T), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, T * OBJ), jnp.int32),
+            jax.ShapeDtypeStruct((M, T), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q_rects, q_cbm, q_sig, top_leaf, leaf_ok, obj_x, obj_y, obj_cbm,
+      obj_sig, obj_id)
+
+
+def _fused_prefetch_compact_kernel(
+    tl_ref,  # scalar-prefetch: (M, T) int32 clamped leaf ids
+    q_rects_ref, q_cbm_ref, q_sig_ref, leaf_ok_ref,
+    ox_ref, oy_ref, ocbm_ref, osig_ref, oid_ref,
+    ids_ref, kwv_ref,
+):
+    qr = q_rects_ref[...]  # (1, 4)
+    qc = q_cbm_ref[...]  # (1, 1, Wl) uint32
+    qs = q_sig_ref[...]  # (1, 1) uint32
+    ok = leaf_ok_ref[...] > 0  # (1, 1)
+    cx = ox_ref[...]  # (1, OBJ) -- the one DMA'd leaf row
+    cy = oy_ref[...]
+    cid = oid_ref[...]
+    inr = (
+        (cx >= qr[:, 0:1])
+        & (cx <= qr[:, 2:3])
+        & (cy >= qr[:, 1:2])
+        & (cy <= qr[:, 3:4])
+    )  # (1, OBJ)
+    sig_hit = (osig_ref[...] & qs) != 0  # (1, OBJ)
+    kw = sig_hit & jnp.any((ocbm_ref[...] & qc[:, 0][:, None, :]) != 0, axis=-1)
+    valid = (cid >= 0) & ok
+    match = inr & kw & valid
+    ids_ref[...] = jnp.where(match, cid, -1)
+    kwv_ref[...] = jnp.sum(kw & valid, axis=1, keepdims=True).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_verify_prefetch_compact(
+    q_rects: jax.Array,  # (M, 4) f32
+    q_cbm: jax.Array,  # (M, T, Wl) u32 leaf-local remapped query words
+    q_sig: jax.Array,  # (M, T) u32
+    top_leaf: jax.Array,  # (M, T) int32 selected leaf ids (dirty ids allowed)
+    leaf_ok: jax.Array,  # (M, T) int8
+    obj_x: jax.Array,  # (K, OBJ) f32 leaf object bank (HBM-resident)
+    obj_y: jax.Array,  # (K, OBJ) f32
+    obj_cbm: jax.Array,  # (K, OBJ, Wl) u32
+    obj_sig: jax.Array,  # (K, OBJ) u32
+    obj_id: jax.Array,  # (K, OBJ) int32, -1 pad
+    interpret: bool = False,
+):
+    """Compact-bank twin of ``fused_verify_prefetch``: one DMA per
+    (query, slot) block over the ``(M, T)`` grid, with the per-slot
+    remapped query words riding the same grid."""
+    M, T = top_leaf.shape
+    K, OBJ = obj_x.shape
+    Wl = q_cbm.shape[2]
+    safe = jnp.clip(top_leaf.astype(jnp.int32), 0, K - 1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(M, T),
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda i, t, tl: (i, 0)),
+            pl.BlockSpec((1, 1, Wl), lambda i, t, tl: (i, t, 0)),
+            pl.BlockSpec((1, 1), lambda i, t, tl: (i, t)),
+            pl.BlockSpec((1, 1), lambda i, t, tl: (i, t)),
+            pl.BlockSpec((1, OBJ), lambda i, t, tl: (tl[i, t], 0)),
+            pl.BlockSpec((1, OBJ), lambda i, t, tl: (tl[i, t], 0)),
+            pl.BlockSpec((1, OBJ, Wl), lambda i, t, tl: (tl[i, t], 0, 0)),
+            pl.BlockSpec((1, OBJ), lambda i, t, tl: (tl[i, t], 0)),
+            pl.BlockSpec((1, OBJ), lambda i, t, tl: (tl[i, t], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, OBJ), lambda i, t, tl: (i, t)),
+            pl.BlockSpec((1, 1), lambda i, t, tl: (i, t)),
+        ],
+    )
+    return pl.pallas_call(
+        _fused_prefetch_compact_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((M, T * OBJ), jnp.int32),
+            jax.ShapeDtypeStruct((M, T), jnp.int32),
+        ],
+        interpret=interpret,
+    )(safe, q_rects, q_cbm, q_sig, leaf_ok, obj_x, obj_y, obj_cbm,
+      obj_sig, obj_id)

@@ -16,10 +16,15 @@ import numpy as np
 
 from .cdf_mlp import cdf_mlp_bank
 from .frontier import frontier_filter, frontier_filter_narrow
-from .fused_verify import fused_verify, fused_verify_prefetch
+from .fused_verify import (
+    fused_verify,
+    fused_verify_compact,
+    fused_verify_prefetch,
+    fused_verify_prefetch_compact,
+)
 from .knn_filter import knn_filter, knn_filter_narrow
 from .skr_filter import skr_filter
-from .skr_verify import skr_verify
+from .skr_verify import skr_verify, skr_verify_compact
 from . import ref
 
 
@@ -44,6 +49,63 @@ def leaf_bank_bytes(n_leaves: int, obj_per_leaf: int, n_words: int) -> int:
     (K, OBJ, W) u32 bitmap slab) -- the quantity the engine compares against
     ``FUSED_VMEM_BANK_BYTES`` to pick the fused variant."""
     return int(n_leaves) * int(obj_per_leaf) * (3 * 4 + int(n_words) * 4)
+
+
+def compact_leaf_bank_bytes(
+    n_leaves: int, obj_per_leaf: int, n_compact_words: int
+) -> int:
+    """Bytes of the COMPACT fused-verify leaf bank (DESIGN.md §3.5): the
+    obj_x/y/id rows, the one-word u32 signature plane, and the (K, OBJ, Wl)
+    leaf-local bitmap slab. This -- not ``leaf_bank_bytes`` -- is what the
+    engine prices against ``FUSED_VMEM_BANK_BYTES`` when the snapshot
+    carries a compact bank, so far larger indexes stay on the VMEM
+    variant."""
+    return int(n_leaves) * int(obj_per_leaf) * (
+        3 * 4 + 4 + int(n_compact_words) * 4
+    )
+
+
+def remap_query_words(q_bm, leaf_terms, leaves):
+    """Remap query bitmaps into the selected leaves' local vocabularies.
+
+    For each (query, slot) pair, gathers the slot's leaf dictionary
+    (``leaf_terms[leaf]``: global term id per leaf-local bit, ``-1`` pad;
+    serve/snapshot.py:``encode_leaf_vocab``), pulls each dictionary entry's
+    bit out of the query's global bitmap, and re-packs them into ``Wl`` u32
+    words over leaf-local bit positions. A query term absent from the
+    leaf's dictionary contributes no local bit -- exactly the ISSUE's kill
+    semantics: no object in that leaf carries the term, so dropping it
+    cannot change any match (objects' term sets are subsets of the leaf
+    dictionary). Dirty/negative leaf ids are clamp-gathered like the fused
+    kernels; their slots are masked downstream by ``leaf_ok``.
+
+    Returns ``(q_cbm (M, T, Wl) u32, q_sig (M, T) u32)`` with ``q_sig`` the
+    OR-fold of the remapped words -- a per-(query, slot) kill flag
+    (``q_sig == 0`` means nothing in the leaf can match) and the query half
+    of the kernels' one-word signature prefilter. Traced (runs inside the
+    jitted descent after leaf selection).
+    """
+    q = jnp.asarray(q_bm, jnp.uint32)
+    M, W = q.shape
+    K, L = leaf_terms.shape
+    Wl = L // 32
+    safe = jnp.clip(jnp.asarray(leaves, jnp.int32), 0, K - 1)
+    T = safe.shape[1]
+    terms = leaf_terms[safe]  # (M, T, L) global term per local bit
+    tpos = jnp.clip(terms, 0, 32 * W - 1)
+    widx = (tpos >> 5).reshape(M, T * L)
+    qw = jnp.take_along_axis(q, widx, axis=1).reshape(M, T, L)
+    bits = (qw >> (tpos & 31).astype(jnp.uint32)) & jnp.uint32(1)
+    bits = jnp.where(terms >= 0, bits, jnp.uint32(0))  # pad bits are inert
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    # distinct powers of two per lane: the sum IS the bitwise OR (exact)
+    q_cbm = jnp.sum(
+        bits.reshape(M, T, Wl, 32) << shifts, axis=-1, dtype=jnp.uint32
+    )
+    q_sig = q_cbm[..., 0]
+    for w in range(1, Wl):  # static fold; Wl is a small power of two
+        q_sig = q_sig | q_cbm[..., w]
+    return q_cbm, q_sig
 
 
 def pack_query_words(q_bm, min_bucket: int = 4):
@@ -230,6 +292,33 @@ def verify_candidates(
     return out[:M, :C]
 
 
+def verify_candidates_compact(
+    q_rects, q_cbm, q_sig, cand_x, cand_y, cand_cbm, cand_sig, cand_valid,
+    bm: int = 8, interpret: Optional[bool] = None,
+) -> jax.Array:
+    """(M, T*OBJ) int8 verified-candidate matrix on the compact leaf
+    vocabulary (DESIGN.md §3.5). Candidates must be leaf-slot-major (T
+    slots of OBJ objects) because the remapped query words differ per slot;
+    the slot axis is the kernel grid, so no candidate-axis padding is
+    needed."""
+    if interpret is None:
+        interpret = _on_cpu()
+    M = cand_x.shape[0]
+    bm_ = min(bm, max(M, 1))
+    qr = _pad_dim(jnp.asarray(q_rects, jnp.float32), 0, bm_)
+    qc = _pad_dim(jnp.asarray(q_cbm, jnp.uint32), 0, bm_)
+    qs = _pad_dim(jnp.asarray(q_sig, jnp.uint32), 0, bm_)
+    cx = _pad_dim(jnp.asarray(cand_x, jnp.float32), 0, bm_)
+    cy = _pad_dim(jnp.asarray(cand_y, jnp.float32), 0, bm_)
+    cb = _pad_dim(jnp.asarray(cand_cbm, jnp.uint32), 0, bm_)
+    cs = _pad_dim(jnp.asarray(cand_sig, jnp.uint32), 0, bm_)
+    cv = _pad_dim(jnp.asarray(cand_valid, jnp.int8), 0, bm_)
+    out = skr_verify_compact(
+        qr, qc, qs, cx, cy, cb, cs, cv, bm=bm_, interpret=interpret
+    )
+    return out[:M]
+
+
 def fused_gather_verify(
     q_rects, q_bm, top_leaf, leaf_ok, obj_x, obj_y, obj_bm, obj_id,
     bm: int = 8, interpret: Optional[bool] = None, variant: str = "auto",
@@ -277,6 +366,53 @@ def fused_gather_verify(
     return ids[:M], kwv[:M]
 
 
+def fused_gather_verify_compact(
+    q_rects, q_cbm, q_sig, top_leaf, leaf_ok,
+    obj_x, obj_y, obj_cbm, obj_sig, obj_id,
+    bm: int = 8, interpret: Optional[bool] = None, variant: str = "auto",
+):
+    """Compact-bank sibling of ``fused_gather_verify`` (DESIGN.md §3.5).
+
+    Takes the per-slot remapped query words from ``remap_query_words``
+    instead of the global bitmap, and the snapshot's compact leaf bank
+    (``leaf_obj_cbm``/``leaf_obj_sig``). ``variant="auto"`` prices the
+    COMPACT bank bytes (``compact_leaf_bank_bytes``) against
+    ``FUSED_VMEM_BANK_BYTES`` -- the whole point of the compression is that
+    the VMEM variant survives to much larger indexes. Returns the same
+    ``(ids, kwv)`` contract, bit-identical to the full-width kernels.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    if variant not in ("auto", "vmem", "prefetch"):
+        raise ValueError(f"unknown fused-verify variant: {variant!r}")
+    if variant == "auto":
+        K, OBJ = obj_x.shape
+        Wl = obj_cbm.shape[2]
+        big = compact_leaf_bank_bytes(K, OBJ, Wl) > FUSED_VMEM_BANK_BYTES
+        variant = "prefetch" if big else "vmem"
+    M = q_rects.shape[0]
+    bm_ = min(bm, max(M, 1))
+    qr = _pad_dim(jnp.asarray(q_rects, jnp.float32), 0, bm_)
+    qc = _pad_dim(jnp.asarray(q_cbm, jnp.uint32), 0, bm_)
+    qs = _pad_dim(jnp.asarray(q_sig, jnp.uint32), 0, bm_)
+    tl = _pad_dim(jnp.asarray(top_leaf, jnp.int32), 0, bm_)
+    ok = _pad_dim(jnp.asarray(leaf_ok, jnp.int8), 0, bm_)
+    bank = (
+        jnp.asarray(obj_x, jnp.float32), jnp.asarray(obj_y, jnp.float32),
+        jnp.asarray(obj_cbm, jnp.uint32), jnp.asarray(obj_sig, jnp.uint32),
+        jnp.asarray(obj_id, jnp.int32),
+    )
+    if variant == "prefetch":
+        ids, kwv = fused_verify_prefetch_compact(
+            qr, qc, qs, tl, ok, *bank, interpret=interpret
+        )
+    else:
+        ids, kwv = fused_verify_compact(
+            qr, qc, qs, tl, ok, *bank, bm=bm_, interpret=interpret
+        )
+    return ids[:M], kwv[:M]
+
+
 def cdf_bank_forward(
     params: Dict[str, jax.Array], x: jax.Array, bn: int = 256, bb: int = 64,
     interpret: Optional[bool] = None,
@@ -296,15 +432,19 @@ def cdf_bank_forward(
 
 __all__ = [
     "FUSED_VMEM_BANK_BYTES",
+    "compact_leaf_bank_bytes",
     "filter_pairs",
     "filter_frontier",
     "filter_frontier_narrow",
     "fused_gather_verify",
+    "fused_gather_verify_compact",
     "knn_frontier_dist",
     "knn_frontier_dist_narrow",
     "leaf_bank_bytes",
     "pack_query_words",
+    "remap_query_words",
     "verify_candidates",
+    "verify_candidates_compact",
     "cdf_bank_forward",
     "ref",
 ]

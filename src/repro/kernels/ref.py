@@ -163,6 +163,75 @@ def fused_verify_ref(
     return ids, kwv
 
 
+def skr_verify_compact_ref(
+    q_rects: jax.Array,  # (M, 4) f32
+    q_cbm: jax.Array,  # (M, T, Wl) uint32 leaf-local remapped query words
+    q_sig: jax.Array,  # (M, T) uint32 per-(query, slot) signature
+    cand_x: jax.Array,  # (M, T*OBJ) f32, leaf-slot-major
+    cand_y: jax.Array,  # (M, T*OBJ) f32
+    cand_cbm: jax.Array,  # (M, T*OBJ, Wl) uint32 compact candidate bitmaps
+    cand_sig: jax.Array,  # (M, T*OBJ) uint32 candidate signatures
+    cand_valid: jax.Array,  # (M, T*OBJ) int8
+) -> jax.Array:
+    """Compact-vocabulary twin of ``skr_verify_ref`` (DESIGN.md §3.5).
+
+    The keyword test is the one-word signature prefilter AND the Wl-word
+    any-reduction against the slot's remapped query words. The signature
+    test is implied by the word test (an overlapping word always sets a
+    shared signature bit), so the match set -- and thus the verified id
+    set -- is identical to the full-width predicate.
+    """
+    M, T = q_sig.shape
+    OBJ = cand_x.shape[1] // T
+    inr = (
+        (cand_x >= q_rects[:, 0:1])
+        & (cand_x <= q_rects[:, 2:3])
+        & (cand_y >= q_rects[:, 1:2])
+        & (cand_y <= q_rects[:, 3:4])
+    )
+    qc = jnp.repeat(q_cbm, OBJ, axis=1)  # (M, T*OBJ, Wl)
+    qs = jnp.repeat(q_sig, OBJ, axis=1)  # (M, T*OBJ)
+    sig_hit = (cand_sig & qs) != 0
+    kw = sig_hit & jnp.any((cand_cbm & qc) != 0, axis=-1)
+    return (inr & kw & (cand_valid > 0)).astype(jnp.int8)
+
+
+def fused_verify_compact_ref(
+    q_rects: jax.Array,  # (M, 4) f32
+    q_cbm: jax.Array,  # (M, T, Wl) uint32 leaf-local remapped query words
+    q_sig: jax.Array,  # (M, T) uint32
+    top_leaf: jax.Array,  # (M, T) int32 selected leaf ids
+    leaf_ok: jax.Array,  # (M, T) int8
+    obj_x: jax.Array,  # (K, OBJ) f32 leaf object bank
+    obj_y: jax.Array,  # (K, OBJ) f32
+    obj_cbm: jax.Array,  # (K, OBJ, Wl) uint32 compact bitmap slab
+    obj_sig: jax.Array,  # (K, OBJ) uint32 OR-fold signatures
+    obj_id: jax.Array,  # (K, OBJ) int32, -1 pad
+):
+    """Compact-bank twin of ``fused_verify_ref``: gather the selected
+    leaves' compact blocks, then apply ``skr_verify_compact_ref``. Same
+    (ids, kwv) contract as the full-width reference."""
+    M, T = top_leaf.shape
+    K, OBJ = obj_x.shape
+    safe = jnp.clip(top_leaf, 0, K - 1)
+    cx = obj_x[safe].reshape(M, -1)  # (M, T*OBJ)
+    cy = obj_y[safe].reshape(M, -1)
+    ccbm = obj_cbm[safe].reshape(M, T * OBJ, -1)
+    csig = obj_sig[safe].reshape(M, -1)
+    cid = obj_id[safe].reshape(M, -1)
+    cval = (cid >= 0) & jnp.repeat(leaf_ok > 0, OBJ, axis=1)
+    match = skr_verify_compact_ref(
+        q_rects, q_cbm, q_sig, cx, cy, ccbm, csig, cval.astype(jnp.int8)
+    )
+    ids = jnp.where(match > 0, cid, -1)
+    sig_hit = (csig & jnp.repeat(q_sig, OBJ, axis=1)) != 0
+    kw = sig_hit & jnp.any(
+        (ccbm & jnp.repeat(q_cbm, OBJ, axis=1)) != 0, axis=-1
+    )
+    kwv = jnp.sum((kw & cval).reshape(M, T, OBJ), axis=2).astype(jnp.int32)
+    return ids, kwv
+
+
 def cdf_mlp_ref(params: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
     """Evaluate a bank of B CDF MLPs at N points.
 

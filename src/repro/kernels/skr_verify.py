@@ -67,3 +67,68 @@ def skr_verify(
         out_shape=jax.ShapeDtypeStruct((M, C), jnp.int8),
         interpret=interpret,
     )(q_rects, q_bm, cand_x, cand_y, cand_bm, cand_valid)
+
+
+def _verify_compact_kernel(
+    q_rects_ref, q_cbm_ref, q_sig_ref, cx_ref, cy_ref,
+    cbm_ref, csig_ref, cv_ref, out_ref,
+):
+    qr = q_rects_ref[...]  # (BM, 4)
+    cx = cx_ref[...]  # (BM, OBJ)
+    cy = cy_ref[...]
+    inr = (
+        (cx >= qr[:, 0:1])
+        & (cx <= qr[:, 2:3])
+        & (cy >= qr[:, 1:2])
+        & (cy <= qr[:, 3:4])
+    )
+    qc = q_cbm_ref[...]  # (BM, 1, Wl) -- this slot's remapped query words
+    qs = q_sig_ref[...]  # (BM, 1)
+    # one-word signature prefilter (implied by the word test -- kw unchanged)
+    sig_hit = (csig_ref[...] & qs) != 0  # (BM, OBJ)
+    kw = sig_hit & jnp.any((cbm_ref[...] & qc) != 0, axis=-1)  # (BM, OBJ)
+    out_ref[...] = (inr & kw & (cv_ref[...] > 0)).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def skr_verify_compact(
+    q_rects: jax.Array,  # (M, 4)
+    q_cbm: jax.Array,  # (M, T, Wl) leaf-local remapped query words
+    q_sig: jax.Array,  # (M, T) per-(query, slot) OR-fold signature
+    cand_x: jax.Array,  # (M, T*OBJ) leaf-slot-major gathered candidates
+    cand_y: jax.Array,  # (M, T*OBJ)
+    cand_cbm: jax.Array,  # (M, T*OBJ, Wl) compact candidate bitmaps
+    cand_sig: jax.Array,  # (M, T*OBJ) candidate signatures
+    cand_valid: jax.Array,  # (M, T*OBJ) int8
+    bm: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Compact-vocabulary twin of ``skr_verify`` (DESIGN.md §3.5).
+
+    Candidates arrive leaf-slot-major (T slots of OBJ objects each, the
+    fused kernels' ordering) because the query-side words differ PER SLOT:
+    each selected leaf has its own vocabulary, so the candidate grid tiles
+    over slots -- block ``(BM, OBJ)`` at slot ``j`` pairs with query words
+    ``q_cbm[:, j]`` -- instead of skr_verify's flat candidate axis."""
+    M, T = q_sig.shape
+    Wl = q_cbm.shape[2]
+    OBJ = cand_x.shape[1] // T
+    bm = min(bm, M)
+    grid = (pl.cdiv(M, bm), T)
+    return pl.pallas_call(
+        _verify_compact_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 4), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, 1, Wl), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, OBJ), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, OBJ), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, OBJ, Wl), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bm, OBJ), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, OBJ), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, OBJ), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, T * OBJ), jnp.int8),
+        interpret=interpret,
+    )(q_rects, q_cbm, q_sig, cand_x, cand_y, cand_cbm, cand_sig, cand_valid)

@@ -69,6 +69,7 @@ from ..serve.engine import (
     _local_root_frontier,
     _select_leaves_frontier,
     _select_leaves_indexed,
+    _snap_cbank,
     _verify_leaves,
     retrieve,
     retrieve_knn,
@@ -97,6 +98,7 @@ def serve_batch(
     plan_cache: Optional[PlanCache] = None,
     delta: Optional[DeltaBuffer] = None,
     fused: Optional[bool] = None,
+    compact: Optional[bool] = None,
 ):
     """Bucketed front door for the batched SKR engine (host-side wrapper).
 
@@ -110,9 +112,13 @@ def serve_batch(
         plan_cache: frontier width state (None: per-snapshot default).
         delta: optional ``DeltaBuffer`` of buffered inserts/deletes merged
             on the fly (DESIGN.md §7).
-        fused: leaf verification path -- None (default) auto-selects the
-            fused gather+verify kernel when no delta is live; True/False
-            force it (DESIGN.md §3.5).
+        fused: leaf verification path -- None (default) runs the fused
+            gather+verify kernel on the base leaf blocks even with a live
+            delta (only the insert-buffer slots take the unfused merge);
+            False forces the wholesale unfused baseline (DESIGN.md §3.5).
+        compact: leaf verification width -- None (default) verifies on the
+            leaf-local compact vocabulary bank when the snapshot carries
+            one; False forces the global full-width slab (DESIGN.md §3.5).
 
     Pads the batch to its power-of-two bucket with inert pad queries, runs
     the jit-traced ``retrieve`` descent, and slices the pads back off the
@@ -123,7 +129,7 @@ def serve_batch(
     rects, bms, m = pad_queries_to_bucket(q_rects, q_bm, minimum_bucket)
     out = retrieve(
         snap, jnp.asarray(rects), jnp.asarray(bms), max_leaves, mode=mode,
-        plan_cache=plan_cache, delta=delta, fused=fused,
+        plan_cache=plan_cache, delta=delta, fused=fused, compact=compact,
     )
     per_query = ("ids", "counts", "nodes_checked", "nodes_scanned", "verified", "overflow")
     return {k: (v[:m] if k in per_query else v) for k, v in out.items()}
@@ -138,6 +144,7 @@ def serve_knn_batch(
     plan_cache: Optional[PlanCache] = None,
     delta: Optional[DeltaBuffer] = None,
     knn_dtype: str = "f32",
+    compact: Optional[bool] = None,
 ):
     """Bucketed front door for batched Boolean kNN: pad -> retrieve -> slice.
 
@@ -154,6 +161,8 @@ def serve_knn_batch(
         knn_dtype: ``"f32"`` (exact) or ``"bf16"`` -- reduced-precision
             bounded-sweep pruning with a conservative exact-f32 retry; ids
             are always identical to f32 (see ``retrieve_knn``).
+        compact: leaf keyword-test width -- None (default) uses the compact
+            leaf bank when available; False forces full width (§3.5).
 
     Returns ``retrieve_knn``'s dict: ``ids``/``dist2`` (m, k) ascending by
     (dist^2, id) with ``-1`` fill, plus Eq.1 counters, pads sliced off.
@@ -162,7 +171,7 @@ def serve_knn_batch(
     pts, bms, m = pad_knn_queries_to_bucket(points, q_bm, minimum_bucket)
     out = retrieve_knn(
         snap, jnp.asarray(pts), jnp.asarray(bms), k, plan_cache=plan_cache,
-        delta=delta, knn_dtype=knn_dtype,
+        delta=delta, knn_dtype=knn_dtype, compact=compact,
     )
     per_query = ("ids", "dist2", "nodes_checked", "verified", "leaves_verified", "pruned")
     return {key: (v[:m] if key in per_query else v) for key, v in out.items()}
@@ -418,13 +427,16 @@ def _pmax_needs(needs, dp):
     return jax.lax.pmax(arr, dp) if dp else arr
 
 
-def _skr_shard_body(snap, delta, q_rects, q_bm, wids, bits, *, widths, take, dp, narrow):
+def _skr_shard_body(
+    snap, delta, q_rects, q_bm, wids, bits, *, widths, take, dp, narrow, compact,
+):
     """Per-shard SKR serving: the real frontier descent on the local query
     shard against the replicated snapshot (and replicated delta, when one
     is live; no cross-shard collectives except the width-maxima pmax).
     ``narrow`` (static) routes the descent through the bandwidth-lean planes
     using the pre-sharded packed query words (``wids``/``bits`` -- packed
-    before ``shard_map`` so every shard agrees on the static Wp)."""
+    before ``shard_map`` so every shard agrees on the static Wp).
+    ``compact`` (static) controls the leaf-local compact verify bank."""
     plan = ExecutionPlan(tag="skr", widths=widths)
     frontier, surv, nodes_checked, _, needs = _descend_frontier(
         snap, q_rects, q_bm, plan, delta, (wids, bits) if narrow else None
@@ -432,15 +444,22 @@ def _skr_shard_body(snap, delta, q_rects, q_bm, wids, bits, *, widths, take, dp,
     top_leaf, leaf_ok, overflow = _select_leaves_frontier(
         frontier, surv, take, snap.n_leaves
     )
-    ids, counts, kw_scanned = _verify_leaves(snap, q_rects, q_bm, top_leaf, leaf_ok, delta)
+    ids, counts, kw_scanned = _verify_leaves(
+        snap, q_rects, q_bm, top_leaf, leaf_ok, delta, compact=compact
+    )
     return ids, counts, nodes_checked, kw_scanned, overflow, _pmax_needs(needs, dp)
 
 
-@functools.partial(jax.jit, static_argnames=("mesh", "widths", "take", "narrow"))
-def _skr_sharded_exec(snap, delta, q_rects, q_bm, wids, bits, mesh, widths, take, narrow):
+@functools.partial(
+    jax.jit, static_argnames=("mesh", "widths", "take", "narrow", "compact")
+)
+def _skr_sharded_exec(
+    snap, delta, q_rects, q_bm, wids, bits, mesh, widths, take, narrow, compact,
+):
     dp = dp_axes(mesh)
     body = functools.partial(
-        _skr_shard_body, widths=widths, take=take, dp=dp, narrow=narrow
+        _skr_shard_body, widths=widths, take=take, dp=dp, narrow=narrow,
+        compact=compact,
     )
     fn = shard_map(
         body,
@@ -464,6 +483,7 @@ def serve_sharded(
     plan_cache: Optional[PlanCache] = None,
     minimum_bucket: int = 8,
     delta: Optional[DeltaBuffer] = None,
+    compact: Optional[bool] = None,
 ) -> Dict[str, np.ndarray]:
     """Data-parallel SKR serving of the real hierarchical engine.
 
@@ -476,6 +496,8 @@ def serve_sharded(
         minimum_bucket: smallest per-shard power-of-two batch bucket.
         delta: optional ``DeltaBuffer`` of buffered updates, replicated like
             the snapshot and merged per shard (DESIGN.md §7).
+        compact: leaf verification width -- None (default) auto-uses the
+            compact leaf bank; False forces full width (DESIGN.md §3.5).
 
     Pads the batch to ``n_shards`` equal power-of-two buckets, replicates the
     snapshot, shard_maps the frontier descent over the mesh's data axes, and
@@ -501,7 +523,8 @@ def serve_sharded(
         leaf_width = widths[-1] if widths else snap.root_width()
         take = min(max_leaves, snap.n_leaves, leaf_width)
         return _skr_sharded_exec(
-            snap_r, delta_r, rects, bms, wids, bits, mesh, widths, take, narrow
+            snap_r, delta_r, rects, bms, wids, bits, mesh, widths, take, narrow,
+            compact,
         )
 
     widths, out = _converge_widths(snap, cache, "skr", run)
@@ -518,14 +541,18 @@ def serve_sharded(
     )
 
 
-def _knn_shard_body(snap, delta, points, q_bm, wids, bits, *, widths, k, kb, dp, narrow):
+def _knn_shard_body(
+    snap, delta, points, q_bm, wids, bits, *, widths, k, kb, dp, narrow, compact,
+):
     """Per-shard Boolean kNN: the real distance-bounded descent on the local
     query shard against the replicated snapshot (and replicated delta).
     ``narrow`` (static) routes the level filters through the bandwidth-lean
-    planes with the pre-sharded packed query words."""
+    planes with the pre-sharded packed query words; ``compact`` (static)
+    controls the compact leaf keyword-test bank."""
     plan = ExecutionPlan(tag="knn", widths=widths)
     result, needs = _descend_knn(
-        snap, points, q_bm, k, kb, plan, delta, (wids, bits) if narrow else None
+        snap, points, q_bm, k, kb, plan, delta, (wids, bits) if narrow else None,
+        cbank=_snap_cbank(snap, compact),
     )
     top_d, top_id, nodes_checked, verified, leaves_verified, pruned, _, _ = result
     fin = jnp.isfinite(top_d[:, :k])
@@ -536,11 +563,16 @@ def _knn_shard_body(snap, delta, points, q_bm, wids, bits, *, widths, k, kb, dp,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("mesh", "widths", "k", "kb", "narrow"))
-def _knn_sharded_exec(snap, delta, points, q_bm, wids, bits, mesh, widths, k, kb, narrow):
+@functools.partial(
+    jax.jit, static_argnames=("mesh", "widths", "k", "kb", "narrow", "compact")
+)
+def _knn_sharded_exec(
+    snap, delta, points, q_bm, wids, bits, mesh, widths, k, kb, narrow, compact,
+):
     dp = dp_axes(mesh)
     body = functools.partial(
-        _knn_shard_body, widths=widths, k=k, kb=kb, dp=dp, narrow=narrow
+        _knn_shard_body, widths=widths, k=k, kb=kb, dp=dp, narrow=narrow,
+        compact=compact,
     )
     fn = shard_map(
         body,
@@ -565,6 +597,7 @@ def serve_knn_sharded(
     minimum_bucket: int = 8,
     min_topk_bucket: int = 8,
     delta: Optional[DeltaBuffer] = None,
+    compact: Optional[bool] = None,
 ) -> Dict[str, np.ndarray]:
     """Data-parallel Boolean kNN serving of the real bounded descent.
 
@@ -585,7 +618,7 @@ def serve_knn_sharded(
     Identical ids/dist2/counters to ``retrieve_knn``.
     """
     if k <= 0:  # delegate: one source of truth for the degenerate shape
-        return retrieve_knn(snap, points, q_bm, k, delta=delta)
+        return retrieve_knn(snap, points, q_bm, k, delta=delta, compact=compact)
     mesh = mesh if mesh is not None else default_serving_mesh()
     cache = plan_cache if plan_cache is not None else default_plan_cache(snap)
     pts, bms, m = pad_knn_queries_to_bucket(
@@ -601,7 +634,8 @@ def serve_knn_sharded(
     widths, out = _converge_widths(
         snap, cache, "knn",
         lambda widths: _knn_sharded_exec(
-            snap_r, delta_r, pts, bms, wids, bits, mesh, widths, k, kb, narrow
+            snap_r, delta_r, pts, bms, wids, bits, mesh, widths, k, kb, narrow,
+            compact,
         ),
     )
     ids, dist2, nodes_checked, verified, leaves_verified, pruned, _ = out
@@ -688,7 +722,7 @@ def _converge_widths_indexed(cache: PlanCache, tag: str, n_shards: int, n_links:
 
 def _ix_skr_body(
     psnap, delta, q_rects, q_bm, wids, bits,
-    *, widths, take_g, take_loc, n_shards, dp, narrow,
+    *, widths, take_g, take_loc, n_shards, dp, narrow, compact,
 ):
     """Per-(query shard, index shard) SKR body: the unchanged engine descent
     on this device's sub-hierarchy from its masked local root frontier, then
@@ -710,7 +744,7 @@ def _ix_skr_body(
         frontier, surv, psnap.leaf_gid, take_g, take_loc, n_shards, "index"
     )
     ids, counts, kw_scanned = _verify_leaves(
-        snap, q_rects, q_bm, top_leaf, leaf_ok, delta
+        snap, q_rects, q_bm, top_leaf, leaf_ok, delta, compact=compact
     )
     counts = jax.lax.psum(counts, "index")
     nodes_checked = jax.lax.psum(nodes_checked, "index")
@@ -720,16 +754,19 @@ def _ix_skr_body(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("mesh", "widths", "take_g", "take_loc", "n_shards", "narrow")
+    jax.jit,
+    static_argnames=(
+        "mesh", "widths", "take_g", "take_loc", "n_shards", "narrow", "compact",
+    ),
 )
 def _ix_skr_exec(
     psnap, delta, q_rects, q_bm, wids, bits, mesh, widths, take_g, take_loc,
-    n_shards, narrow,
+    n_shards, narrow, compact,
 ):
     dp = dp_axes(mesh)
     body = functools.partial(
         _ix_skr_body, widths=widths, take_g=take_g, take_loc=take_loc,
-        n_shards=n_shards, dp=dp, narrow=narrow,
+        n_shards=n_shards, dp=dp, narrow=narrow, compact=compact,
     )
     fn = shard_map(
         body,
@@ -756,6 +793,7 @@ def serve_index_sharded(
     plan_cache: Optional[PlanCache] = None,
     minimum_bucket: int = 8,
     delta: Optional[DeltaBuffer] = None,
+    compact: Optional[bool] = None,
 ) -> Dict[str, np.ndarray]:
     """Index-parallel SKR serving: the hierarchy itself sharded (§3.4).
 
@@ -806,7 +844,7 @@ def serve_index_sharded(
         take_loc = min(take_g, leaf_width)
         return _ix_skr_exec(
             psnap_s, delta_s, rects, bms, wids, bits, mesh, widths,
-            take_g, take_loc, S, narrow,
+            take_g, take_loc, S, narrow, compact,
         )
 
     widths, out = _converge_widths_indexed(cache, "skr_ix", S, n_links, run)
@@ -824,7 +862,8 @@ def serve_index_sharded(
 
 
 def _ix_knn_body(
-    psnap, delta, points, q_bm, wids, bits, *, widths, k, kb, n_shards, dp, narrow,
+    psnap, delta, points, q_bm, wids, bits,
+    *, widths, k, kb, n_shards, dp, narrow, compact,
 ):
     """Per-(query shard, index shard) kNN body: ``_descend_knn_indexed``
     (canonical-probe election, shard-local bounded sweep, global-rank leaf
@@ -837,6 +876,7 @@ def _ix_knn_body(
     result, needs = _descend_knn_indexed(
         snap, psnap.root_gid, psnap.leaf_gid, n_root_local, points, q_bm,
         k, kb, plan, n_shards, "index", delta, (wids, bits) if narrow else None,
+        cbank=_snap_cbank(snap, compact),
     )
     top_d, top_id, nodes_checked, verified, leaves_verified, pruned, _ = result
     nodes_checked = jax.lax.psum(nodes_checked, "index")
@@ -853,13 +893,17 @@ def _ix_knn_body(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("mesh", "widths", "k", "kb", "n_shards", "narrow")
+    jax.jit,
+    static_argnames=("mesh", "widths", "k", "kb", "n_shards", "narrow", "compact"),
 )
-def _ix_knn_exec(psnap, delta, points, q_bm, wids, bits, mesh, widths, k, kb, n_shards, narrow):
+def _ix_knn_exec(
+    psnap, delta, points, q_bm, wids, bits, mesh, widths, k, kb, n_shards,
+    narrow, compact,
+):
     dp = dp_axes(mesh)
     body = functools.partial(
         _ix_knn_body, widths=widths, k=k, kb=kb, n_shards=n_shards, dp=dp,
-        narrow=narrow,
+        narrow=narrow, compact=compact,
     )
     fn = shard_map(
         body,
@@ -886,6 +930,7 @@ def serve_knn_index_sharded(
     minimum_bucket: int = 8,
     min_topk_bucket: int = 8,
     delta: Optional[DeltaBuffer] = None,
+    compact: Optional[bool] = None,
 ) -> Dict[str, np.ndarray]:
     """Index-parallel Boolean kNN serving: the hierarchy itself sharded.
 
@@ -927,7 +972,8 @@ def serve_knn_index_sharded(
     widths, out = _converge_widths_indexed(
         cache, "knn_ix", S, n_links,
         lambda widths: _ix_knn_exec(
-            psnap_s, delta_s, pts, bms, wids, bits, mesh, widths, k, kb, S, narrow
+            psnap_s, delta_s, pts, bms, wids, bits, mesh, widths, k, kb, S,
+            narrow, compact,
         ),
     )
     ids, dist2, nodes_checked, verified, leaves_verified, pruned, _ = out

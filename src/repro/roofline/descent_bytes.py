@@ -31,6 +31,15 @@ Leaf verify over M queries x T selected leaves of OBJ padded objects
   (the ids/kwv output writes are identical across all three variants and
   excluded from the verify term)
 
+Compact leaf-vocabulary verify (``compact_words=Wl`` > 0, DESIGN.md §3.5):
+the per-object word plane shrinks from the global W words to the leaf-local
+Wl words plus the one-word OR-fold signature, so every variant's per-object
+term becomes 12 + 4 + 4*Wl. The remap of each query's packed word plane
+into leaf-local ids adds, once per (query, selected leaf):
+  remap     M*T*(32*Wl*4 + (Wl+1)*4)  the leaf's term dictionary row
+                                 (32*Wl i32) read in, the remapped plane
+                                 (Wl words) + signature (1 word) written out
+
 Modeled milliseconds divide by the roofline's ``HBM_BW`` (analysis.py); the
 ratio rows (legacy/narrow) are what the ISSUE's >=2x target is scored on.
 All byte counts are exact ints -- keep them that way (scoreboard diffs).
@@ -46,6 +55,7 @@ _MBR_F32 = 4 * 4  # four f32 coordinates
 _MBR_I16 = 4 * 2  # four int16 rank codes
 _WORD = 4  # one uint32 bitmap word
 _OBJ_FIXED = 3 * 4  # x, y (f32) + id (i32) per leaf object
+_SIG = 4  # one uint32 OR-fold signature per leaf object (compact bank)
 
 
 def filter_level_bytes(
@@ -75,6 +85,15 @@ def filter_level_bytes(
     return m * width * per_slot + m * (16 + q_words * _WORD) + m * width + extra
 
 
+def remap_bytes(m: int, t: int, compact_words: int) -> int:
+    """Bytes the leaf-local query remap moves for ``m`` queries x ``t`` slots.
+
+    Per (query, selected leaf): the leaf's term-dictionary row (32*Wl i32)
+    is read and the remapped word plane (Wl u32) plus the one-word signature
+    are written (ops.remap_query_words)."""
+    return m * t * (32 * compact_words * 4 + (compact_words + 1) * _WORD)
+
+
 def verify_bytes(
     m: int,
     t: int,
@@ -83,20 +102,28 @@ def verify_bytes(
     n_leaves: int,
     variant: str,
     bm: int = 8,
+    compact_words: int = 0,
 ) -> int:
     """Bytes the leaf verify stage moves for ``m`` queries x ``t`` slots.
 
     ``variant`` is one of ``unfused`` / ``vmem`` / ``prefetch`` (the engine's
     three hot-path variants, DESIGN.md §3.5); ``bm`` is the query block of
-    the VMEM-fused kernel."""
-    per_obj = _OBJ_FIXED + n_words * _WORD
+    the VMEM-fused kernel. ``compact_words`` > 0 prices the leaf-local
+    vocabulary bank instead: Wl-word object planes plus the one-word
+    signature, with the per-(query, slot) remap term added on top."""
+    if compact_words > 0:
+        per_obj = _OBJ_FIXED + _SIG + compact_words * _WORD
+        extra = remap_bytes(m, t, compact_words)
+    else:
+        per_obj = _OBJ_FIXED + n_words * _WORD
+        extra = 0
     if variant == "unfused":
-        return 3 * m * t * obj_per_leaf * per_obj
+        return 3 * m * t * obj_per_leaf * per_obj + extra
     if variant == "vmem":
         blocks = -(-m // bm)
-        return blocks * n_leaves * obj_per_leaf * per_obj
+        return blocks * n_leaves * obj_per_leaf * per_obj + extra
     if variant == "prefetch":
-        return m * t * obj_per_leaf * per_obj
+        return m * t * obj_per_leaf * per_obj + extra
     raise ValueError(f"unknown verify variant {variant!r}")
 
 
@@ -137,12 +164,14 @@ def descent_bytes(
     n_leaves: int = 0,
     verify_variant: str = "prefetch",
     bm: int = 8,
+    compact_words: int = 0,
 ) -> DescentBytes:
     """Price a whole descent: per-level filter widths + one verify variant.
 
     ``widths`` are the converged padded frontier widths (engine output
     ``frontier_widths``), root first; ``dict_sizes`` parallels them when
-    ``narrow``. ``t=0`` prices a filter-only descent (verify term 0)."""
+    ``narrow``. ``t=0`` prices a filter-only descent (verify term 0);
+    ``compact_words`` > 0 prices the leaf-local compact verify bank."""
     dsz = list(dict_sizes) or [(0, 0)] * len(widths)
     per_level = tuple(
         filter_level_bytes(
@@ -153,7 +182,8 @@ def descent_bytes(
     )
     vb = 0
     if t > 0:
-        vb = verify_bytes(m, t, obj_per_leaf, n_words, n_leaves, verify_variant, bm)
+        vb = verify_bytes(m, t, obj_per_leaf, n_words, n_leaves, verify_variant,
+                          bm, compact_words=compact_words)
     return DescentBytes(sum(per_level), vb, per_level)
 
 

@@ -70,7 +70,13 @@ class DeltaBuffer:
     * ``ins_bm`` -- ``(K, B, W)`` u32 buffered insert keyword bitmaps;
     * ``ins_id`` -- ``(K, B)`` i32 buffered insert object ids, ``-1`` =
       empty slot (also how a buffered object is deleted);
-    * ``base_alive`` -- ``(K, OBJ)`` i8, ``0`` = snapshot object deleted.
+    * ``base_alive`` -- ``(K, OBJ)`` i8, ``0`` = snapshot object deleted;
+    * ``ins_cbm``/``ins_sig`` -- optional ``(K, B, Wl)`` / ``(K, B)`` u32,
+      each buffered insert's bitmap remapped into its leaf's compact
+      vocabulary plus the OR-fold signature (DESIGN.md §3.5). Present only
+      while every buffered term stayed inside its leaf's dictionary
+      (``DeltaLog`` drops them -- one retrace -- the moment one does not;
+      the executors then verify delta slots on the full-width ``ins_bm``).
 
     All array fields are pytree leaves; ``slots_per_leaf`` is static aux
     (a compiled-shape parameter). Registered as a pytree so a buffer is ONE
@@ -86,6 +92,8 @@ class DeltaBuffer:
     ins_id: jnp.ndarray
     base_alive: jnp.ndarray
     slots_per_leaf: int
+    ins_cbm: jnp.ndarray = None  # (K, B, Wl) u32 leaf-local remapped bitmaps
+    ins_sig: jnp.ndarray = None  # (K, B) u32 OR-fold signatures
 
     @property
     def n_levels(self) -> int:
@@ -117,6 +125,10 @@ class DeltaBuffer:
         K = snap.n_leaves
         W = snap.n_words
         B = int(slots_per_leaf)
+        cbm = sig = None
+        if snap.has_compact_bank:
+            cbm = jnp.zeros((K, B, snap.n_compact_words), jnp.uint32)
+            sig = jnp.zeros((K, B), jnp.uint32)
         return DeltaBuffer(
             aug_mbrs=list(snap.level_mbrs),
             aug_bms=list(snap.level_bms),
@@ -126,6 +138,8 @@ class DeltaBuffer:
             ins_id=jnp.full((K, B), -1, jnp.int32),
             base_alive=jnp.ones((K, snap.obj_per_leaf), jnp.int8),
             slots_per_leaf=B,
+            ins_cbm=cbm,
+            ins_sig=sig,
         )
 
     def grown(self, new_slots: int) -> "DeltaBuffer":
@@ -135,6 +149,10 @@ class DeltaBuffer:
         if new_slots <= self.slots_per_leaf:
             return self
         pad = new_slots - self.slots_per_leaf
+        cbm, sig = self.ins_cbm, self.ins_sig
+        if cbm is not None:
+            cbm = jnp.pad(cbm, ((0, 0), (0, pad), (0, 0)))
+            sig = jnp.pad(sig, ((0, 0), (0, pad)))
         return dataclasses.replace(
             self,
             ins_x=jnp.pad(self.ins_x, ((0, 0), (0, pad))),
@@ -142,6 +160,8 @@ class DeltaBuffer:
             ins_bm=jnp.pad(self.ins_bm, ((0, 0), (0, pad), (0, 0))),
             ins_id=jnp.pad(self.ins_id, ((0, 0), (0, pad)), constant_values=-1),
             slots_per_leaf=new_slots,
+            ins_cbm=cbm,
+            ins_sig=sig,
         )
 
 
@@ -153,6 +173,8 @@ _DELTA_ARRAY_FIELDS = (
     "ins_bm",
     "ins_id",
     "base_alive",
+    "ins_cbm",
+    "ins_sig",
 )
 
 
@@ -200,6 +222,14 @@ def partition_delta(delta: DeltaBuffer, part) -> DeltaBuffer:
         aug_bms.append(jnp.asarray(
             _stack_shard_rows(bm, part.nodes[li], part.level_pads[li], 0)
         ))
+    cbm = sig = None
+    if delta.ins_cbm is not None:
+        cbm = jnp.asarray(
+            _stack_shard_rows(np.asarray(delta.ins_cbm), leaf_ids, Kp, 0)
+        )
+        sig = jnp.asarray(
+            _stack_shard_rows(np.asarray(delta.ins_sig), leaf_ids, Kp, 0)
+        )
     return DeltaBuffer(
         aug_mbrs=aug_mbrs,
         aug_bms=aug_bms,
@@ -211,7 +241,29 @@ def partition_delta(delta: DeltaBuffer, part) -> DeltaBuffer:
             _stack_shard_rows(np.asarray(delta.base_alive), leaf_ids, Kp, 1)
         ),
         slots_per_leaf=delta.slots_per_leaf,
+        ins_cbm=cbm,
+        ins_sig=sig,
     )
+
+
+def _remap_insert_bitmap(bm: np.ndarray, terms: np.ndarray):
+    """Remap one full-width insert bitmap into a leaf's compact vocabulary.
+
+    ``bm``: (W,) u32; ``terms``: (32*Wl,) i32 sorted leaf dictionary,
+    ``-1``-padded. Returns ``(cbm (Wl,), sig, exact)`` where ``exact`` is
+    False when the object carries a term missing from the dictionary -- the
+    remap would silently drop it, so the caller must fall back to the
+    full-width path.
+    """
+    shifts = np.arange(32, dtype=np.uint32)
+    Wl = terms.size // 32
+    tpos = np.clip(terms, 0, bm.size * 32 - 1)
+    bits = (bm[tpos >> 5] >> (tpos & 31).astype(np.uint32)) & np.uint32(1)
+    bits = np.where(terms >= 0, bits, np.uint32(0))
+    cbm = np.bitwise_or.reduce(bits.reshape(Wl, 32) << shifts, axis=-1)
+    sig = np.bitwise_or.reduce(cbm)
+    n_terms = int(np.sum(((bm[:, None] >> shifts) & 1)))
+    return cbm, sig, int(bits.sum()) == n_terms
 
 
 def parent_chains(index: WiskIndex) -> List[np.ndarray]:
@@ -255,6 +307,12 @@ class DeltaLog:
         self.buffer: DeltaBuffer = DeltaBuffer.empty(snapshot, slots_per_leaf)
         self._parents = parent_chains(index)
         self._leaf_mbrs = np.asarray(index.levels[-1].mbrs, np.float32)
+        # sticky compact-remap flag: flips False (once; one retrace) when a
+        # buffered insert carries a term outside its leaf's dictionary
+        self.compact_ok = snapshot.has_compact_bank
+        self._leaf_terms = (
+            np.asarray(snapshot.leaf_terms) if self.compact_ok else None
+        )
         # host mirrors of the augmented arrays (updates are host unions; the
         # level arrays are tiny next to the object blocks, so re-uploading a
         # touched level per update batch is cheap and keeps the math simple)
@@ -324,6 +382,28 @@ class DeltaLog:
             ins_bm=buf.ins_bm.at[(leaf, slots)].set(jnp.asarray(bms)),
             ins_id=buf.ins_id.at[(leaf, slots)].set(jnp.asarray(ids, jnp.int32)),
         )
+        if self.compact_ok:
+            Wl = buf.ins_cbm.shape[2]
+            cbms = np.zeros((n, Wl), np.uint32)
+            sigs = np.zeros((n,), np.uint32)
+            exact = True
+            for i in range(n):
+                cbms[i], sigs[i], ok = _remap_insert_bitmap(
+                    np.asarray(bms[i], np.uint32), self._leaf_terms[int(leaf[i])]
+                )
+                exact = exact and ok
+            if exact:
+                buf = dataclasses.replace(
+                    buf,
+                    ins_cbm=buf.ins_cbm.at[(leaf, slots)].set(jnp.asarray(cbms)),
+                    ins_sig=buf.ins_sig.at[(leaf, slots)].set(jnp.asarray(sigs)),
+                )
+            else:
+                # a term this leaf has never seen: compact delta slots would
+                # be lossy, so drop them for good (executors fall back to
+                # the exact full-width ins_bm path)
+                self.compact_ok = False
+                buf = dataclasses.replace(buf, ins_cbm=None, ins_sig=None)
 
         # widen the ancestor path per touched (level, node)
         touched: Dict[int, set] = {}

@@ -231,52 +231,154 @@ def _select_leaves_indexed(
     return top_leaf, leaf_ok, overflow
 
 
+def _snap_cbank(snap: IndexSnapshot, compact: Optional[bool]):
+    """The snapshot's compact leaf bank as a ``(leaf_terms, obj_cbm,
+    obj_sig)`` triple, or None. ``compact=None`` (auto) uses it whenever the
+    snapshot carries one; ``False`` forces the full-width A/B baseline."""
+    if compact is False or not snap.has_compact_bank:
+        return None
+    return (snap.leaf_terms, snap.leaf_obj_cbm, snap.leaf_obj_sig)
+
+
+def _verify_delta_slots(q_rects, q_bm, top_leaf, leaf_ok, delta, q_cbm, q_sig):
+    """Verify the selected leaves' delta insert-buffer slots (DESIGN.md §7).
+
+    The fused-with-delta merge (below): the fused kernel covers the base
+    leaf blocks only, so the buffered inserts are gathered and verified
+    here, through the compact kernel when the delta carries remapped slot
+    bitmaps (``ins_cbm``; exact -- DeltaLog drops them the moment any
+    buffered term falls outside its leaf's dictionary) and through the
+    full-width ``verify_candidates`` otherwise. Returns ``(ids, counts,
+    kw_scanned)`` for the delta slots alone.
+    """
+    M = q_rects.shape[0]
+    B = delta.slots_per_leaf
+    ix = delta.ins_x[top_leaf].reshape(M, -1)
+    iy = delta.ins_y[top_leaf].reshape(M, -1)
+    iid = delta.ins_id[top_leaf].reshape(M, -1)
+    ival = (iid >= 0) & jnp.repeat(leaf_ok, B, axis=1)
+    if q_cbm is not None and delta.ins_cbm is not None:
+        Wl = delta.ins_cbm.shape[2]
+        icbm = delta.ins_cbm[top_leaf].reshape(M, -1, Wl)
+        isig = delta.ins_sig[top_leaf].reshape(M, -1)
+        match = ops.verify_candidates_compact(
+            q_rects, q_cbm, q_sig, ix, iy, icbm, isig, ival.astype(jnp.int8)
+        )
+        kw = ((isig & jnp.repeat(q_sig, B, axis=1)) != 0) & jnp.any(
+            (icbm & jnp.repeat(q_cbm, B, axis=1)) != 0, axis=-1
+        )
+    else:
+        ibm = delta.ins_bm[top_leaf].reshape(M, -1, q_bm.shape[1])
+        match = ops.verify_candidates(
+            q_rects, q_bm, ix, iy, ibm, ival.astype(jnp.int8)
+        )
+        kw = jnp.any(ibm & q_bm[:, None, :] != 0, axis=-1)
+    ids = jnp.where(match > 0, iid, -1)
+    counts = jnp.sum(match.astype(jnp.int32), axis=1)
+    kw_scanned = jnp.sum(kw & ival, axis=1)
+    return ids, counts, kw_scanned
+
+
 def _verify_leaves(
     snap: IndexSnapshot, q_rects, q_bm, top_leaf, leaf_ok, delta=None, fused=None,
-    fused_variant: Optional[str] = None,
+    fused_variant: Optional[str] = None, compact: Optional[bool] = None,
 ):
     """Capacity-bounded verification of the selected leaves (shared by modes).
 
-    ``fused=None`` (auto) routes the static (no-delta) case through the
+    ``fused=None`` (auto) now ALWAYS routes the base leaf blocks through the
     fused gather+verify Pallas kernels (DESIGN.md §3.5): the selected
     leaves' object blocks are gathered and verified inside one kernel, so
     the ``(M, T*OBJ, W)`` candidate bitmap plane never round-trips HBM
-    between the gather and ``skr_verify``. ``fused=False`` forces the
-    unfused gather -> ``verify_candidates`` pipeline (the A/B baseline);
-    both paths return identical ids/counters (tests/test_query_parity.py).
+    between the gather and ``skr_verify``. With a live ``delta`` the fused
+    kernel sees an id bank masked by ``base_alive`` (deleted objects behave
+    exactly like pad slots) and only the delta's insert-buffer slots go
+    through the unfused ``_verify_delta_slots`` merge -- candidate order
+    stays [base blocks, delta slots], identical to the wholesale unfused
+    pipeline. ``fused=False`` forces that unfused pipeline (the A/B
+    baseline); every combination returns identical ids/counters
+    (tests/test_query_parity.py).
+
+    ``compact=None`` (auto) verifies on the snapshot's leaf-local compact
+    bank when it exists (``has_compact_bank``): queries are remapped into
+    each selected leaf's vocabulary (``ops.remap_query_words``) and the
+    kernels test a one-word signature before the ``Wl``-word plane --
+    bit-identical ids and Eq.1 counters, ~W/Wl fewer verify bytes.
+    ``compact=False`` forces the full-width slab.
 
     ``fused_variant`` picks the fused kernel: None (auto) compares the leaf
-    bank's bytes against ``ops.FUSED_VMEM_BANK_BYTES`` -- the VMEM-resident
-    kernel below the cutoff, the scalar-prefetched (M, T)-grid kernel above
-    it -- so banks beyond VMEM keep the fused path instead of falling back
-    to the unfused HBM round-trip. ``"vmem"``/``"prefetch"`` force a kernel
-    (A/B rows, beyond-VMEM tests).
-
-    With a live ``delta``, each selected leaf's insert-buffer slots are
-    appended to its snapshot object block as extra candidates and deleted
-    snapshot objects are masked out, so the match set is exactly the merged
-    (base + inserts - deletes) object set -- the delta path always runs
-    unfused (the fused kernels verify snapshot blocks only).
+    bank's bytes (compact bytes when the compact bank is in play) against
+    ``ops.FUSED_VMEM_BANK_BYTES`` -- the VMEM-resident kernel below the
+    cutoff, the scalar-prefetched (M, T)-grid kernel above it -- so banks
+    beyond VMEM keep the fused path instead of falling back to the unfused
+    HBM round-trip. ``"vmem"``/``"prefetch"`` force a kernel (A/B rows,
+    beyond-VMEM tests).
     """
     if fused is None:
-        fused = delta is None
-    if fused and delta is None:
-        ids, kwv = ops.fused_gather_verify(
-            q_rects, q_bm, top_leaf, leaf_ok.astype(jnp.int8),
-            snap.leaf_obj_x, snap.leaf_obj_y, snap.leaf_obj_bm, snap.leaf_obj_id,
-            variant=fused_variant if fused_variant is not None else "auto",
-        )
+        fused = True
+    cbank = _snap_cbank(snap, compact)
+    q_cbm = q_sig = None
+    if cbank is not None:
+        q_cbm, q_sig = ops.remap_query_words(q_bm, cbank[0], top_leaf)
+    variant = fused_variant if fused_variant is not None else "auto"
+    if fused:
+        base_id = snap.leaf_obj_id
+        if delta is not None:
+            # deleted objects become pad slots for the fused base pass
+            base_id = jnp.where(delta.base_alive > 0, snap.leaf_obj_id, -1)
+        if cbank is not None:
+            ids, kwv = ops.fused_gather_verify_compact(
+                q_rects, q_cbm, q_sig, top_leaf, leaf_ok.astype(jnp.int8),
+                snap.leaf_obj_x, snap.leaf_obj_y, cbank[1], cbank[2], base_id,
+                variant=variant,
+            )
+        else:
+            ids, kwv = ops.fused_gather_verify(
+                q_rects, q_bm, top_leaf, leaf_ok.astype(jnp.int8),
+                snap.leaf_obj_x, snap.leaf_obj_y, snap.leaf_obj_bm, base_id,
+                variant=variant,
+            )
         counts = jnp.sum((ids >= 0).astype(jnp.int32), axis=1)
-        return ids, counts, jnp.sum(kwv, axis=1)
+        kw_scanned = jnp.sum(kwv, axis=1)
+        if delta is not None:
+            d_ids, d_counts, d_kw = _verify_delta_slots(
+                q_rects, q_bm, top_leaf, leaf_ok, delta, q_cbm, q_sig
+            )
+            ids = jnp.concatenate([ids, d_ids], axis=1)
+            counts = counts + d_counts
+            kw_scanned = kw_scanned + d_kw
+        return ids, counts, kw_scanned
     M = q_rects.shape[0]
     cx = snap.leaf_obj_x[top_leaf].reshape(M, -1)
     cy = snap.leaf_obj_y[top_leaf].reshape(M, -1)
-    cbm = snap.leaf_obj_bm[top_leaf].reshape(M, -1, q_bm.shape[1])
     cid = snap.leaf_obj_id[top_leaf].reshape(M, -1)
     cval = (cid >= 0) & jnp.repeat(leaf_ok, snap.obj_per_leaf, axis=1)
     if delta is not None:
         alive = delta.base_alive[top_leaf].reshape(M, -1)
         cval = cval & (alive > 0)
+    if cbank is not None:
+        OBJ = snap.obj_per_leaf
+        Wl = cbank[1].shape[2]
+        ccbm = cbank[1][top_leaf].reshape(M, -1, Wl)
+        csig = cbank[2][top_leaf].reshape(M, -1)
+        match = ops.verify_candidates_compact(
+            q_rects, q_cbm, q_sig, cx, cy, ccbm, csig, cval.astype(jnp.int8)
+        )
+        kw = ((csig & jnp.repeat(q_sig, OBJ, axis=1)) != 0) & jnp.any(
+            (ccbm & jnp.repeat(q_cbm, OBJ, axis=1)) != 0, axis=-1
+        )
+        counts = jnp.sum(match.astype(jnp.int32), axis=1)
+        kw_scanned = jnp.sum(kw & cval, axis=1)
+        ids = jnp.where(match > 0, cid, -1)
+        if delta is not None:
+            d_ids, d_counts, d_kw = _verify_delta_slots(
+                q_rects, q_bm, top_leaf, leaf_ok, delta, q_cbm, q_sig
+            )
+            ids = jnp.concatenate([ids, d_ids], axis=1)
+            counts = counts + d_counts
+            kw_scanned = kw_scanned + d_kw
+        return ids, counts, kw_scanned
+    cbm = snap.leaf_obj_bm[top_leaf].reshape(M, -1, q_bm.shape[1])
+    if delta is not None:
         B = delta.slots_per_leaf
         ix = delta.ins_x[top_leaf].reshape(M, -1)
         iy = delta.ins_y[top_leaf].reshape(M, -1)
@@ -372,6 +474,7 @@ def _retrieve_frontier(
     fused=None,
     words=None,
     fused_variant: Optional[str] = None,
+    compact: Optional[bool] = None,
 ) -> Dict[str, np.ndarray]:
     M = q_rects.shape[0]
     plan = cache.plan("skr", snap.n_levels - 1)
@@ -384,7 +487,7 @@ def _retrieve_frontier(
     take = min(max_leaves, n_leaf, int(frontier.shape[1]))
     top_leaf, leaf_ok, overflow = _select_leaves_frontier(frontier, surv, take, n_leaf)
     ids, counts, kw_scanned = _verify_leaves(
-        snap, q_rects, q_bm, top_leaf, leaf_ok, delta, fused, fused_variant
+        snap, q_rects, q_bm, top_leaf, leaf_ok, delta, fused, fused_variant, compact
     )
     return dict(
         ids=np.asarray(ids),
@@ -464,30 +567,76 @@ def _probe_select(d, cand):
     return jnp.where(jnp.isfinite(bd), nxt, -1)
 
 
+def _chunk_kw(q_bm, obj_bm, delta, cbank, leaves2d):
+    """Keyword-overlap of each query against gathered leaf blocks.
+
+    ``leaves2d`` is ``(M, T)`` leaf ids (clipped in here; invalid slots are
+    masked by the callers' validity logic). Returns ``(kw_base (M, T, OBJ),
+    kw_ins (M, T, B) or None)``. With ``cbank=(leaf_terms, obj_cbm,
+    obj_sig)`` the test runs on the leaf-local compact plane -- queries are
+    remapped once per (query, leaf slot) and a one-word signature gates the
+    ``Wl``-word AND -- bit-identical to the full-width test (DESIGN.md
+    §3.5). Delta insert slots use the delta's remapped ``ins_cbm`` when it
+    carries one (exact: DeltaLog drops it on any out-of-dictionary term)
+    and the full-width ``ins_bm`` otherwise.
+    """
+    if cbank is None:
+        K = obj_bm.shape[0]
+        safe = jnp.clip(leaves2d, 0, K - 1)
+        kw = jnp.any((obj_bm[safe] & q_bm[:, None, None, :]) != 0, axis=-1)
+        ikw = None
+        if delta is not None:
+            ikw = jnp.any(
+                (delta.ins_bm[safe] & q_bm[:, None, None, :]) != 0, axis=-1
+            )
+        return kw, ikw
+    leaf_terms, obj_cbm, obj_sig = cbank
+    K = obj_cbm.shape[0]
+    safe = jnp.clip(leaves2d, 0, K - 1)
+    q_cbm, q_sig = ops.remap_query_words(q_bm, leaf_terms, leaves2d)
+    sig_hit = (obj_sig[safe] & q_sig[:, :, None]) != 0
+    kw = sig_hit & jnp.any((obj_cbm[safe] & q_cbm[:, :, None, :]) != 0, axis=-1)
+    ikw = None
+    if delta is not None:
+        if delta.ins_cbm is not None:
+            isig_hit = (delta.ins_sig[safe] & q_sig[:, :, None]) != 0
+            ikw = isig_hit & jnp.any(
+                (delta.ins_cbm[safe] & q_cbm[:, :, None, :]) != 0, axis=-1
+            )
+        else:
+            ikw = jnp.any(
+                (delta.ins_bm[safe] & q_bm[:, None, None, :]) != 0, axis=-1
+            )
+    return kw, ikw
+
+
 @functools.partial(jax.jit, static_argnames=("kb",))
 def _knn_probe_verify(
-    points, q_bm, obj_x, obj_y, obj_bm, obj_id, leaf, top_d, top_id, kb: int, delta=None
+    points, q_bm, obj_x, obj_y, obj_bm, obj_id, leaf, top_d, top_id, kb: int,
+    delta=None, cbank=None,
 ):
     """Verify the probe leaf's object block and seed the top-k buffer.
 
     With a live ``delta``, the probe leaf's insert-buffer slots join the
     candidate set and deleted snapshot objects are masked (a deleted object
-    must not occupy a top-k slot or tighten the bound)."""
+    must not occupy a top-k slot or tighten the bound). ``cbank`` routes the
+    keyword test through the compact leaf bank (``_chunk_kw``)."""
     safe = jnp.clip(leaf, 0, obj_x.shape[0] - 1)
     ox, oy = obj_x[safe], obj_y[safe]  # (M, OBJ)
-    obm, oid = obj_bm[safe], obj_id[safe]
+    oid = obj_id[safe]
+    kw2, ikw2 = _chunk_kw(q_bm, obj_bm, delta, cbank, safe[:, None])
+    kw = kw2[:, 0]  # (M, OBJ)
     base_ok = oid >= 0
     if delta is not None:
         base_ok = base_ok & (delta.base_alive[safe] > 0)
         ox = jnp.concatenate([ox, delta.ins_x[safe]], axis=1)
         oy = jnp.concatenate([oy, delta.ins_y[safe]], axis=1)
-        obm = jnp.concatenate([obm, delta.ins_bm[safe]], axis=1)
         oid = jnp.concatenate([oid, delta.ins_id[safe]], axis=1)
+        kw = jnp.concatenate([kw, ikw2[:, 0]], axis=1)
         base_ok = jnp.concatenate([base_ok, delta.ins_id[safe] >= 0], axis=1)
     dx = ox - points[:, 0:1]
     dy = oy - points[:, 1:2]
     od2 = dx * dx + dy * dy
-    kw = jnp.any((obm & q_bm[:, None, :]) != 0, axis=-1)
     valid = base_ok & kw & (leaf >= 0)[:, None]
     cd = jnp.where(valid, od2, jnp.inf)
     cid = jnp.where(valid, oid, _ID_SENTINEL)
@@ -510,7 +659,7 @@ def _bound_prune(d, top_d, k: int):
 def _knn_leaf_phase(
     points, q_bm, leaf_d, frontier, probe_leaf,
     obj_x, obj_y, obj_bm, obj_id, top_d, top_id, k: int, kb: int, ch: int,
-    delta=None,
+    delta=None, cbank=None,
 ):
     """Distance-ordered chunked leaf verification in one lax.scan.
 
@@ -541,19 +690,19 @@ def _knn_leaf_phase(
         active = jnp.isfinite(dc) & (dc <= bound[:, None])
         safe = jnp.clip(lc, 0, obj_x.shape[0] - 1)
         ox, oy = obj_x[safe], obj_y[safe]  # (M, ch, OBJ)
-        obm, oid = obj_bm[safe], obj_id[safe]
+        oid = obj_id[safe]
+        kw, ikw = _chunk_kw(q_bm, obj_bm, delta, cbank, safe)
         base_ok = oid >= 0
         if delta is not None:
             base_ok = base_ok & (delta.base_alive[safe] > 0)
             ox = jnp.concatenate([ox, delta.ins_x[safe]], axis=2)
             oy = jnp.concatenate([oy, delta.ins_y[safe]], axis=2)
-            obm = jnp.concatenate([obm, delta.ins_bm[safe]], axis=2)
             oid = jnp.concatenate([oid, delta.ins_id[safe]], axis=2)
+            kw = jnp.concatenate([kw, ikw], axis=2)
             base_ok = jnp.concatenate([base_ok, delta.ins_id[safe] >= 0], axis=2)
         dx = ox - points[:, 0][:, None, None]
         dy = oy - points[:, 1][:, None, None]
         od2 = dx * dx + dy * dy
-        kw = jnp.any((obm & q_bm[:, None, None, :]) != 0, axis=-1)
         valid = base_ok & kw & active[:, :, None]
         cd = jnp.where(valid, od2, jnp.inf).reshape(M, -1)
         cid = jnp.where(valid, oid, _ID_SENTINEL).reshape(M, -1)
@@ -577,7 +726,7 @@ def _knn_leaf_phase(
 
 def _descend_knn(
     snap: IndexSnapshot, points, q_bm, k: int, kb: int, plan: ExecutionPlan, delta=None,
-    words=None, knn_dtype: str = "f32",
+    words=None, knn_dtype: str = "f32", cbank=None,
 ):
     """Distance-bounded kNN descent (probe -> bounded sweep -> leaf chunks).
 
@@ -628,7 +777,7 @@ def _descend_knn(
     probe_leaf = cur
     top_d, top_id, ver0 = _knn_probe_verify(
         points, q_bm, snap.leaf_obj_x, snap.leaf_obj_y, snap.leaf_obj_bm, snap.leaf_obj_id,
-        probe_leaf, top_d, top_id, kb, delta,
+        probe_leaf, top_d, top_id, kb, delta, cbank,
     )
     verified = ver0
     leaves_verified = (probe_leaf >= 0).astype(jnp.int32)
@@ -662,7 +811,7 @@ def _descend_knn(
     top_d, top_id, lv, ver, pr, rm = _knn_leaf_phase(
         points, q_bm, leaf_d, frontier, probe_leaf,
         snap.leaf_obj_x, snap.leaf_obj_y, snap.leaf_obj_bm, snap.leaf_obj_id,
-        top_d, top_id, k, kb, ch, delta,
+        top_d, top_id, k, kb, ch, delta, cbank,
     )
     result = (
         top_d, top_id, nodes_checked, verified + ver,
@@ -675,7 +824,7 @@ def _descend_knn(
 def _knn_leaf_phase_indexed(
     points, q_bm, leaf_d, frontier, probe_leaf, leaf_gid,
     obj_x, obj_y, obj_bm, obj_id, top_d, top_id, k: int, kb: int, ch: int,
-    n_shards: int, index_axis: str, delta=None,
+    n_shards: int, index_axis: str, delta=None, cbank=None,
 ):
     """Index-sharded twin of ``_knn_leaf_phase`` (shard_map bodies only).
 
@@ -727,19 +876,19 @@ def _knn_leaf_phase_indexed(
         active = jnp.isfinite(dc) & (dc <= bound[:, None])
         safe = jnp.clip(lc, 0, K - 1)
         ox, oy = obj_x[safe], obj_y[safe]  # (M, ch, OBJ)
-        obm, oid = obj_bm[safe], obj_id[safe]
+        oid = obj_id[safe]
+        kw, ikw = _chunk_kw(q_bm, obj_bm, delta, cbank, safe)
         base_ok = oid >= 0
         if delta is not None:
             base_ok = base_ok & (delta.base_alive[safe] > 0)
             ox = jnp.concatenate([ox, delta.ins_x[safe]], axis=2)
             oy = jnp.concatenate([oy, delta.ins_y[safe]], axis=2)
-            obm = jnp.concatenate([obm, delta.ins_bm[safe]], axis=2)
             oid = jnp.concatenate([oid, delta.ins_id[safe]], axis=2)
+            kw = jnp.concatenate([kw, ikw], axis=2)
             base_ok = jnp.concatenate([base_ok, delta.ins_id[safe] >= 0], axis=2)
         dx = ox - points[:, 0][:, None, None]
         dy = oy - points[:, 1][:, None, None]
         od2 = dx * dx + dy * dy
-        kw = jnp.any((obm & q_bm[:, None, None, :]) != 0, axis=-1)
         valid = base_ok & kw & active[:, :, None]
         cd = jnp.where(valid, od2, jnp.inf).reshape(M, -1)
         cid = jnp.where(valid, oid, _ID_SENTINEL).reshape(M, -1)
@@ -769,7 +918,7 @@ def _knn_leaf_phase_indexed(
 def _descend_knn_indexed(
     snap: IndexSnapshot, root_gid, leaf_gid, n_root_local, points, q_bm,
     k: int, kb: int, plan: ExecutionPlan, n_shards: int, index_axis: str,
-    delta=None, words=None,
+    delta=None, words=None, cbank=None,
 ):
     """Index-sharded kNN descent (shard_map bodies only; DESIGN.md §3.4).
 
@@ -839,7 +988,7 @@ def _descend_knn_indexed(
     probe_leaf = jnp.where(canonical, cur, -1)
     top_d, top_id, ver0 = _knn_probe_verify(
         points, q_bm, snap.leaf_obj_x, snap.leaf_obj_y, snap.leaf_obj_bm,
-        snap.leaf_obj_id, probe_leaf, top_d, top_id, kb, delta,
+        snap.leaf_obj_id, probe_leaf, top_d, top_id, kb, delta, cbank,
     )
     verified = ver0
     leaves_verified = (probe_leaf >= 0).astype(jnp.int32)
@@ -872,7 +1021,7 @@ def _descend_knn_indexed(
     top_d, top_id, lv, ver, pr, _ = _knn_leaf_phase_indexed(
         points, q_bm, leaf_d, frontier, probe_leaf, leaf_gid,
         snap.leaf_obj_x, snap.leaf_obj_y, snap.leaf_obj_bm, snap.leaf_obj_id,
-        top_d, top_id, k, kb, ch, n_shards, index_axis, delta,
+        top_d, top_id, k, kb, ch, n_shards, index_axis, delta, cbank,
     )
     result = (
         top_d, top_id, nodes_checked, verified + ver,
@@ -891,6 +1040,7 @@ def retrieve_knn(
     delta: Optional[DeltaBuffer] = None,
     quantized: Optional[bool] = None,
     knn_dtype: str = "f32",
+    compact: Optional[bool] = None,
 ) -> Dict[str, np.ndarray]:
     """Batched Boolean kNN over the device-resident index (DESIGN.md §6).
 
@@ -902,7 +1052,11 @@ def retrieve_knn(
     ``delta`` merges buffered inserts/deletes on the fly (DESIGN.md §7).
     ``quantized=None`` (auto) descends on the snapshot's narrow planes when
     available and no delta is live; ``False`` forces the f32 full-width A/B
-    baseline. Results are bit-identical either way (DESIGN.md §3.5).
+    baseline. ``compact=None`` (auto) runs every leaf keyword test on the
+    leaf-local compact bank when the snapshot carries one (signature
+    prefilter + ``Wl``-word plane; distance math untouched); ``False``
+    forces the full-width slab. Results are bit-identical every way
+    (DESIGN.md §3.5).
 
     ``knn_dtype="bf16"`` runs the bounded sweep's node-distance pruning in
     bf16 (ROADMAP item 5). Object distances stay exact f32, so the result
@@ -928,9 +1082,10 @@ def retrieve_knn(
     kb = round_up_bucket(k, min_topk_bucket)
     cache = plan_cache if plan_cache is not None else default_plan_cache(snap)
     words = _narrow_words(q_bm, delta, snap, quantized)
+    cbank = _snap_cbank(snap, compact)
     plan = cache.plan("knn", snap.n_levels - 1)
     descend = lambda p: _descend_knn(
-        snap, points, q_bm, k, kb, p, delta, words, knn_dtype=knn_dtype
+        snap, points, q_bm, k, kb, p, delta, words, knn_dtype=knn_dtype, cbank=cbank
     )
     out = descend(plan)
     retried = cache.check_and_retry(plan, out[-1], descend)
@@ -943,7 +1098,7 @@ def retrieve_knn(
             exact = retrieve_knn(
                 snap, points, q_bm, k, min_topk_bucket=min_topk_bucket,
                 plan_cache=cache, delta=delta, quantized=quantized,
-                knn_dtype="f32",
+                knn_dtype="f32", compact=compact,
             )
             exact["knn_dtype_retried"] = True
             return exact
@@ -966,7 +1121,7 @@ def retrieve_knn(
 # --------------------------------------------------------------- dense path
 def _retrieve_dense(
     snap: IndexSnapshot, q_rects: jnp.ndarray, q_bm: jnp.ndarray, max_leaves: int,
-    delta=None, fused=None,
+    delta=None, fused=None, compact: Optional[bool] = None,
 ) -> Dict[str, np.ndarray]:
     if len(snap.child_matrix) != len(snap.level_mbrs) - 1:
         raise ValueError("dense mode needs IndexSnapshot.build(..., dense=True)")
@@ -989,7 +1144,7 @@ def _retrieve_dense(
     leaf_ok = top_val > 0
     overflow = jnp.maximum(jnp.sum(score, axis=1) - take, 0)
     ids, counts, kw_scanned = _verify_leaves(
-        snap, q_rects, q_bm, top_leaf, leaf_ok, delta, fused
+        snap, q_rects, q_bm, top_leaf, leaf_ok, delta, fused, compact=compact
     )
     return dict(
         ids=np.asarray(ids),
@@ -1019,6 +1174,7 @@ def retrieve(
     fused: Optional[bool] = None,
     quantized: Optional[bool] = None,
     fused_variant: Optional[str] = None,
+    compact: Optional[bool] = None,
 ) -> Dict[str, np.ndarray]:
     """Batched SKR retrieval. Exact as long as <= max_leaves leaves are
     relevant per query (the spill is counted in ``overflow``).
@@ -1028,14 +1184,19 @@ def retrieve(
     frontier width state across calls; None uses the per-snapshot default.
     ``delta`` merges buffered inserts/deletes on the fly (DESIGN.md §7).
     ``fused`` picks the leaf verification pipeline (DESIGN.md §3.5): None
-    (auto) uses the fused gather+verify kernels whenever no delta is live;
-    False forces the unfused A/B baseline. ``fused_variant`` further picks
-    the fused kernel (None auto-selects by leaf-bank bytes vs
+    (auto) uses the fused gather+verify kernels on the base leaf blocks --
+    with a live delta only the insert-buffer slots take the unfused merge;
+    False forces the wholesale unfused A/B baseline. ``fused_variant``
+    further picks the fused kernel (None auto-selects by leaf-bank bytes vs
     ``ops.FUSED_VMEM_BANK_BYTES``; ``"vmem"``/``"prefetch"`` force one).
     ``quantized`` controls the bandwidth-lean frontier descent (DESIGN.md
     §3.5): None (auto) uses the snapshot's int16 shadow MBR planes + packed
     bitmap words when available and no delta is live; False forces the f32
-    full-width baseline. Every combination is id- and counter-exact.
+    full-width baseline. ``compact`` controls leaf verification width
+    (DESIGN.md §3.5): None (auto) verifies on the leaf-local compact
+    vocabulary bank (remapped query words + one-word signature prefilter)
+    whenever the snapshot carries one; False forces the global full-width
+    slab. Every combination is id- and counter-exact.
     """
     q_rects = jnp.asarray(q_rects, jnp.float32)
     q_bm = jnp.asarray(q_bm, jnp.uint32)
@@ -1043,12 +1204,13 @@ def retrieve(
         cache = plan_cache if plan_cache is not None else default_plan_cache(snap)
         words = _narrow_words(q_bm, delta, snap, quantized)
         return _retrieve_frontier(
-            snap, q_rects, q_bm, max_leaves, cache, delta, fused, words, fused_variant
+            snap, q_rects, q_bm, max_leaves, cache, delta, fused, words,
+            fused_variant, compact,
         )
     if mode == "dense":
         # the dense A/B path scores full levels against full-width planes by
         # design; the narrow planes only accelerate the frontier descent
-        return _retrieve_dense(snap, q_rects, q_bm, max_leaves, delta, fused)
+        return _retrieve_dense(snap, q_rects, q_bm, max_leaves, delta, fused, compact)
     raise ValueError(f"unknown retrieve mode {mode!r}")
 
 
@@ -1062,6 +1224,7 @@ def retrieve_workload(
     fused: Optional[bool] = None,
     quantized: Optional[bool] = None,
     fused_variant: Optional[str] = None,
+    compact: Optional[bool] = None,
 ):
     return retrieve(
         snap,
@@ -1074,4 +1237,5 @@ def retrieve_workload(
         fused=fused,
         quantized=quantized,
         fused_variant=fused_variant,
+        compact=compact,
     )

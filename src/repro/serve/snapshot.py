@@ -52,6 +52,68 @@ from ..kernels.ops import NEVER_RECT
 # coordinate count exceeds this are served on the f32 planes instead
 NARROW_DICT_MAX = 32767
 
+# leaf-local vocabulary capacity: if any leaf's distinct-term count exceeds
+# this, the compact leaf bank is not built and verify serves the full-width
+# (K, OBJ, W) slab instead (the same disable-on-overflow contract as
+# NARROW_DICT_MAX for the int16 MBR planes)
+LEAF_DICT_MAX = 32768
+
+
+def encode_leaf_vocab(leaf_obj_bm, cap: int = LEAF_DICT_MAX):
+    """Re-encode the leaf object bitmaps against per-leaf sorted vocabularies.
+
+    Per leaf, the dictionary is the sorted distinct set of global term ids
+    present in ANY of the leaf's objects; each object's bitmap is re-packed
+    over leaf-LOCAL bit positions into ``Wl`` u32 words, with ``Wl`` the
+    power-of-two bucket of the widest leaf's word count. Because every
+    object's term set is a subset of its leaf's dictionary, intersecting a
+    query's remapped words with the compact slab is EXACTLY the global-width
+    test (DESIGN.md §3.5) -- query terms outside the dictionary simply have
+    no local bit, and they could not have matched this leaf's objects anyway.
+
+    Returns ``(leaf_terms, leaf_obj_cbm, leaf_obj_sig)``:
+
+    * ``leaf_terms``  (K, 32*Wl) i32 -- global term id per local bit, -1 pad
+      (the query-remap gather table);
+    * ``leaf_obj_cbm`` (K, OBJ, Wl) u32 -- the compact object bitmap slab;
+    * ``leaf_obj_sig`` (K, OBJ) u32 -- per-object OR-fold of the Wl words,
+      the one-word signature prefilter tested before the word loop.
+
+    or ``(None, None, None)`` when any leaf's dictionary would exceed
+    ``cap`` (serve on the full-width slab instead). Host-only.
+    """
+    bm = np.asarray(leaf_obj_bm, np.uint32)
+    K, OBJ, W = bm.shape
+    shifts = np.arange(32, dtype=np.uint32)
+    per_leaf = []
+    max_terms = 1
+    for c in range(K):
+        union = np.bitwise_or.reduce(bm[c], axis=0)  # (W,)
+        terms = np.flatnonzero(
+            ((union[:, None] >> shifts) & 1).reshape(-1)
+        ).astype(np.int32)
+        if terms.size > cap:
+            return None, None, None
+        per_leaf.append(terms)
+        max_terms = max(max_terms, int(terms.size))
+    need = -(-max_terms // 32)
+    Wl = 1 << (need - 1).bit_length()  # power-of-two word count, min 1
+    leaf_terms = np.full((K, 32 * Wl), -1, np.int32)
+    cbm = np.zeros((K, OBJ, Wl), np.uint32)
+    for c in range(K):
+        terms = per_leaf[c]
+        leaf_terms[c, : terms.size] = terms
+        if terms.size == 0:
+            continue
+        obits = ((bm[c][:, :, None] >> shifts) & 1).reshape(OBJ, W * 32)
+        local = np.zeros((OBJ, Wl * 32), np.uint32)
+        local[:, : terms.size] = obits[:, terms]
+        cbm[c] = np.bitwise_or.reduce(
+            local.reshape(OBJ, Wl, 32) << shifts, axis=-1
+        )
+    sig = np.bitwise_or.reduce(cbm, axis=-1)  # (K, OBJ)
+    return jnp.asarray(leaf_terms), jnp.asarray(cbm), jnp.asarray(sig)
+
 
 def encode_mbr_planes(level_mbrs):
     """Rank-encode per-level MBR planes into int16 codes + f32 dictionaries.
@@ -116,6 +178,13 @@ class IndexSnapshot:
     level_mbr_codes: List[jnp.ndarray] = dataclasses.field(default_factory=list)  # (n, 4) i16
     level_dict_x: List[jnp.ndarray] = dataclasses.field(default_factory=list)  # (Dx,) f32
     level_dict_y: List[jnp.ndarray] = dataclasses.field(default_factory=list)  # (Dy,) f32
+    # Compact leaf verify bank (DESIGN.md §3.5): per-leaf sorted keyword
+    # dictionaries + the object bitmaps re-packed over leaf-local bit ids
+    # (encode_leaf_vocab). None when any leaf's vocabulary overflows
+    # LEAF_DICT_MAX -- the engine then verifies on the full-width slab.
+    leaf_terms: jnp.ndarray = None  # (K, 32*Wl) i32 global term per bit, -1 pad
+    leaf_obj_cbm: jnp.ndarray = None  # (K, OBJ, Wl) u32 compact bitmaps
+    leaf_obj_sig: jnp.ndarray = None  # (K, OBJ) u32 OR-fold signatures
 
     @property
     def n_levels(self) -> int:
@@ -134,6 +203,17 @@ class IndexSnapshot:
         """True when every level carries int16 shadow MBR codes (the
         bandwidth-lean descent of DESIGN.md §3.5 is available)."""
         return len(self.level_mbr_codes) == len(self.level_mbrs) > 0
+
+    @property
+    def has_compact_bank(self) -> bool:
+        """True when the leaf-local compact verify bank was built (no leaf
+        vocabulary overflowed ``LEAF_DICT_MAX``; DESIGN.md §3.5)."""
+        return self.leaf_obj_cbm is not None
+
+    @property
+    def n_compact_words(self) -> int:
+        """Wl: u32 words per object in the compact leaf bank (static)."""
+        return int(self.leaf_obj_cbm.shape[2])
 
     def root_width(self) -> int:
         """Bucketed width of the root frontier (static)."""
@@ -194,6 +274,7 @@ class IndexSnapshot:
             obm[c, : ids.size] = dataset.kw_bitmap[ids]
             oid[c, : ids.size] = ids
         codes, dicts_x, dicts_y = encode_mbr_planes([l.mbrs for l in index.levels])
+        lterms, lcbm, lsig = encode_leaf_vocab(obm)
         return IndexSnapshot(
             level_mbrs=mbrs,
             level_bms=bms,
@@ -208,6 +289,9 @@ class IndexSnapshot:
             level_mbr_codes=codes,
             level_dict_x=dicts_x,
             level_dict_y=dicts_y,
+            leaf_terms=lterms,
+            leaf_obj_cbm=lcbm,
+            leaf_obj_sig=lsig,
         )
 
 
@@ -224,6 +308,9 @@ _ARRAY_FIELDS = (
     "level_mbr_codes",
     "level_dict_x",
     "level_dict_y",
+    "leaf_terms",
+    "leaf_obj_cbm",
+    "leaf_obj_sig",
 )
 
 
@@ -404,6 +491,12 @@ class PartitionedSnapshot:
     level_mbr_codes: List[jnp.ndarray] = dataclasses.field(default_factory=list)
     level_dict_x: List[jnp.ndarray] = dataclasses.field(default_factory=list)  # (S*Dx,)
     level_dict_y: List[jnp.ndarray] = dataclasses.field(default_factory=list)
+    # compact leaf verify bank (leaf-local dictionaries ARE shard-local --
+    # stacking just selects each shard's leaf rows, Wl stays global); None
+    # when the base snapshot has no compact bank
+    leaf_terms: jnp.ndarray = None  # (S*Kp, 32*Wl) i32, -1 pad
+    leaf_obj_cbm: jnp.ndarray = None  # (S*Kp, OBJ, Wl) u32
+    leaf_obj_sig: jnp.ndarray = None  # (S*Kp, OBJ) u32
 
     @property
     def n_levels(self) -> int:
@@ -416,6 +509,10 @@ class PartitionedSnapshot:
     @property
     def has_narrow_planes(self) -> bool:
         return len(self.level_mbr_codes) == len(self.level_mbrs) > 0
+
+    @property
+    def has_compact_bank(self) -> bool:
+        return self.leaf_obj_cbm is not None
 
     def local_root_width(self) -> int:
         """Bucketed width of one shard's root frontier (static)."""
@@ -445,6 +542,9 @@ class PartitionedSnapshot:
             level_mbr_codes=self.level_mbr_codes,
             level_dict_x=self.level_dict_x,
             level_dict_y=self.level_dict_y,
+            leaf_terms=self.leaf_terms,
+            leaf_obj_cbm=self.leaf_obj_cbm,
+            leaf_obj_sig=self.leaf_obj_sig,
         )
 
     def shard(self, mesh) -> "PartitionedSnapshot":
@@ -492,6 +592,14 @@ class PartitionedSnapshot:
         leaf_obj_y = _stack_shard_rows(np.asarray(snap.leaf_obj_y), leaf_ids, Kp, 0.0)
         leaf_obj_bm = _stack_shard_rows(np.asarray(snap.leaf_obj_bm), leaf_ids, Kp, 0)
         leaf_obj_id = _stack_shard_rows(np.asarray(snap.leaf_obj_id), leaf_ids, Kp, -1)
+        lt = lcbm = lsig = None
+        if snap.has_compact_bank:
+            lt = jnp.asarray(_stack_shard_rows(
+                np.asarray(snap.leaf_terms), leaf_ids, Kp, -1))
+            lcbm = jnp.asarray(_stack_shard_rows(
+                np.asarray(snap.leaf_obj_cbm), leaf_ids, Kp, 0))
+            lsig = jnp.asarray(_stack_shard_rows(
+                np.asarray(snap.leaf_obj_sig), leaf_ids, Kp, 0))
         gid_src = [np.arange(int(snap.level_mbrs[li].shape[0]), dtype=np.int32) for li in (0, L - 1)]
         root_gid = _stack_shard_rows(gid_src[0], part.nodes[0], pads[0], -1)
         leaf_gid = _stack_shard_rows(gid_src[1], leaf_ids, Kp, -1)
@@ -561,6 +669,9 @@ class PartitionedSnapshot:
             level_mbr_codes=codes_l,
             level_dict_x=dx_l,
             level_dict_y=dy_l,
+            leaf_terms=lt,
+            leaf_obj_cbm=lcbm,
+            leaf_obj_sig=lsig,
         )
 
 
@@ -579,6 +690,9 @@ _PSNAP_ARRAY_FIELDS = (
     "level_mbr_codes",
     "level_dict_x",
     "level_dict_y",
+    "leaf_terms",
+    "leaf_obj_cbm",
+    "leaf_obj_sig",
 )
 
 

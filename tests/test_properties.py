@@ -233,6 +233,58 @@ def test_quantized_frontier_is_superset_filter(n, m, w, seed):
     np.testing.assert_array_equal(narrow, legacy)
 
 
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 6),
+    t=st.integers(1, 4),
+    k=st.integers(1, 8),
+    obj=st.integers(1, 16),
+    w=st.integers(1, 4),
+    seed=st.integers(0, 10_000),
+)
+def test_compact_verify_preserves_verified_ids(m, t, k, obj, w, seed):
+    """The leaf-local vocabulary remap + one-word signature prefilter never
+    change the verified id set or the per-slot Eq.1 counts (DESIGN.md §3.5):
+    for ANY leaf bank -- dense or sparse vocabularies, dirty leaf ids, -1
+    object pads, invalid slots -- the compact reference is elementwise
+    identical to the full-width fused reference. Exactness is structural
+    (object term sets are subsets of their leaf dictionary; the signature
+    test is implied by the word test), so equality must hold unconditionally,
+    not just on distributions the encoder was designed for.
+    """
+    from repro.kernels import ops
+    from repro.kernels.ref import fused_verify_compact_ref, fused_verify_ref
+    from repro.serve.snapshot import encode_leaf_vocab
+
+    rng = np.random.default_rng(seed)
+    lo = rng.uniform(0, 0.8, (m, 2)).astype(np.float32)
+    qr = np.concatenate([lo, lo + rng.uniform(0.01, 0.4, (m, 2)).astype(np.float32)], 1)
+    qb = rng.integers(0, 2**32, (m, w), dtype=np.uint64).astype(np.uint32)
+    qb *= rng.random((m, w)) < 0.6
+    ob = rng.integers(0, 2**32, (k, obj, w), dtype=np.uint64).astype(np.uint32)
+    ob *= rng.random((k, obj, w)) < 0.4
+    tl = rng.integers(-1, k + 2, (m, t)).astype(np.int32)  # deliberately dirty
+    ok = rng.integers(0, 2, (m, t)).astype(np.int8)
+    ox = rng.uniform(0, 1, (k, obj)).astype(np.float32)
+    oy = rng.uniform(0, 1, (k, obj)).astype(np.float32)
+    oid = np.where(
+        rng.integers(0, 4, (k, obj)) > 0,
+        rng.integers(0, 10 * k * obj, (k, obj)), -1,
+    ).astype(np.int32)
+
+    lt, cbm, sig = encode_leaf_vocab(ob)
+    assert lt is not None, "tiny banks must never overflow LEAF_DICT_MAX"
+    q_cbm, q_sig = ops.remap_query_words(jnp.asarray(qb), lt, jnp.asarray(tl))
+    wide_ids, wide_kwv = fused_verify_ref(
+        *map(jnp.asarray, (qr, qb, tl, ok, ox, oy, ob, oid))
+    )
+    comp_ids, comp_kwv = fused_verify_compact_ref(
+        *map(jnp.asarray, (qr, q_cbm, q_sig, tl, ok, ox, oy, cbm, sig, oid))
+    )
+    np.testing.assert_array_equal(np.asarray(comp_ids), np.asarray(wide_ids))
+    np.testing.assert_array_equal(np.asarray(comp_kwv), np.asarray(wide_kwv))
+
+
 def test_error_feedback_recovers_dropped_mass():
     rng = np.random.default_rng(0)
     g = {"w": jnp.asarray(rng.normal(0, 1, 64).astype(np.float32))}

@@ -257,11 +257,13 @@ def test_fused_verify_overflow_parity(max_leaves):
         np.testing.assert_array_equal(np.asarray(a[key]), np.asarray(b[key]), err_msg=key)
 
 
-def test_fused_auto_falls_back_with_delta():
-    """fused=None must auto-disable when a DeltaBuffer is live (the fused
-    kernel sees only the snapshot's leaf bank, not buffered updates), and
-    forcing fused=True alongside a delta keeps the delta-merged semantics
-    by routing through the unfused merge path."""
+def test_fused_stays_on_with_delta():
+    """fused=None must keep the fused kernel on the base leaf blocks when a
+    DeltaBuffer is live (the PR 6 gap: it used to fall back to the wholesale
+    unfused pipeline on any delta): deleted snapshot objects are masked into
+    pad slots for the fused pass and only the insert-buffer slots take the
+    unfused merge, elementwise-identical -- same ids in the same candidate
+    slots, same counters -- to the forced-unfused baseline."""
     from repro.serve.delta import DeltaLog
 
     ds = make_dataset("fs", n=1000, seed=6)
@@ -271,6 +273,7 @@ def test_fused_auto_falls_back_with_delta():
     rng = np.random.default_rng(0)
     log.insert(rng.uniform(0.4, 0.6, (8, 2)).astype(np.float32),
                [[1, 2, 3]] * 8)
+    log.delete(np.arange(0, 200, 13))  # the fused pass must mask deletes too
     delta = log.buffer
     wl = make_workload(ds, m=12, dist="MIX", seed=50)
     # pin one query onto the inserted objects so the delta is visible
@@ -282,15 +285,23 @@ def test_fused_auto_falls_back_with_delta():
     import dataclasses as _dc
 
     wl = _dc.replace(wl, rects=R, kw_bitmap=B)
-    plain = retrieve_workload(snap, wl, max_leaves=clusters.k, delta=delta)
-    forced = retrieve_workload(snap, wl, max_leaves=clusters.k, delta=delta, fused=True)
-    for key in ("ids", "counts", "verified", "overflow"):
-        np.testing.assert_array_equal(np.asarray(plain[key]), np.asarray(forced[key]), err_msg=key)
+    unfused = retrieve_workload(
+        snap, wl, max_leaves=clusters.k, delta=delta, fused=False
+    )
+    for fused in (None, True):
+        out = retrieve_workload(
+            snap, wl, max_leaves=clusters.k, delta=delta, fused=fused
+        )
+        for key in ("ids", "counts", "verified", "overflow"):
+            np.testing.assert_array_equal(
+                np.asarray(out[key]), np.asarray(unfused[key]),
+                err_msg=f"{key} (fused={fused})",
+            )
     # and the delta actually changed results vs the delta-free descent
     base = retrieve_workload(snap, wl, max_leaves=clusters.k)
     assert any(
         not np.array_equal(np.sort(p[p >= 0]), np.sort(q[q >= 0]))
-        for p, q in zip(np.asarray(plain["ids"]), np.asarray(base["ids"]))
+        for p, q in zip(np.asarray(unfused["ids"]), np.asarray(base["ids"]))
     )
 
 

@@ -44,10 +44,13 @@ MODULE_FILES = (
 # (qps, scale, speedup, build_s, phase times) are NOT listed: they are noise.
 # "bytes"/"cutoff"/"wp" are the roofline descent model's exact byte counters
 # (analytic ints, not measurements) -- any drift is a model/layout change.
+# "wl*"/"overflow_leaves" are the leaf-local vocabulary distribution
+# (bench_roofline leaf-vocab row): exact given the dataset seed.
 DETERMINISTIC_KEYS = (
     "scanned", "checked", "verified", "overflow", "cost", "mismatches",
     "nodes", "sequential", "batched", "devices", "bytes", "cutoff", "wp",
     "per_device_bytes", "replica_bytes", "shards",
+    "wl", "wl_max", "wl_p50", "wl_p95", "overflow_leaves",
 )
 
 
