@@ -25,6 +25,7 @@ from .fused_verify import (
 from .knn_filter import knn_filter, knn_filter_narrow
 from .skr_filter import skr_filter
 from .skr_verify import skr_verify, skr_verify_compact
+from .sub_match import sub_match
 from . import ref
 
 
@@ -179,6 +180,51 @@ def filter_pairs(
     nb = _pad_dim(jnp.asarray(n_bm, jnp.uint32), 0, bk_)
     out = skr_filter(qr, qb, nm, nb, bm=bm_, bk=bk_, interpret=interpret)
     return out[:M, :K]
+
+
+def match_subscriptions(
+    obj_pts, obj_bm, sub_rects, sub_bm, sub_sig=None,
+    bn: int = 8, bs: int = 128, interpret: Optional[bool] = None,
+) -> jax.Array:
+    """(N, S) int8 continuous-filter match matrix via the Pallas sub_match
+    kernel (padded + sliced; DESIGN.md §8).
+
+    ``obj_pts``/``obj_bm`` are the arriving objects (points + full-width
+    bitmaps -- packed to their nonzero words here, the same host-side
+    ``pack_query_words`` the descent uses); ``sub_rects``/``sub_bm`` are the
+    compiled subscription block. ``sub_sig`` is the per-subscription OR-fold
+    signature, recomputed when not supplied. Object padding carries a zero
+    bitmap and subscription padding a zero bitmap + NEVER_RECT, so padded
+    slots can never match.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    obj_pts = np.asarray(obj_pts, np.float32).reshape(-1, 2)
+    obj_bm = np.asarray(obj_bm, np.uint32)
+    N, S = obj_pts.shape[0], np.asarray(sub_rects).shape[0]
+    if N == 0 or S == 0:
+        return jnp.zeros((N, S), jnp.int8)
+    wids, bits = pack_query_words(obj_bm)
+    o_sig = np.bitwise_or.reduce(obj_bm, axis=1).reshape(-1, 1)
+    if sub_sig is None:
+        sub_sig = np.bitwise_or.reduce(np.asarray(sub_bm, np.uint32), axis=1)
+    s_sig = np.asarray(sub_sig, np.uint32).reshape(-1, 1)
+    bn_ = min(bn, max(N, 1))
+    bs_ = min(bs, max(S, 1))
+    op = _pad_dim(jnp.asarray(obj_pts), 0, bn_)
+    ow = _pad_dim(wids, 0, bn_)
+    ob = _pad_dim(bits, 0, bn_)
+    osg = _pad_dim(jnp.asarray(o_sig, jnp.uint32), 0, bn_)
+    sr = jnp.asarray(sub_rects, jnp.float32)
+    pad_s = -(-S // bs_) * bs_ - S
+    if pad_s:
+        sr = jnp.concatenate(
+            [sr, jnp.tile(jnp.array([NEVER_RECT], jnp.float32), (pad_s, 1))], 0
+        )
+    sb = _pad_dim(jnp.asarray(sub_bm, jnp.uint32), 0, bs_)
+    ssg = _pad_dim(jnp.asarray(s_sig, jnp.uint32), 0, bs_)
+    out = sub_match(op, ow, ob, osg, sr, sb, ssg, bn=bn_, bs=bs_, interpret=interpret)
+    return out[:N, :S]
 
 
 def filter_frontier(
@@ -441,6 +487,7 @@ __all__ = [
     "knn_frontier_dist",
     "knn_frontier_dist_narrow",
     "leaf_bank_bytes",
+    "match_subscriptions",
     "pack_query_words",
     "remap_query_words",
     "verify_candidates",

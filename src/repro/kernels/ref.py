@@ -110,6 +110,31 @@ def knn_filter_narrow_ref(
     return knn_filter_ref(q_pts, q_bits, f_mbrs, f_bm, f_valid)
 
 
+def sub_match_ref(
+    o_pts: jax.Array,  # (N, 2) f32 arriving object points
+    o_bm: jax.Array,  # (N, W) uint32 full-width object bitmaps
+    s_rects: jax.Array,  # (S, 4) f32 subscription rects
+    s_bm: jax.Array,  # (S, W) uint32 subscription bitmaps
+) -> jax.Array:
+    """(N, S) int8: object point inside sub rect AND bitmaps share a bit.
+
+    Full-width reference for the packed-word + signature ``sub_match``
+    kernel (DESIGN.md §8). Padding is inert by construction: a zero bitmap
+    on either side fails the keyword test, a NEVER_RECT sub contains no
+    point.
+    """
+    x = o_pts[:, 0:1]
+    y = o_pts[:, 1:2]
+    inr = (
+        (x >= s_rects[:, 0][None, :])
+        & (x <= s_rects[:, 2][None, :])
+        & (y >= s_rects[:, 1][None, :])
+        & (y <= s_rects[:, 3][None, :])
+    )
+    kw = jnp.any((o_bm[:, None, :] & s_bm[None, :, :]) != 0, axis=-1)
+    return (inr & kw).astype(jnp.int8)
+
+
 def skr_verify_ref(
     q_rects: jax.Array,  # (M, 4) f32
     q_bm: jax.Array,  # (M, W) uint32

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: continuous-filter subscription matching (DESIGN.md §8).
+
+The pub-sub subsystem (serve/subscribe.py) inverts the SKR problem: the
+*subscriptions* are the indexed set -- a padded power-of-two block of
+standing (rect, keyword bitmap) filters -- and every arriving object is a
+point query matched against all of them in one cross-product sweep, the
+FAST-style continuous-query scenario of ROADMAP item 2.
+
+Predicate per (object, subscription) pair, Boolean semantics identical to
+the SKR path: the object's point lies inside the subscription rectangle
+(closed; a zero-area rect matches objects exactly at that point) AND the
+keyword bitmaps share at least one bit (an empty keyword set matches
+nothing, the same contract as an empty SKR query).
+
+The kernel reuses the two bandwidth tricks of the descent kernels:
+
+* **packed object word planes** (PR 7 / ops.pack_query_words): each
+  arriving object carries only its nonzero bitmap words -- ``(BN, Wp)``
+  ids + values with Wp a static power-of-two bucket -- and the
+  subscription-side words are gathered *inside* the kernel from the
+  word-major ``(W, BS)`` VMEM tile, so the big operand is ``(BN, Wp, BS)``
+  instead of ``(BN, W, BS)``;
+* **one-word OR-fold signatures** (PR 9): a per-side 32-bit OR of all
+  words; ``(o_sig & s_sig) != 0`` is a necessary condition for any shared
+  bit, ANDed in as a register-cheap prefilter (empty slots on either side
+  carry signature 0 and are therefore inert -- padding needs no separate
+  validity plane).
+
+Grid: ``(cdiv(N, bn), cdiv(S, bs))`` object x subscription tiles; output is
+the (N, S) int8 match matrix. The ref twin is ``ref.sub_match_ref``; the
+brute-force ground truth (set semantics, no bitmaps at all) is
+``core.query.match_subscriptions_bruteforce``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sub_match_kernel(
+    o_pts_ref, o_wids_ref, o_bits_ref, o_sig_ref, s_rects_ref, s_bm_ref, s_sig_ref, out_ref
+):
+    op = o_pts_ref[...]  # (BN, 2) f32 object points
+    sr = s_rects_ref[...]  # (BS, 4) f32 subscription rects (NEVER_RECT pads)
+    x = op[:, 0:1]  # (BN, 1)
+    y = op[:, 1:2]
+    inr = (
+        (x >= sr[:, 0][None, :])
+        & (x <= sr[:, 2][None, :])
+        & (y >= sr[:, 1][None, :])
+        & (y <= sr[:, 3][None, :])
+    )  # (BN, BS) point-in-rect
+    osig = o_sig_ref[...]  # (BN, 1) u32 OR-fold object signatures
+    ssig = s_sig_ref[...]  # (BS, 1) u32 OR-fold subscription signatures
+    sig = (osig & ssig[:, 0][None, :]) != 0  # (BN, BS) shared-bit prefilter
+    wid = o_wids_ref[...].astype(jnp.int32)  # (BN, Wp) packed object word ids
+    sw = s_bm_ref[...].swapaxes(0, 1)  # (W, BS) word-major subscription tile
+    g = sw[wid]  # (BN, Wp, BS) VMEM gather of the objects' words
+    kw = jnp.any((g & o_bits_ref[...][:, :, None]) != 0, axis=1)  # (BN, BS)
+    out_ref[...] = (inr & sig & kw).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bs", "interpret"))
+def sub_match(
+    o_pts: jax.Array,  # (N, 2) f32 arriving object points
+    o_wids: jax.Array,  # (N, Wp) int32 packed word ids (ops.pack_query_words)
+    o_bits: jax.Array,  # (N, Wp) uint32 packed word values
+    o_sig: jax.Array,  # (N, 1) uint32 OR-fold object signatures
+    s_rects: jax.Array,  # (S, 4) f32 subscription rects
+    s_bm: jax.Array,  # (S, W) uint32 subscription bitmaps
+    s_sig: jax.Array,  # (S, 1) uint32 OR-fold subscription signatures
+    bn: int = 8,
+    bs: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """(N, S) int8 match matrix. Inputs padded to tile multiples by ops.py."""
+    N = o_pts.shape[0]
+    S = s_rects.shape[0]
+    Wp = o_wids.shape[1]
+    W = s_bm.shape[1]
+    bn = min(bn, N)
+    bs = min(bs, S)
+    grid = (pl.cdiv(N, bn), pl.cdiv(S, bs))
+    return pl.pallas_call(
+        _sub_match_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, 2), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, Wp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, Wp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bs, 4), lambda i, j: (j, 0)),
+            pl.BlockSpec((bs, W), lambda i, j: (j, 0)),
+            pl.BlockSpec((bs, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bs), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((N, S), jnp.int8),
+        interpret=interpret,
+    )(o_pts, o_wids, o_bits, o_sig, s_rects, s_bm, s_sig)

@@ -41,8 +41,13 @@ On top of these regimes sits the incremental-maintenance front door
 the index-parallel regime via ``delta.partition_delta``), watches workload
 drift through the observed Eq.1 counters, and atomically swaps in
 warm-start rebuilds as new ``ServingGeneration``s while in-flight batches
-finish on the old one. Every front door here is host-side orchestration
-around the jit-traced engine paths of serve/engine.py.
+finish on the old one. ``LiveIndex`` also fronts the continuous-filter
+pub-sub subsystem (DESIGN.md §8, serve/subscribe.py): standing
+spatio-textual subscriptions compiled into a device-resident block, every
+insert batch matched against it in the same step, notifications drained
+exactly once -- subscription state survives generation swaps. Every front
+door here is host-side orchestration around the jit-traced engine paths of
+serve/engine.py.
 """
 from __future__ import annotations
 
@@ -83,6 +88,7 @@ from ..serve.plan import (
     pad_queries_to_bucket,  # noqa: F401  (re-export: historical home)
 )
 from ..serve.snapshot import PartitionedSnapshot
+from ..serve.subscribe import SubscriptionIndex
 from ..sharding.rules import default_rules, dp_axes, spec_for
 from .mesh import make_host_mesh, make_serving_mesh
 
@@ -1067,6 +1073,12 @@ class LiveIndex:
         if artifacts is None:
             artifacts = build_wisk(dataset, workload, self.build_config)
         self._gen = self._make_generation(artifacts, dataset, seq=0)
+        # continuous-filter pub-sub (DESIGN.md §8): the standing-subscription
+        # index + notification log live on the front door, NOT on a
+        # generation -- subscriptions, queued notifications, and the
+        # exactly-once high-water mark (global object ids are monotonic
+        # across rebuilds) all survive maybe_rebuild() swaps untouched
+        self.subscriptions = SubscriptionIndex(dataset.vocab_size)
         # baseline learned from the warmup window of observed traffic (see
         # core/drift.py: a trained-workload prediction undershoots steady
         # state by the generalization gap)
@@ -1176,16 +1188,46 @@ class LiveIndex:
     # ------------------------------------------------------------- updates
     def insert(self, locs, kw_ids) -> np.ndarray:
         """Buffer new objects into the current generation's delta log;
-        visible to the very next query. Returns the assigned global ids."""
+        visible to the very next query. Returns the assigned global ids.
+
+        In the same step, the arrivals are matched on device against the
+        compiled subscription block (DESIGN.md §8): any standing filter they
+        satisfy queues an (object_id, subscription_id) notification for
+        ``drain_notifications()``."""
         if self.result_cache is not None:
             self.result_cache.invalidate()
-        return self._gen.delta_log.insert(locs, kw_ids)
+        ids = self._gen.delta_log.insert(locs, kw_ids)
+        self.subscriptions.match_arrivals(ids, locs, kw_ids=kw_ids)
+        return ids
 
     def delete(self, ids) -> int:
-        """Mask objects out of serving immediately; returns #newly deleted."""
+        """Mask objects out of serving immediately; returns #newly deleted.
+
+        Deletion never retracts a queued notification -- the object *did*
+        arrive while the matching subscriptions were live (§8 contract)."""
         if self.result_cache is not None:
             self.result_cache.invalidate()
         return self._gen.delta_log.delete(ids)
+
+    # -------------------------------------------- continuous filters (§8)
+    def subscribe(self, rect, kw_ids) -> int:
+        """Register a standing spatio-textual filter (geofence); returns its
+        subscription id. Matches objects inserted from now on: each
+        ``insert`` batch is matched on device against the compiled
+        subscription block in the same step it enters the delta log."""
+        return self.subscriptions.subscribe(rect, kw_ids)
+
+    def unsubscribe(self, sub_id: int) -> bool:
+        """Retire a standing filter; already-queued notifications survive."""
+        return self.subscriptions.unsubscribe(sub_id)
+
+    def drain_notifications(self) -> np.ndarray:
+        """All queued (object_id, subscription_id) notifications, exactly
+        once -- across buffer growth, freed-slot reuse, deletes, and
+        rebuild swaps (the subscription state lives on the front door, and
+        the exactly-once mark rides the monotonic global id space, which a
+        swap continues rather than restarts)."""
+        return self.subscriptions.drain()
 
     # ------------------------------------------------------------- rebuild
     def observed_workload(self):

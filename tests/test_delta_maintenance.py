@@ -192,6 +192,113 @@ def test_insert_buffer_growth_keeps_parity():
         assert np.array_equal(_sorted_ids(out["ids"][qi]), truth)
 
 
+def test_multi_growth_churn_keeps_parity():
+    """Sustained insert traffic that overflows one leaf's slot budget more
+    than once: the buffer doubles repeatedly under interleaved deletes with
+    freed-slot reuse, and serving stays id-exact with the merged ground
+    truth after EVERY round (each growth is a new compiled shape; a bug
+    that drops or duplicates a slot across a retrace shows up here)."""
+    ds = make_dataset("fs", n=1000, seed=6)
+    index, clusters = _build_index(ds, g=5, levels=2)
+    snap = IndexSnapshot.build(index, ds)
+    log = DeltaLog(index, ds, snap, slots_per_leaf=4)
+    rng = np.random.default_rng(2)
+    spot = ds.locs[rng.integers(ds.n)]
+    grown = [log.buffer.slots_per_leaf]
+    alive = []
+    for rnd in range(4):
+        locs = np.clip(
+            spot[None, :] + rng.normal(0, 1e-3, (12, 2)).astype(np.float32), 0, 1
+        )
+        ids = log.insert(locs, ds.kw_ids[rng.choice(ds.n, 12)])
+        alive.extend(int(i) for i in ids)
+        if rnd:  # churn: freed slots get reused before the next doubling
+            dels = rng.choice(alive, 4, replace=False)
+            log.delete(dels)
+            alive = [i for i in alive if i not in set(int(d) for d in dels)]
+        if log.buffer.slots_per_leaf != grown[-1]:
+            grown.append(log.buffer.slots_per_leaf)
+        merged = log.merged_dataset()
+        wl = make_workload(merged, m=8, dist="MIX", seed=13 + rnd)
+        out = serve_batch(
+            snap, wl.rects, wl.kw_bitmap, max_leaves=clusters.k, delta=log.buffer
+        )
+        for qi in range(wl.m):
+            truth = np.sort(
+                exact_query_result_ids(merged, wl.rects[qi], wl.kw_bitmap[qi])
+            )
+            assert np.array_equal(_sorted_ids(out["ids"][qi]), truth), (
+                f"round {rnd} (slots={log.buffer.slots_per_leaf}): q{qi} diverged"
+            )
+    assert len(grown) >= 3, f"slot budget grew only {grown}; wanted >=2 doublings"
+
+
+def test_partition_delta_memo_correct_after_growth():
+    """Index-sharded serving memoizes the shard-routed delta per *buffer
+    object* (launch.wisk_serve._PARTITIONED_DELTA): growth replaces the
+    buffer, so the grown buffer must be partitioned afresh -- serving the
+    stale memo would silently drop the newest inserts on every shard.
+    Needs >=2 devices; re-execs itself with a forced 2-device host platform
+    otherwise (same discipline as test_sharded_delta_parity)."""
+    import jax
+
+    if len(jax.devices()) < 2:
+        assert "_DELTA_MEMO_REEXEC" not in os.environ, (
+            "re-exec with a forced 2-device host platform still saw <2 devices"
+        )
+        env = dict(os.environ)
+        flag = "--xla_force_host_platform_device_count=2"
+        env["XLA_FLAGS"] = f"{env.get('XLA_FLAGS', '')} {flag}".strip()
+        env["_DELTA_MEMO_REEXEC"] = "1"
+        proc = subprocess.run(
+            [sys.executable, "-m", "pytest", "-x", "-q",
+             f"{os.path.abspath(__file__)}::test_partition_delta_memo_correct_after_growth"],
+            env=env, capture_output=True, text=True, timeout=900,
+        )
+        assert proc.returncode == 0, (
+            f"forced 2-device re-exec failed:\n{proc.stdout}\n{proc.stderr}"
+        )
+        return
+    from repro.launch.wisk_serve import _PARTITIONED_DELTA, serve_index_sharded
+    from repro.serve.snapshot import PartitionedSnapshot
+
+    ds = make_dataset("fs", n=1000, seed=3)
+    index, clusters = _build_index(ds, g=5, levels=2)
+    snap = IndexSnapshot.build(index, ds)
+    psnap = PartitionedSnapshot.build(snap, 2)
+    log = DeltaLog(index, ds, snap, slots_per_leaf=4)
+    rng = np.random.default_rng(4)
+    spot = ds.locs[rng.integers(ds.n)]
+    wl = make_workload(ds, m=12, dist="MIX", seed=17)
+
+    def _assert_exact():
+        merged = log.merged_dataset()
+        out = serve_index_sharded(
+            psnap, wl.rects, wl.kw_bitmap, max_leaves=clusters.k, delta=log.buffer
+        )
+        for qi in range(wl.m):
+            truth = np.sort(
+                exact_query_result_ids(merged, wl.rects[qi], wl.kw_bitmap[qi])
+            )
+            assert np.array_equal(_sorted_ids(out["ids"][qi]), truth)
+
+    def _grow(n):
+        locs = np.clip(
+            spot[None, :] + rng.normal(0, 1e-3, (n, 2)).astype(np.float32), 0, 1
+        )
+        log.insert(locs, ds.kw_ids[rng.choice(ds.n, n)])
+
+    _grow(6)  # 4 -> 8: first growth
+    b1 = log.buffer
+    _assert_exact()
+    assert b1 in _PARTITIONED_DELTA, "first buffer's routing was not memoized"
+    _grow(20)  # second growth: a NEW buffer object
+    b2 = log.buffer
+    assert b2 is not b1 and b2.slots_per_leaf > b1.slots_per_leaf
+    _assert_exact()  # must re-partition b2, not serve b1's stale memo
+    assert b2 in _PARTITIONED_DELTA
+
+
 def test_delete_everything_in_a_leaf():
     """A fully-deleted leaf serves zero results but stays traversable."""
     ds = make_dataset("fs", n=800, seed=4)

@@ -6,6 +6,8 @@ This is the one intentional tier-1 skip on bare-runtime boxes: CI's tier-1
 lane installs requirements-test.txt, so every property test runs (and
 gates) there -- the local skip trades nothing away.
 """
+import functools
+
 import numpy as np
 import pytest
 
@@ -295,3 +297,94 @@ def test_error_feedback_recovers_dropped_mass():
         total_sent += np.asarray(sent["w"])
     # with constant gradient, EF ensures average transmitted -> gradient
     np.testing.assert_allclose(total_sent / 50, np.asarray(g["w"]), atol=0.25)
+
+
+# ------------------------------------------------------------------------
+# Continuous-filter pub-sub (DESIGN.md §8): device notification stream ==
+# brute-force oracle replay, exactly, for arbitrary schedules.
+@functools.lru_cache(maxsize=1)
+def _streaming_serving():
+    """One tiny grid-served dataset shared across examples (fresh DeltaLog /
+    SubscriptionIndex per example keeps examples independent)."""
+    from repro.data.synth import make_dataset
+    from repro.serve.engine import IndexSnapshot
+    from test_query_parity import _build_index
+
+    ds = make_dataset("fs", n=500, seed=0)
+    index, _ = _build_index(ds, g=4, levels=2)
+    return ds, index, IndexSnapshot.build(index, ds)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 100_000),
+    n_subs=st.integers(0, 10),
+    n_events=st.integers(1, 8),
+)
+def test_streaming_notifications_equal_oracle_multiset(seed, n_subs, n_events):
+    """For arbitrary subscription sets and object streams -- subscription
+    churn, object deletes with slot reuse, buffer growth, interleaved
+    full-buffer pumps and mid-stream drains -- the emitted notification
+    multiset equals the oracle's exactly (stronger: the canonical-order
+    sequences are identical): no misses, no duplicates. Object keywords are
+    drawn from the whole vocabulary, so arrivals routinely fall outside
+    their leaf's compact dictionary and flip the PR 9 sticky fallback
+    mid-schedule; the stream must not care."""
+    from repro.core.query import SubscriptionOracle
+    from repro.serve.delta import DeltaLog
+    from repro.serve.subscribe import SubscriptionIndex
+
+    ds, index, snap = _streaming_serving()
+    log = DeltaLog(index, ds, snap, slots_per_leaf=4)
+    idx, orc = SubscriptionIndex(ds.vocab_size), SubscriptionOracle()
+    rng = np.random.default_rng(seed)
+    live_subs, live_objs = [], []
+
+    def rand_kw(lo=0):
+        # mostly a hot 8-term head (so subscriptions and arrivals actually
+        # intersect and the test is not vacuous), sometimes the full
+        # vocabulary (so arrivals carry terms outside their leaf's compact
+        # dictionary and flip the PR 9 sticky fallback)
+        k = int(rng.integers(lo, 4))
+        kw = np.full(4, -1, np.int64)
+        pool = 8 if rng.random() < 0.7 else ds.vocab_size
+        if k:
+            kw[:k] = rng.choice(pool, size=min(k, pool), replace=False)
+        return kw
+
+    for _ in range(n_subs):
+        c, h = rng.random(2), rng.random(2) * 0.5
+        rect = np.concatenate([np.maximum(c - h, 0), np.minimum(c + h, 1)])
+        if rng.random() < 0.2:
+            rect[2:] = rect[:2]  # zero-area geofence
+        kw = rand_kw()
+        a, b = idx.subscribe(rect, kw), orc.subscribe(rect, kw)
+        assert a == b
+        live_subs.append(a)
+    for _ in range(n_events):
+        op = rng.random()
+        if op < 0.55 or not live_objs:  # arrivals (biased: streams are long)
+            n = int(rng.integers(1, 12))
+            locs = rng.random((n, 2)).astype(np.float32)
+            okw = np.stack([rand_kw() for _ in range(n)])
+            ids = log.insert(locs, okw)
+            idx.match_arrivals(ids, locs, kw_ids=okw)
+            orc.arrive(ids, locs, okw)
+            live_objs.extend(int(i) for i in ids)
+        elif op < 0.7 and live_subs:  # subscription churn
+            s = live_subs.pop(int(rng.integers(len(live_subs))))
+            assert idx.unsubscribe(s) == orc.unsubscribe(s)
+        elif op < 0.85:  # object deletes free slots for reuse
+            k = int(rng.integers(1, min(4, len(live_objs)) + 1))
+            dels = rng.choice(live_objs, size=k, replace=False)
+            log.delete(dels)
+            live_objs = [o for o in live_objs if o not in set(int(d) for d in dels)]
+        else:  # a redundant full-buffer sweep must emit nothing new
+            assert idx.pump(log) == 0
+        if rng.random() < 0.25:  # mid-stream drain: exactly-once, in order
+            np.testing.assert_array_equal(idx.drain(), orc.drain())
+    np.testing.assert_array_equal(idx.drain(), orc.drain())
+    assert idx.pump(log) == 0
+    assert idx.drain().shape == (0, 2) and orc.drain().shape == (0, 2)
+    assert idx.matched_total == orc.matched_total
+    assert idx.emitted_total == orc.emitted_total

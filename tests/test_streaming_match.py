@@ -1,0 +1,341 @@
+"""Differential harness for the continuous-filter pub-sub subsystem
+(DESIGN.md §8): the device match path vs the brute-force host oracle.
+
+Ground truth throughout is ``core.query.match_subscriptions_bruteforce`` /
+``SubscriptionOracle`` -- pure set semantics, none of the bitmap / packed
+word-plane / signature machinery the device path uses, so a representation
+bug cannot hide on both sides. The contract under test:
+
+* **Kernel parity.** The Pallas ``sub_match`` kernel (and its ``ops``
+  wrapper padding) equals the oracle's (N, S) match matrix bit-exactly on
+  padded AND ragged block shapes, including empty-keyword and zero-area
+  subscriptions, empty-keyword objects, and boundary-exact points.
+* **Exactly-once notifications.** Across subscription churn (freed-slot
+  reuse), object insert/delete/re-insert churn, delta-buffer growth, a
+  ``maybe_rebuild`` generation swap, and repeated drains, the emitted
+  (object_id, subscription_id) stream equals the oracle replay exactly --
+  no misses, no duplicates -- whether arrivals are matched incrementally
+  (``match_arrivals``) or by full-buffer sweeps (``pump``).
+* **Compact-vocab independence.** An arriving object whose keywords fall
+  outside its leaf's compact vocabulary flips the DeltaLog's sticky
+  fallback (PR 9); the notification stream must not care.
+
+Fast deterministic grid indexes cover the delta interactions; the
+rebuild-swap atomicity test builds one tiny real WISK index per module
+(same budget as test_delta_maintenance.py).
+"""
+import numpy as np
+import pytest
+
+from repro.core.build import BuildConfig
+from repro.core.packing import PackingConfig
+from repro.core.partition import PartitionConfig
+from repro.core.query import SubscriptionOracle, match_subscriptions_bruteforce
+from repro.core.types import ids_to_bitmap
+from repro.data.synth import make_dataset
+from repro.data.workloads import make_workload
+from repro.kernels.ops import match_subscriptions
+from repro.kernels.ref import sub_match_ref
+from repro.launch.wisk_serve import LiveIndex
+from repro.serve.delta import DeltaLog
+from repro.serve.engine import IndexSnapshot
+from repro.serve.subscribe import SubscriptionIndex
+
+from test_query_parity import _build_index
+
+
+# ------------------------------------------------------------ shared helpers
+def _rand_rect(rng):
+    c = rng.random(2)
+    h = rng.random(2) * 0.35
+    return np.concatenate([np.maximum(c - h, 0), np.minimum(c + h, 1)]).astype(
+        np.float32
+    )
+
+
+def _rand_kw(rng, v, lo=0, hi=4):
+    k = rng.integers(lo, hi)
+    kw = np.full(max(hi, 1), -1, np.int64)
+    if k:
+        kw[:k] = rng.choice(v, size=k, replace=False)
+    return kw
+
+
+def _rand_subs(rng, s, v):
+    """Ragged subscription set with adversarial members: empty keyword
+    sets, zero-area rects, full-universe rects."""
+    rects = np.stack([_rand_rect(rng) for _ in range(s)])
+    kws = [_rand_kw(rng, v, lo=1) for _ in range(s)]
+    if s >= 3:
+        kws[0][:] = -1  # empty keyword set: matches nothing
+        pt = rng.random(2).astype(np.float32)
+        rects[1] = np.concatenate([pt, pt])  # zero-area rect
+        rects[2] = (0.0, 0.0, 1.0, 1.0)  # whole universe
+    return rects, kws
+
+
+def _rand_objs(rng, n, v):
+    locs = rng.random((n, 2)).astype(np.float32)
+    kw = np.stack([_rand_kw(rng, v) for _ in range(n)])
+    return locs, kw
+
+
+# --------------------------------------------------- kernel vs oracle parity
+@pytest.mark.parametrize(
+    "seed,n,s,v",
+    [
+        (0, 1, 1, 7),        # single pair (max padding on both axes)
+        (1, 7, 5, 33),       # ragged everywhere
+        (2, 40, 13, 64),     # ragged vs the bs=128 sub tile
+        (3, 130, 129, 200),  # past one full tile on both axes
+    ],
+)
+def test_match_matrix_equals_bruteforce(seed, n, s, v):
+    rng = np.random.default_rng(seed)
+    rects, kws = _rand_subs(rng, s, v)
+    locs, okw = _rand_objs(rng, n, v)
+    # a boundary-exact arrival: corner of sub 0's rect, sharing a keyword
+    locs[0] = rects[0][:2]
+    if s >= 2:
+        locs[min(1, n - 1)] = rects[1][:2]  # on the zero-area sub
+    obm = ids_to_bitmap(okw.astype(np.int32), v)
+    sbm = ids_to_bitmap(np.stack(kws).astype(np.int32), v)
+    got = np.asarray(match_subscriptions(locs, obm, rects, sbm)).astype(bool)
+    want = match_subscriptions_bruteforce(locs, okw, rects, kws)
+    np.testing.assert_array_equal(got, want)
+    # and the full-width ref twin agrees with both
+    ref = np.asarray(sub_match_ref(locs, obm, rects, sbm)).astype(bool)
+    np.testing.assert_array_equal(ref, want)
+
+
+def test_block_padding_is_inert():
+    """Compiled-block padding (NEVER_RECT + zero bitmap past the live
+    fill) can never match, even for a universe-rect object sweep."""
+    rng = np.random.default_rng(7)
+    v = 40
+    idx = SubscriptionIndex(v)
+    sid = idx.subscribe((0.0, 0.0, 1.0, 1.0), [0, 1, 2])
+    blk = idx.block()
+    assert blk.n_slots == 8 and idx.n_live == 1  # 7 padded slots
+    locs, okw = _rand_objs(rng, 50, v)
+    okw[:, 0] = 0  # every object shares keyword 0
+    mat = np.asarray(
+        match_subscriptions(locs, ids_to_bitmap(okw.astype(np.int32), v),
+                            blk.rects, blk.bm, blk.sig[:, 0])
+    )
+    assert mat[:, 1:].sum() == 0  # only the live slot can match
+    assert mat[:, 0].all()
+    assert idx.unsubscribe(sid)
+    blk = idx.block()
+    mat = np.asarray(
+        match_subscriptions(locs, ids_to_bitmap(okw.astype(np.int32), v),
+                            blk.rects, blk.bm, blk.sig[:, 0])
+    )
+    assert mat.sum() == 0  # a freed slot is immediately inert
+
+
+# -------------------------------------------- streaming churn vs the oracle
+def test_subscription_churn_with_slot_reuse():
+    """Interleaved subscribe/unsubscribe/arrive: freed subscription slots
+    are reused by later subscribers without leaking old filters, and the
+    notification stream equals the oracle replay verbatim."""
+    rng = np.random.default_rng(3)
+    v = 48
+    idx, orc = SubscriptionIndex(v), SubscriptionOracle()
+    live = []
+    next_id = 0
+    for step in range(12):
+        # churn: drop a random third of live subs, add a fresh batch
+        drop = [s for s in live if rng.random() < 0.33]
+        for s in drop:
+            assert idx.unsubscribe(s) == orc.unsubscribe(s)
+            live.remove(s)
+        for _ in range(rng.integers(1, 4)):
+            r, kw = _rand_rect(rng), _rand_kw(rng, v, lo=0)
+            a, b = idx.subscribe(r, kw), orc.subscribe(r, kw)
+            assert a == b
+            live.append(a)
+        n = int(rng.integers(1, 20))
+        ids = np.arange(next_id, next_id + n)
+        next_id += n
+        locs, okw = _rand_objs(rng, n, v)
+        idx.match_arrivals(ids, locs, kw_ids=okw)
+        orc.arrive(ids, locs, okw)
+        if step % 3 == 2:  # drain mid-stream: exactly-once, in order
+            np.testing.assert_array_equal(idx.drain(), orc.drain())
+    np.testing.assert_array_equal(idx.drain(), orc.drain())
+    assert idx.drain().shape == (0, 2)  # duplicate suppression
+    assert idx.matched_total == orc.matched_total
+    assert idx.n_slots <= 32  # slot reuse bounded the block growth
+
+
+def _grid_serving(n=1000, seed=0, slots_per_leaf=4):
+    ds = make_dataset("fs", n=n, seed=seed)
+    index, _ = _build_index(ds, g=5, levels=2)
+    snap = IndexSnapshot.build(index, ds)
+    return ds, DeltaLog(index, ds, snap, slots_per_leaf=slots_per_leaf)
+
+
+def test_delta_churn_freed_slots_and_growth_exactly_once():
+    """Insert/delete/re-insert churn through a real DeltaLog: freed insert
+    slots are reused by fresh (higher-id) objects and re-matched; deleted
+    objects keep their already-queued notifications; buffer growth never
+    re-emits. Incremental matching and full-buffer pumps interleave."""
+    rng = np.random.default_rng(5)
+    ds, log = _grid_serving(seed=1)
+    idx, orc = SubscriptionIndex(ds.vocab_size), SubscriptionOracle()
+    for _ in range(10):
+        r, kw = _rand_rect(rng), _rand_kw(rng, ds.vocab_size, lo=1)
+        assert idx.subscribe(r, kw) == orc.subscribe(r, kw)
+    spot = ds.locs[rng.integers(ds.n)]
+    inserted = []
+    for rnd in range(6):
+        n = int(rng.integers(2, 8))
+        # concentrate on one spot so one leaf's 4-slot budget overflows
+        locs = np.clip(
+            spot[None, :] + rng.normal(0, 1e-3, (n, 2)).astype(np.float32), 0, 1
+        )
+        okw = np.stack([_rand_kw(rng, ds.vocab_size) for _ in range(n)])
+        ids = log.insert(locs, okw)
+        idx.match_arrivals(ids, locs, kw_ids=okw)
+        orc.arrive(ids, locs, okw)
+        inserted.extend(int(i) for i in ids)
+        assert idx.pump(log) == 0  # sweep after incremental: nothing new
+        if rnd >= 2:  # delete some buffered objects -> slots freed, reused
+            dels = rng.choice(inserted, size=min(3, len(inserted)), replace=False)
+            log.delete(dels)
+            inserted = [i for i in inserted if i not in set(int(d) for d in dels)]
+    assert log.buffer.slots_per_leaf > 4  # growth actually happened
+    np.testing.assert_array_equal(idx.drain(), orc.drain())
+    assert idx.pump(log) == 0 and idx.drain().shape == (0, 2)
+
+
+def test_pump_only_stream_equals_incremental_stream():
+    """Driving the same schedule exclusively through full-buffer ``pump``
+    sweeps yields the identical notification sequence as per-batch
+    ``match_arrivals`` -- growth, freed-slot reuse and all."""
+    rng = np.random.default_rng(9)
+    ds, log_a = _grid_serving(seed=2)
+    _, log_b = _grid_serving(seed=2)
+    inc, swp = SubscriptionIndex(ds.vocab_size), SubscriptionIndex(ds.vocab_size)
+    for _ in range(8):
+        r, kw = _rand_rect(rng), _rand_kw(rng, ds.vocab_size, lo=1)
+        inc.subscribe(r, kw)
+        swp.subscribe(r, kw)
+    for rnd in range(5):
+        n = int(rng.integers(1, 10))
+        locs, okw = _rand_objs(rng, n, ds.vocab_size)
+        ids_a = log_a.insert(locs, okw)
+        ids_b = log_b.insert(locs, okw)
+        np.testing.assert_array_equal(ids_a, ids_b)
+        inc.match_arrivals(ids_a, locs, kw_ids=okw)
+        swp.pump(log_b)
+        if rnd == 2:
+            dels = ids_a[: n // 2]
+            log_a.delete(dels)
+            log_b.delete(dels)
+    np.testing.assert_array_equal(inc.drain(), swp.drain())
+    assert inc.matched_total == swp.matched_total
+
+
+def test_out_of_vocabulary_arrival_keeps_notifications_exact():
+    """An arrival whose keywords miss its leaf's compact dictionary flips
+    the DeltaLog sticky fallback (PR 9); the notification stream is
+    identical either way."""
+    rng = np.random.default_rng(11)
+    ds, log = _grid_serving(n=600, seed=3, slots_per_leaf=8)
+    if not log.snapshot.has_compact_bank:
+        pytest.skip("snapshot built without a compact bank")
+    idx, orc = SubscriptionIndex(ds.vocab_size), SubscriptionOracle()
+    for _ in range(6):
+        r = _rand_rect(rng)
+        kw = _rand_kw(rng, ds.vocab_size, lo=1)
+        idx.subscribe(r, kw)
+        orc.subscribe(r, kw)
+    # universe-rect subscription on a rare term so the OOV arrival matches
+    rare = int(np.argmin(ds.kw_freq))
+    idx.subscribe((0.0, 0.0, 1.0, 1.0), [rare])
+    orc.subscribe((0.0, 0.0, 1.0, 1.0), [rare])
+    assert log.compact_ok
+    flipped = False
+    for _ in range(20):
+        locs, okw = _rand_objs(rng, 4, ds.vocab_size)
+        okw[0, 0] = rare  # rare term: almost surely outside some leaf dict
+        ids = log.insert(locs, okw)
+        idx.match_arrivals(ids, locs, kw_ids=okw)
+        orc.arrive(ids, locs, okw)
+        flipped = flipped or not log.compact_ok
+        if flipped:
+            break
+    assert flipped, "schedule never left the compact vocabulary; weak test"
+    np.testing.assert_array_equal(idx.drain(), orc.drain())
+
+
+# -------------------------------------- LiveIndex front door + rebuild swap
+def _tiny_build_config():
+    return BuildConfig(
+        partition=PartitionConfig(max_clusters=24, n_steps=25, n_restarts=2),
+        packing=PackingConfig(epochs=3, max_label_queries=16),
+        cdf_train_steps=40,
+        cdf_force_class="gauss",
+        use_itemsets=False,
+    )
+
+
+@pytest.fixture(scope="module")
+def live_index():
+    ds = make_dataset("fs", n=1500, seed=0)
+    train = make_workload(ds, m=32, dist="LAP", seed=1)
+    return LiveIndex(ds, train, _tiny_build_config()), ds
+
+
+def test_notifications_atomic_across_rebuild_swap(live_index):
+    """The §8 exactly-once contract across ``maybe_rebuild``: notifications
+    queued before the swap survive it, objects baked into the new snapshot
+    are never re-matched, the id sequence (and therefore the high-water
+    mark) continues, and post-swap arrivals match the same subscriptions.
+    The whole stream equals the oracle replay."""
+    rng = np.random.default_rng(21)
+    live, ds = live_index
+    orc = SubscriptionOracle()
+    for _ in range(8):
+        r, kw = _rand_rect(rng), _rand_kw(rng, ds.vocab_size, lo=1)
+        assert live.subscribe(r, kw) == orc.subscribe(r, kw)
+
+    def arrive(n):
+        src = rng.choice(ds.n, n)
+        locs = np.clip(
+            ds.locs[src] + rng.normal(0, 0.02, (n, 2)).astype(np.float32), 0, 1
+        )
+        okw = ds.kw_ids[src]
+        ids = live.insert(locs, okw)
+        orc.arrive(ids, locs, okw)
+        return ids
+
+    pre_ids = arrive(30)  # queued, deliberately NOT drained before the swap
+    live.delete(pre_ids[:5])  # deletes never retract queued notifications
+    orc_pre = orc.matched_total
+    assert live.subscriptions.matched_total == orc_pre
+
+    wl = make_workload(ds, m=24, dist="UNI", seed=41)
+    live.serve(wl.rects, wl.kw_bitmap, max_leaves=64)  # populate recent window
+    assert live.maybe_rebuild(force=True)
+    new_gen = live.generation
+    assert new_gen.delta_log.n_updates() == 0
+
+    # baked-in objects sit below the high-water mark: a full sweep of the
+    # fresh generation's (empty) buffer re-emits nothing
+    assert live.subscriptions.pump(new_gen.delta_log) == 0
+
+    post_ids = arrive(20)  # the id sequence continues across the swap
+    assert int(post_ids.min()) > int(pre_ids.max())
+    got, want = live.drain_notifications(), orc.drain()
+    np.testing.assert_array_equal(got, want)
+    assert (got[:, 0] <= int(pre_ids.max())).sum() > 0 or orc_pre == 0
+    # repeated drains: exactly-once
+    assert live.drain_notifications().shape == (0, 2)
+    # unsubscribe after the swap still works against the surviving state
+    assert live.unsubscribe(0) and orc.unsubscribe(0)
+    final = arrive(10)
+    assert final.size == 10
+    np.testing.assert_array_equal(live.drain_notifications(), orc.drain())

@@ -46,11 +46,17 @@ MODULE_FILES = (
 # (analytic ints, not measurements) -- any drift is a model/layout change.
 # "wl*"/"overflow_leaves" are the leaf-local vocabulary distribution
 # (bench_roofline leaf-vocab row): exact given the dataset seed.
+# "objects"/"subs"/"matched"/"emitted"/"slots"/"swaps"/"exact"/
+# "oracle_matched"/"second_drain" are the continuous-filter stream lane's
+# notification counters (bench_dynamic stream rows): the device match
+# stream is oracle-exact by contract, so any drift is a real §8 change.
 DETERMINISTIC_KEYS = (
     "scanned", "checked", "verified", "overflow", "cost", "mismatches",
     "nodes", "sequential", "batched", "devices", "bytes", "cutoff", "wp",
     "per_device_bytes", "replica_bytes", "shards",
     "wl", "wl_max", "wl_p50", "wl_p95", "overflow_leaves",
+    "objects", "subs", "matched", "emitted", "slots", "swaps",
+    "exact", "oracle_matched", "second_drain",
 )
 
 
